@@ -1,0 +1,319 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  fig7   job life cycle times (submit / full health / terminate) vs width,
+         cloud-native vs legacy, and GC-vs-bulk deletion     (paper Fig. 7)
+  fig8   PE-to-PE tuple throughput vs payload size           (paper Fig. 8)
+  fig9   parallel-region width change latency                (paper Fig. 9)
+  fig10  PE failure recovery time                            (paper Fig. 10)
+  fig11  consistent-region (training) failure recovery       (paper Fig. 11)
+  table1 lines-of-code accounting                            (paper Table 1)
+  roofline  per-cell roofline terms from the dry-run         (EXPERIMENTS §Roofline)
+
+Prints ``name,us_per_call,derived`` CSV rows.  Scales are reduced for the
+single-core CPU container; the *shape* of each comparison (scaling with
+width², cloud-native vs legacy deltas) is what reproduces the paper.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import wait_for  # noqa: E402
+from repro.platform import Platform, crds  # noqa: E402
+from repro.platform.legacy import LegacyPlatform  # noqa: E402
+
+ROWS: list = []
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+# ----------------------------------------------------------------- fig 7
+
+
+def bench_fig7_job_lifecycle(widths=(1, 2, 3)) -> None:
+    for width in widths:
+        spec = {"app": {"type": "streams", "width": width,
+                        "pipeline_depth": width, "source": {"rate_sleep": 0.002}}}
+        # cloud native
+        p = Platform(num_nodes=4)
+        try:
+            t0 = time.monotonic()
+            p.submit("j", spec)
+            assert p.wait_submitted("j", 60)
+            t_sub = time.monotonic() - t0
+            assert p.wait_full_health("j", 120)
+            t_health = time.monotonic() - t0
+            t1 = time.monotonic()
+            p.delete_job("j")
+            assert p.wait_terminated("j", 60)
+            t_term = time.monotonic() - t1
+            emit(f"fig7.cloudnative.submit.w{width}", t_sub)
+            emit(f"fig7.cloudnative.fullhealth.w{width}", t_health)
+            emit(f"fig7.cloudnative.terminate.w{width}", t_term,
+                 "bulk label deletion")
+        finally:
+            p.shutdown()
+        # legacy (synchronous submit includes schedule+start)
+        lp = LegacyPlatform(num_nodes=4)
+        try:
+            t0 = time.monotonic()
+            lp.submit("j", spec)
+            t_sub = time.monotonic() - t0
+            assert wait_for(lambda: lp.full_health("j"), 120)
+            t_health = time.monotonic() - t0
+            t1 = time.monotonic()
+            lp.cancel("j")
+            t_term = time.monotonic() - t1
+            emit(f"fig7.legacy.submit.w{width}", t_sub, f"zk_ops={lp.zk.ops}")
+            emit(f"fig7.legacy.fullhealth.w{width}", t_health)
+            emit(f"fig7.legacy.terminate.w{width}", t_term)
+        finally:
+            lp.shutdown()
+
+
+def bench_fig7c_gc_vs_bulk(n_resources=120) -> None:
+    """Kubernetes GC scaling problem (paper §8): owner-reference GC walk vs
+    bulk label deletion, on the same store contents."""
+    from repro.core import OwnerRef, Resource, ResourceStore
+
+    for mode in ("gc", "bulk"):
+        s = ResourceStore()
+        s.create(Resource(kind="Job", name="j", labels={"j": "1"}))
+        for i in range(n_resources):
+            s.create(Resource(kind="Pod", name=f"p{i}", labels={"j": "1"},
+                              owner_refs=(OwnerRef("Job", "j"),)))
+            s.create(Resource(kind="ConfigMap", name=f"c{i}", labels={"j": "1"},
+                              owner_refs=(OwnerRef("Pod", f"p{i}"),)))
+        t0 = time.monotonic()
+        if mode == "gc":
+            s.delete("Job", "j")
+            s.gc_collect()
+        else:
+            s.delete_collection(label_selector={"j": "1"})
+        emit(f"fig7c.delete.{mode}", time.monotonic() - t0,
+             f"n={2 * n_resources + 1}")
+
+
+# ----------------------------------------------------------------- fig 8
+
+
+def bench_fig8_pe_throughput(payloads=(1, 64, 1024, 65536)) -> None:
+    """Two PEs, tuples with varying payload bytes; tuples/sec through the
+    fabric, plus the name-resolution (DNS) latency the paper highlights."""
+    import threading
+
+    from repro.platform.fabric import Fabric, TupleQueue
+
+    for payload in payloads:
+        blob = bytes(payload)
+        q = TupleQueue(maxsize=4096)
+        n = 20000 if payload <= 1024 else 4000
+        t0 = time.monotonic()
+        got = [0]
+
+        def consume(q=q, got=got, n=n):
+            while got[0] < n:
+                if q.get(timeout=1.0) is not None:
+                    got[0] += 1
+
+        th = threading.Thread(target=consume)
+        th.start()
+        for i in range(n):
+            q.put({"seq": i, "payload": blob})
+        th.join()
+        dt = time.monotonic() - t0
+        emit(f"fig8.queue.p{payload}", dt / n, f"{n / dt:.0f} tuples/s")
+    # name resolution with propagation delay (paper §8 networking latency)
+    for delay in (0.0, 0.01):
+        fab = Fabric(dns_delay=delay)
+        q2 = TupleQueue()
+        fab.publish("job", 1, 0, q2)
+        t0 = time.monotonic()
+        fab.resolve("job", 1, 0)
+        emit(f"fig8.resolve.dns{int(delay * 1000)}ms", time.monotonic() - t0)
+
+
+# ----------------------------------------------------------------- fig 9
+
+
+def bench_fig9_width_change(widths=(1, 2, 3)) -> None:
+    for width in widths:
+        spec = {"app": {"type": "streams", "width": width,
+                        "pipeline_depth": width, "source": {"rate_sleep": 0.002}}}
+        p = Platform(num_nodes=4)
+        try:
+            p.submit("j", spec)
+            assert p.wait_full_health("j", 120)
+            n0 = len(p.pods("j"))
+            t0 = time.monotonic()
+            p.set_width("j", "par", 2 * width)
+            assert wait_for(lambda: len(p.pods("j")) == n0 + width * width
+                            and p.job_status("j").get("fullHealth"), 120)
+            emit(f"fig9.cloudnative.double.w{width}", time.monotonic() - t0)
+            t0 = time.monotonic()
+            p.set_width("j", "par", width)
+            assert wait_for(lambda: len(p.pods("j")) == n0, 120)
+            emit(f"fig9.cloudnative.halve.w{2 * width}", time.monotonic() - t0)
+        finally:
+            p.shutdown()
+        lp = LegacyPlatform(num_nodes=4)
+        try:
+            lp.submit("j", spec)
+            assert wait_for(lambda: lp.full_health("j"), 120)
+            t0 = time.monotonic()
+            lp.change_width("j", "par", 2 * width)  # sequential stop->start
+            assert wait_for(lambda: lp.full_health("j"), 120)
+            emit(f"fig9.legacy.double.w{width}", time.monotonic() - t0)
+        finally:
+            lp.cancel("j")
+            lp.shutdown()
+
+
+# ---------------------------------------------------------------- fig 10
+
+
+def bench_fig10_pe_failure_recovery(widths=(2, 3)) -> None:
+    for width in widths:
+        spec = {"app": {"type": "streams", "width": width,
+                        "pipeline_depth": width, "source": {"rate_sleep": 0.002}}}
+        p = Platform(num_nodes=4)
+        try:
+            p.submit("j", spec)
+            assert p.wait_full_health("j", 120)
+            n_pes = len(p.pods("j"))
+            for victim in (1, n_pes // 2):
+                t0 = time.monotonic()
+                p.kill_pod("j", victim)
+                wait_for(lambda: not p.job_status("j").get("fullHealth"), 20)
+                assert p.wait_full_health("j", 120)
+                emit(f"fig10.recovery.pes{n_pes}.pe{victim}",
+                     time.monotonic() - t0)
+        finally:
+            p.shutdown()
+
+
+# ---------------------------------------------------------------- fig 11
+
+
+def bench_fig11_cr_recovery(tmpdir="/tmp/repro-bench-ckpt") -> None:
+    spec = {
+        "app": {"type": "train", "arch": "gemma-2b", "data_parallel": 2,
+                "steps": 1000, "batch_per_shard": 2, "seq_len": 32},
+        "consistentRegion": {"name": "dp", "interval": 5},
+    }
+    p = Platform(num_nodes=4, ckpt_root=tmpdir)
+    try:
+        p.submit("t", spec)
+        assert p.wait_full_health("t", 180)
+        assert p.wait_cr_committed("t", "dp", 5, 300)
+        trainer_pes = [x.spec["peId"] for x in p.store.list(crds.PE, "default")
+                       if "trainer" in str(x.spec.get("operators"))]
+        for victim in trainer_pes[:2]:
+            before = p.rest.get_cr_state("t", "dp")["lastCommitted"]
+            t0 = time.monotonic()
+            p.kill_pod("t", victim)
+            assert p.wait_cr_committed("t", "dp", before + 5, 300)
+            emit(f"fig11.cr_recovery.pe{victim}", time.monotonic() - t0,
+                 f"rollback_to={before}")
+    finally:
+        p.delete_job("t")
+        p.wait_terminated("t", 30)
+        p.shutdown()
+
+
+# ---------------------------------------------------------------- table 1
+
+
+def bench_table1_loc() -> None:
+    """Physical LoC accounting (paper Table 1): how small the platform is
+    relative to the substrate it manages."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    buckets = {
+        "platform(core+platform)": ["src/repro/core", "src/repro/platform"],
+        "substrate(models+train+serve+data)": [
+            "src/repro/models", "src/repro/train", "src/repro/serve",
+            "src/repro/data", "src/repro/sharding", "src/repro/ckpt"],
+        "kernels": ["src/repro/kernels"],
+        "launch+configs": ["src/repro/launch", "src/repro/configs"],
+        "tests+benchmarks": ["tests", "benchmarks"],
+    }
+    total = 0
+    for name, dirs in buckets.items():
+        n = 0
+        for d in dirs:
+            for dirpath, _, files in os.walk(os.path.join(root, d)):
+                for f in files:
+                    if f.endswith(".py"):
+                        with open(os.path.join(dirpath, f), errors="ignore") as fh:
+                            n += sum(1 for line in fh
+                                     if line.strip() and not line.strip().startswith("#"))
+        total += n
+        emit(f"table1.loc.{name}", 0.0, str(n))
+    emit("table1.loc.total", 0.0, str(total))
+
+
+# --------------------------------------------------------------- roofline
+
+
+def bench_roofline() -> None:
+    path = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+    if not os.path.exists(path):
+        print("roofline: results/dryrun.json missing — run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first",
+              flush=True)
+        return
+    with open(path) as f:
+        recs = json.load(f)
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        name = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        step = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        emit(name, step,
+             f"dom={t['dominant']};frac={t['roofline_fraction_compute']:.2f};"
+             f"useful={t['model_vs_hlo_flops']:.2f}")
+
+
+BENCHES = {
+    "fig7": bench_fig7_job_lifecycle,
+    "fig7c": bench_fig7c_gc_vs_bulk,
+    "fig8": bench_fig8_pe_throughput,
+    "fig9": bench_fig9_width_change,
+    "fig10": bench_fig10_pe_failure_recovery,
+    "fig11": bench_fig11_cr_recovery,
+    "table1": bench_table1_loc,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    only = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in only:
+        try:
+            BENCHES[name]()
+        except Exception as exc:  # noqa: BLE001 — isolate benchmark failures
+            import traceback
+
+            traceback.print_exc()
+            emit(f"{name}.ERROR", 0.0, repr(exc))
+    out = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "benchmarks.csv")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for name, us, derived in ROWS:
+            f.write(f"{name},{us:.1f},{derived}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json."""
+import json
+import sys
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def main(path="results/dryrun.json", mesh_filter=None):
+    recs = json.load(open(path))
+    print("| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+          "| dominant | roofline frac | MODEL/HLO | per-dev args (GB) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                  f"skipped | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | | | |")
+            continue
+        t = r["roofline"]
+        arg_gb = (r["memory"]["argument_bytes"] or 0) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_ms(t['compute_s'])} "
+              f"| {fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s'])} "
+              f"| {t['dominant']} | {t['roofline_fraction_compute']:.3f} "
+              f"| {t['model_vs_hlo_flops']:.2f} | {arg_gb:.2f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

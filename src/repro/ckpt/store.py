@@ -1,0 +1,104 @@
+"""Checkpoint storage for consistent regions.
+
+Paper §6.5: operator checkpoints go to external storage (RocksDB/Redis in
+the paper; the filesystem here), *never* into CRDs — the CRD records only
+which checkpoint id is committed.  Layout:
+
+    <root>/<job>/<region>/step<N>/<shard>.npz      tensor payloads
+    <root>/<job>/<region>/step<N>/<shard>.json     scalars/metadata
+
+Writes are atomic (tmp + rename).  A checkpoint is *committed* only once the
+ConsistentRegion CRD's status says so; uncommitted step directories are
+garbage, deleted on the next sweep — recovery state lives in exactly one
+place (the CRD), everything else is recomputable or disposable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, job: str, region: str, step: int) -> str:
+        return os.path.join(self.root, job, region, f"step{step}")
+
+    def save_shard(self, job: str, region: str, step: int, shard: str,
+                   arrays=None, meta: dict | None = None) -> str:
+        d = self._dir(job, region, step)
+        os.makedirs(d, exist_ok=True)
+        if arrays is not None:
+            flat = _flatten(arrays)
+            tmp = os.path.join(d, f".{shard}.npz.tmp")
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+            os.replace(tmp, os.path.join(d, f"{shard}.npz"))
+        if meta is not None:
+            tmp = os.path.join(d, f".{shard}.json.tmp")
+            with open(tmp, "w") as f:
+                json.dump(meta, f)
+            os.replace(tmp, os.path.join(d, f"{shard}.json"))
+        return d
+
+    def load_shard(self, job: str, region: str, step: int, shard: str,
+                   like=None):
+        """Returns (arrays-or-unflattened, meta).  With ``like`` (a pytree),
+        tensors are unflattened into its structure."""
+        d = self._dir(job, region, step)
+        arrays = None
+        npz_path = os.path.join(d, f"{shard}.npz")
+        if os.path.exists(npz_path):
+            with np.load(npz_path) as z:
+                flat = {k: z[k] for k in z.files}
+            if like is not None:
+                leaves = []
+                for path, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+                    key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                   for p in path)
+                    leaves.append(flat[key].astype(leaf.dtype).reshape(leaf.shape))
+                arrays = jax.tree_util.tree_unflatten(
+                    jax.tree_util.tree_structure(like), leaves)
+            else:
+                arrays = flat
+        meta = None
+        json_path = os.path.join(d, f"{shard}.json")
+        if os.path.exists(json_path):
+            with open(json_path) as f:
+                meta = json.load(f)
+        return arrays, meta
+
+    def has_shard(self, job: str, region: str, step: int, shard: str) -> bool:
+        d = self._dir(job, region, step)
+        return (os.path.exists(os.path.join(d, f"{shard}.npz"))
+                or os.path.exists(os.path.join(d, f"{shard}.json")))
+
+    def sweep(self, job: str, region: str, committed: int) -> int:
+        """Delete uncommitted/stale step dirs (keep the committed one)."""
+        base = os.path.join(self.root, job, region)
+        removed = 0
+        if not os.path.isdir(base):
+            return 0
+        for name in os.listdir(base):
+            if not name.startswith("step"):
+                continue
+            step = int(name[4:])
+            if step != committed:
+                shutil.rmtree(os.path.join(base, name), ignore_errors=True)
+                removed += 1
+        return removed

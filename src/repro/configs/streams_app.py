@@ -1,0 +1,36 @@
+"""The paper's own test application (§8): source → n-way parallel region of
+operator pipelines → sink.  This is the "application archive" used by the
+platform benchmarks (job life cycle, width change, PE failure recovery), not
+an LM architecture.  Operators and PEs follow the paper's fusion model: each
+operator fuses into its own PE unless colocated.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class StreamsAppConfig:
+    name: str = "paper-test-app"
+    width: int = 4           # n-way parallel region
+    pipeline_depth: int = 4  # operators per channel (paper: depth == width)
+    pre_ops: int = 1         # operators before the parallel region
+    post_ops: int = 1        # operators after the parallel region
+    consistent_region: bool = False
+    checkpoint_interval: int = 10  # tuples between checkpoints (when CR on)
+
+    @property
+    def num_operators(self) -> int:
+        return self.pre_ops + self.width * self.pipeline_depth + self.post_ops + 2  # + source/sink
+
+
+CONFIG = StreamsAppConfig()
+
+
+def square_app(width: int, consistent_region: bool = False) -> StreamsAppConfig:
+    """The paper's scaling app: operator count grows with width**2."""
+    return StreamsAppConfig(
+        name=f"paper-test-app-w{width}",
+        width=width,
+        pipeline_depth=width,
+        consistent_region=consistent_region,
+    )

@@ -1,0 +1,45 @@
+"""Cloud-native patterns core: the paper's primary contribution, reusable.
+
+Exports the resource substrate (store/events) and the four patterns
+(controller, conductor, coordinator; causal chains via CausalTrace).
+"""
+
+from .patterns import (
+    CausalTrace,
+    Conductor,
+    Controller,
+    Coordinator,
+    Event,
+    EventListener,
+    EventType,
+    Resource,
+    ResourceStore,
+    Runtime,
+)
+from .resources import (
+    AlreadyExistsError,
+    ConflictError,
+    NotFoundError,
+    OwnerRef,
+    Subscription,
+    wait_for,
+)
+
+__all__ = [
+    "AlreadyExistsError",
+    "CausalTrace",
+    "Conductor",
+    "ConflictError",
+    "Controller",
+    "Coordinator",
+    "Event",
+    "EventListener",
+    "EventType",
+    "NotFoundError",
+    "OwnerRef",
+    "Resource",
+    "ResourceStore",
+    "Runtime",
+    "Subscription",
+    "wait_for",
+]

@@ -1,0 +1,328 @@
+"""The paper's four cloud-native patterns (§4): controllers, conductors,
+coordinators, and the causal chains that emerge from their composition.
+
+- A **Controller** is a control loop tracking a *single* resource kind.  It
+  keeps a reflector cache of that kind and reacts to ADDED / MODIFIED /
+  DELETED events via ``on_addition`` / ``on_modification`` / ``on_deletion``.
+- A **Conductor** observes events from *multiple* kinds.  It owns no
+  resources and keeps only recomputable local state; it registers with the
+  controllers of the kinds it cares about and receives the same
+  notifications each controller does (paper §4.2).
+- A **Coordinator** serializes modifications to a resource kind behind a
+  single writer (multiple-reader / single-writer, paper §4.3).
+- A **causal chain** (paper §4.4) is not a class: it is the emergent
+  composition of links where one actor's synchronous change to a resource it
+  owns triggers — through event delivery — the next actor's change.
+  ``CausalTrace`` makes chains observable for tests and debugging.
+
+Determinism claim (paper §4): controllers + conductors compose into a state
+machine; adding coordinators (single-writer serialization) makes that state
+machine deterministic even though event delivery is asynchronous.  The
+property tests in ``tests/test_core_patterns.py`` exercise exactly this:
+random interleavings of event delivery must converge to the same final state.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Iterable, Optional
+
+from .resources import (
+    ConflictError,
+    Event,
+    EventType,
+    NotFoundError,
+    Resource,
+    ResourceStore,
+)
+
+
+class CausalTrace:
+    """Records (actor, action, resource, detail) tuples so causal chains can
+    be asserted on in tests and rendered for debugging."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.entries: list[tuple[str, str, tuple, str]] = []
+
+    def record(self, actor: str, action: str, key: tuple, detail: str = "") -> None:
+        with self._lock:
+            self.entries.append((actor, action, key, detail))
+
+    def actors_for(self, key: tuple) -> list[str]:
+        with self._lock:
+            return [a for (a, _, k, _) in self.entries if k == key]
+
+    def chain(self) -> list[str]:
+        with self._lock:
+            return [f"{a}:{act}:{k[0]}/{k[2]}{(':' + d) if d else ''}" for (a, act, k, d) in self.entries]
+
+    def clear(self) -> None:
+        with self._lock:
+            self.entries.clear()
+
+
+class EventListener:
+    """Anything that can receive categorized resource events."""
+
+    name: str = "listener"
+
+    def handle_event(self, event: Event) -> None:
+        raise NotImplementedError
+
+
+class Controller(EventListener):
+    """Control loop over a single resource kind, with a reflector cache.
+
+    Subclasses override the three callbacks.  Conductors register themselves
+    via ``add_listener`` and are forwarded every event *after* the
+    controller's own handling (so the conductor observes the same stream, and
+    the controller's cache is already current when conductors run).
+    """
+
+    def __init__(self, store: ResourceStore, kind: str, namespace: Optional[str] = None,
+                 name: Optional[str] = None, trace: Optional[CausalTrace] = None):
+        self.store = store
+        self.kind = kind
+        self.namespace = namespace
+        self.name = name or f"{kind.lower()}-controller"
+        self.trace = trace
+        self.cache: dict[tuple, Resource] = {}
+        self._listeners: list[EventListener] = []
+        self._last_seq = 0
+
+    # -- wiring ---------------------------------------------------------
+
+    def add_listener(self, listener: "EventListener") -> None:
+        self._listeners.append(listener)
+
+    def handle_event(self, event: Event) -> None:
+        if event.resource.kind != self.kind:
+            return
+        if self.namespace is not None and event.resource.namespace != self.namespace:
+            return
+        if event.seq <= self._last_seq:  # duplicate-delivery guard (at-least-once)
+            return
+        self._last_seq = event.seq
+        res = event.resource
+        if event.type == EventType.ADDED:
+            self.cache[res.key] = res
+            self._record("observe-add", res.key)
+            self.on_addition(res)
+        elif event.type == EventType.MODIFIED:
+            old = self.cache.get(res.key, event.old)
+            self.cache[res.key] = res
+            self._record("observe-mod", res.key)
+            self.on_modification(old, res)
+        elif event.type == EventType.DELETED:
+            self.cache.pop(res.key, None)
+            self._record("observe-del", res.key)
+            self.on_deletion(res)
+        for listener in self._listeners:
+            listener.handle_event(event)
+
+    def _record(self, action: str, key: tuple, detail: str = "") -> None:
+        if self.trace is not None:
+            self.trace.record(self.name, action, key, detail)
+
+    # -- callbacks (override) --------------------------------------------
+
+    def on_addition(self, res: Resource) -> None:  # pragma: no cover - default
+        pass
+
+    def on_modification(self, old: Optional[Resource], new: Resource) -> None:  # pragma: no cover
+        pass
+
+    def on_deletion(self, res: Resource) -> None:  # pragma: no cover - default
+        pass
+
+
+class Conductor(EventListener):
+    """Observes multiple kinds, drives a state machine toward a goal.
+
+    Holds only *recomputable* state (paper: the subscription board, job
+    submission progress).  ``kinds`` documents what it listens to; actual
+    delivery comes from the controllers it registers with.
+    """
+
+    kinds: tuple[str, ...] = ()
+
+    def __init__(self, store: ResourceStore, name: Optional[str] = None,
+                 trace: Optional[CausalTrace] = None):
+        self.store = store
+        self.name = name or f"{type(self).__name__.lower()}"
+        self.trace = trace
+        self._seen: dict[str, int] = {}
+
+    def handle_event(self, event: Event) -> None:
+        if self.kinds and event.resource.kind not in self.kinds:
+            return
+        # Conductors can be registered with several controllers that observe
+        # overlapping streams; dedupe on the global sequence number per kind.
+        last = self._seen.get(event.resource.kind, 0)
+        if event.seq <= last:
+            return
+        self._seen[event.resource.kind] = event.seq
+        self._record("observe", event.resource.key, event.type.value)
+        self.on_event(event)
+
+    def _record(self, action: str, key: tuple, detail: str = "") -> None:
+        if self.trace is not None:
+            self.trace.record(self.name, action, key, detail)
+
+    def on_event(self, event: Event) -> None:  # pragma: no cover - override
+        pass
+
+
+class Coordinator:
+    """Single-writer command queue for one resource kind (paper §4.3).
+
+    Any actor may ``submit`` a mutation command; commands execute serially
+    under the coordinator's lock, giving multiple-reader/single-writer
+    semantics and eliminating CAS races between concurrent agents.
+    """
+
+    def __init__(self, store: ResourceStore, kind: str, namespace: str = "default",
+                 name: Optional[str] = None, trace: Optional[CausalTrace] = None):
+        self.store = store
+        self.kind = kind
+        self.namespace = namespace
+        self.name = name or f"{kind.lower()}-coordinator"
+        self.trace = trace
+        self._lock = threading.Lock()
+
+    def submit(self, name: str, command: Callable[[Resource], None],
+               requester: str = "?") -> Optional[Resource]:
+        """Serially execute ``command`` against the named resource.
+
+        Returns the updated resource, or None if it does not exist (a command
+        against a deleted resource is a no-op, matching controller semantics
+        for stale events).
+        """
+        with self._lock:
+            try:
+                res = self.store.update(self.kind, name, command, namespace=self.namespace)
+            except NotFoundError:
+                return None
+            if self.trace is not None:
+                self.trace.record(self.name, "modify", res.key, f"for={requester}")
+            return res
+
+    def submit_status(self, name: str, patch: dict, requester: str = "?") -> Optional[Resource]:
+        def command(res: Resource) -> None:
+            res.status.update(patch)
+
+        return self.submit(name, command, requester=requester)
+
+
+class Runtime:
+    """Drives event delivery from the store to registered listeners.
+
+    Two modes:
+
+    - ``threaded``: one daemon thread per controller draining its own watch
+      subscription — the realistic asynchronous deployment (each controller
+      is an independent actor, as in the paper's instance operator).
+    - ``manual`` (deterministic): no threads; ``step()``/``drain()`` deliver
+      events in a caller-controlled order.  Property tests use this to
+      explore adversarial interleavings and assert convergence.
+    """
+
+    def __init__(self, store: ResourceStore, threaded: bool = True):
+        self.store = store
+        self.threaded = threaded
+        self._controllers: list[Controller] = []
+        self._subs: list = []
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+
+    def register(self, controller: Controller, replay: bool = True) -> None:
+        sub = self.store.watch(kinds=(controller.kind,), namespace=controller.namespace,
+                               replay=replay)
+        self._controllers.append(controller)
+        self._subs.append(sub)
+        if self.threaded:
+            t = threading.Thread(
+                target=self._run_loop, args=(controller, sub),
+                name=f"runtime-{controller.name}", daemon=True,
+            )
+            self._threads.append(t)
+            t.start()
+
+    def _run_loop(self, controller: Controller, sub) -> None:
+        while not self._stop.is_set():
+            ev = sub.take(timeout=0.05)
+            if ev is None:
+                continue
+            try:
+                controller.handle_event(ev)
+            except Exception as exc:  # noqa: BLE001 - controller crash should not kill runtime
+                import traceback
+
+                traceback.print_exc()
+                if controller.trace is not None:
+                    controller.trace.record(controller.name, "error", ev.resource.key, repr(exc))
+
+    # -- deterministic mode ----------------------------------------------
+
+    def pending(self) -> list[int]:
+        """Queue depths per controller (manual mode introspection)."""
+        return [len(sub) for sub in self._subs]
+
+    def step(self, index: Optional[int] = None) -> bool:
+        """Deliver one event.  ``index`` selects which controller's queue;
+        default picks the queue whose head has the lowest global seq (the
+        canonical total-order schedule)."""
+        assert not self.threaded, "step() is for manual runtimes"
+        if index is None:
+            heads = [(sub._queue[0].seq, i) for i, sub in enumerate(self._subs) if len(sub)]
+            if not heads:
+                return False
+            index = min(heads)[1]
+        sub = self._subs[index]
+        ev = sub.poll()
+        if ev is None:
+            return False
+        self._controllers[index].handle_event(ev)
+        return True
+
+    def drain(self, max_steps: int = 100000, order: Optional[Callable[[list[int]], int]] = None) -> int:
+        """Deliver events until quiescent.  ``order`` maps the list of
+        non-empty queue indices to the index to service next — the hook the
+        interleaving property tests use."""
+        assert not self.threaded, "drain() is for manual runtimes"
+        steps = 0
+        while steps < max_steps:
+            nonempty = [i for i, sub in enumerate(self._subs) if len(sub)]
+            if not nonempty:
+                return steps
+            idx = nonempty[0] if order is None else order(nonempty)
+            self.step(idx)
+            steps += 1
+        raise RuntimeError("runtime did not quiesce (possible event loop)")
+
+    def quiescent(self) -> bool:
+        return all(len(sub) == 0 for sub in self._subs)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+        for sub in self._subs:
+            self.store.unwatch(sub)
+        self._threads.clear()
+
+
+__all__ = [
+    "CausalTrace",
+    "Conductor",
+    "ConflictError",
+    "Controller",
+    "Coordinator",
+    "Event",
+    "EventListener",
+    "EventType",
+    "Resource",
+    "ResourceStore",
+    "Runtime",
+]

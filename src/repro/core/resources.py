@@ -1,0 +1,451 @@
+"""Versioned resource store — the framework's 'kube-api-server + etcd'.
+
+The paper's architecture rests on Kubernetes providing *state-as-a-service*:
+persistent, versioned objects with reliable, totally-ordered change
+notifications (paper §3.3, §7.4).  This module provides that substrate:
+
+- ``Resource``: a named, versioned object with ``spec`` (desired state) and
+  ``status`` (observed state), labels, and owner references.
+- ``ResourceStore``: thread-safe CRUD with optimistic concurrency
+  (compare-and-swap on ``resource_version``), a total-order event log,
+  watch subscriptions with full-history replay (what lets the instance
+  operator recover by catching up — paper §5.3), label selectors,
+  owner-reference garbage collection (and the paper's §8 mitigation:
+  bulk deletion by label), and an optional write-ahead log for durability.
+
+Nothing in here knows about streams, jobs, or JAX: it is the generic
+substrate the cloud-native patterns (controller / conductor / coordinator /
+causal chain) are built on.
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+import os
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Iterable, Optional
+
+
+class EventType(str, Enum):
+    ADDED = "ADDED"
+    MODIFIED = "MODIFIED"
+    DELETED = "DELETED"
+
+
+class ConflictError(Exception):
+    """Optimistic-concurrency failure: resource_version moved underneath us."""
+
+
+class AlreadyExistsError(Exception):
+    pass
+
+
+class NotFoundError(Exception):
+    pass
+
+
+@dataclass(frozen=True)
+class OwnerRef:
+    kind: str
+    name: str
+
+
+@dataclass
+class Resource:
+    """A single stored object.  ``spec`` is desired state, ``status`` observed.
+
+    ``generation`` increments on every spec change (used by the platform's
+    generation-aware create-or-replace, paper §6.3); ``resource_version`` is
+    the store-global monotonic version of the last write to this object.
+    """
+
+    kind: str
+    name: str
+    namespace: str = "default"
+    spec: dict = field(default_factory=dict)
+    status: dict = field(default_factory=dict)
+    labels: dict = field(default_factory=dict)
+    owner_refs: tuple = ()
+    uid: str = ""
+    resource_version: int = 0
+    generation: int = 1
+
+    @property
+    def key(self) -> tuple:
+        return (self.kind, self.namespace, self.name)
+
+    def clone(self) -> "Resource":
+        return copy.deepcopy(self)
+
+    def to_json(self) -> dict:
+        d = {
+            "kind": self.kind,
+            "name": self.name,
+            "namespace": self.namespace,
+            "spec": self.spec,
+            "status": self.status,
+            "labels": self.labels,
+            "owner_refs": [[o.kind, o.name] for o in self.owner_refs],
+            "uid": self.uid,
+            "resource_version": self.resource_version,
+            "generation": self.generation,
+        }
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "Resource":
+        return Resource(
+            kind=d["kind"],
+            name=d["name"],
+            namespace=d.get("namespace", "default"),
+            spec=d.get("spec", {}),
+            status=d.get("status", {}),
+            labels=d.get("labels", {}),
+            owner_refs=tuple(OwnerRef(k, n) for k, n in d.get("owner_refs", [])),
+            uid=d.get("uid", ""),
+            resource_version=d.get("resource_version", 0),
+            generation=d.get("generation", 1),
+        )
+
+
+@dataclass(frozen=True)
+class Event:
+    seq: int
+    type: EventType
+    resource: Resource  # snapshot *after* the change (before, for DELETED)
+    old: Optional[Resource] = None  # snapshot before a MODIFIED
+
+
+def _match_labels(labels: dict, selector: dict) -> bool:
+    return all(labels.get(k) == v for k, v in selector.items())
+
+
+class Subscription:
+    """A watch channel: replayed history followed by live events.
+
+    Deliveries are queued; a runtime drains the queue.  Queues make event
+    delivery *asynchronous* (as in Kubernetes) while the log's global ``seq``
+    keeps it *totally ordered* — the property the paper's determinism argument
+    (§4.4) relies on.
+    """
+
+    def __init__(self, kinds: Optional[tuple], namespace: Optional[str]):
+        self.kinds = kinds
+        self.namespace = namespace
+        self._queue: list[Event] = []
+        self._cond = threading.Condition()
+        self.closed = False
+
+    def _offer(self, event: Event) -> None:
+        if self.kinds is not None and event.resource.kind not in self.kinds:
+            return
+        if self.namespace is not None and event.resource.namespace != self.namespace:
+            return
+        with self._cond:
+            self._queue.append(event)
+            self._cond.notify_all()
+
+    def poll(self) -> Optional[Event]:
+        with self._cond:
+            if self._queue:
+                return self._queue.pop(0)
+            return None
+
+    def take(self, timeout: Optional[float] = None) -> Optional[Event]:
+        with self._cond:
+            if not self._queue:
+                self._cond.wait(timeout=timeout)
+            if self._queue:
+                return self._queue.pop(0)
+            return None
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def close(self) -> None:
+        with self._cond:
+            self.closed = True
+            self._cond.notify_all()
+
+
+class ResourceStore:
+    """Thread-safe versioned object store with a total-order event log."""
+
+    def __init__(self, wal_path: Optional[str] = None):
+        self._lock = threading.RLock()
+        self._objects: dict[tuple, Resource] = {}
+        self._log: list[Event] = []
+        self._seq = 0
+        self._subs: list[Subscription] = []
+        self._wal_path = wal_path
+        self._wal_file = None
+        if wal_path:
+            self._wal_file = open(wal_path, "a", encoding="utf-8")
+
+    # ------------------------------------------------------------------ CRUD
+
+    def create(self, res: Resource) -> Resource:
+        with self._lock:
+            if res.key in self._objects:
+                raise AlreadyExistsError(f"{res.key} already exists")
+            stored = res.clone()
+            self._seq += 1
+            stored.resource_version = self._seq
+            stored.generation = 1
+            stored.uid = stored.uid or uuid.uuid4().hex[:12]
+            self._objects[stored.key] = stored
+            self._emit(Event(self._seq, EventType.ADDED, stored.clone()))
+            return stored.clone()
+
+    def get(self, kind: str, name: str, namespace: str = "default") -> Resource:
+        with self._lock:
+            key = (kind, namespace, name)
+            if key not in self._objects:
+                raise NotFoundError(f"{key} not found")
+            return self._objects[key].clone()
+
+    def try_get(self, kind: str, name: str, namespace: str = "default") -> Optional[Resource]:
+        try:
+            return self.get(kind, name, namespace)
+        except NotFoundError:
+            return None
+
+    def exists(self, kind: str, name: str, namespace: str = "default") -> bool:
+        with self._lock:
+            return (kind, namespace, name) in self._objects
+
+    def list(
+        self,
+        kind: Optional[str] = None,
+        namespace: Optional[str] = None,
+        label_selector: Optional[dict] = None,
+    ) -> list[Resource]:
+        with self._lock:
+            out = []
+            for res in self._objects.values():
+                if kind is not None and res.kind != kind:
+                    continue
+                if namespace is not None and res.namespace != namespace:
+                    continue
+                if label_selector and not _match_labels(res.labels, label_selector):
+                    continue
+                out.append(res.clone())
+            return sorted(out, key=lambda r: r.key)
+
+    def replace(self, res: Resource, expected_version: Optional[int] = None) -> Resource:
+        """Compare-and-swap replace.  Spec changes bump ``generation``."""
+        with self._lock:
+            key = res.key
+            if key not in self._objects:
+                raise NotFoundError(f"{key} not found")
+            current = self._objects[key]
+            if expected_version is not None and current.resource_version != expected_version:
+                raise ConflictError(
+                    f"{key}: expected v{expected_version}, store has v{current.resource_version}"
+                )
+            old = current.clone()
+            stored = res.clone()
+            stored.uid = current.uid
+            self._seq += 1
+            stored.resource_version = self._seq
+            stored.generation = current.generation + (1 if stored.spec != current.spec else 0)
+            self._objects[key] = stored
+            self._emit(Event(self._seq, EventType.MODIFIED, stored.clone(), old=old))
+            return stored.clone()
+
+    def update(
+        self,
+        kind: str,
+        name: str,
+        mutate: Callable[[Resource], None],
+        namespace: str = "default",
+        retries: int = 16,
+    ) -> Resource:
+        """Read-modify-write with CAS retry.  ``mutate`` edits in place."""
+        for _ in range(retries):
+            cur = self.get(kind, name, namespace)
+            ver = cur.resource_version
+            mutate(cur)
+            try:
+                return self.replace(cur, expected_version=ver)
+            except ConflictError:
+                continue
+        raise ConflictError(f"update of {(kind, namespace, name)} exhausted retries")
+
+    def update_status(
+        self, kind: str, name: str, patch: dict, namespace: str = "default"
+    ) -> Resource:
+        def mutate(res: Resource) -> None:
+            res.status.update(patch)
+
+        return self.update(kind, name, mutate, namespace=namespace)
+
+    def delete(self, kind: str, name: str, namespace: str = "default") -> Resource:
+        with self._lock:
+            key = (kind, namespace, name)
+            if key not in self._objects:
+                raise NotFoundError(f"{key} not found")
+            res = self._objects.pop(key)
+            self._seq += 1
+            snap = res.clone()
+            snap.resource_version = self._seq
+            self._emit(Event(self._seq, EventType.DELETED, snap))
+            return snap
+
+    def try_delete(self, kind: str, name: str, namespace: str = "default") -> bool:
+        try:
+            self.delete(kind, name, namespace)
+            return True
+        except NotFoundError:
+            return False
+
+    def delete_collection(
+        self,
+        kind: Optional[str] = None,
+        namespace: Optional[str] = None,
+        label_selector: Optional[dict] = None,
+    ) -> int:
+        """Bulk deletion by label — the paper's §8 mitigation for slow GC.
+
+        One pass, one lock acquisition, minimal per-object API cost.
+        """
+        with self._lock:
+            targets = self.list(kind=kind, namespace=namespace, label_selector=label_selector)
+            for res in targets:
+                self.delete(res.kind, res.name, res.namespace)
+            return len(targets)
+
+    # ------------------------------------------------------- garbage collect
+
+    def gc_collect(self) -> int:
+        """Owner-reference garbage collection (the slow path the paper measured).
+
+        Deletes objects whose *every* owner is gone.  Iterates to a fixed
+        point, which is exactly the behaviour that scales poorly with the
+        number of resources (paper §8, Fig. 7c) — kept faithful so the
+        benchmark can reproduce the comparison against bulk deletion.
+        """
+        removed = 0
+        while True:
+            with self._lock:
+                orphans = []
+                for res in self._objects.values():
+                    if not res.owner_refs:
+                        continue
+                    owners_alive = any(
+                        (o.kind, res.namespace, o.name) in self._objects for o in res.owner_refs
+                    )
+                    if not owners_alive:
+                        orphans.append(res.key)
+            if not orphans:
+                return removed
+            for kind, namespace, name in orphans:
+                try:
+                    self.delete(kind, name, namespace)
+                    removed += 1
+                except NotFoundError:
+                    pass
+
+    # ------------------------------------------------------------- watching
+
+    def watch(
+        self,
+        kinds: Optional[Iterable[str]] = None,
+        namespace: Optional[str] = None,
+        replay: bool = True,
+    ) -> Subscription:
+        """Subscribe to events.  With ``replay``, the subscriber first receives
+        the full history — how restarted actors catch up (paper §5.3)."""
+        sub = Subscription(tuple(kinds) if kinds is not None else None, namespace)
+        with self._lock:
+            if replay:
+                for ev in self._log:
+                    sub._offer(ev)
+            self._subs.append(sub)
+        return sub
+
+    def unwatch(self, sub: Subscription) -> None:
+        with self._lock:
+            if sub in self._subs:
+                self._subs.remove(sub)
+            sub.close()
+
+    def _emit(self, event: Event) -> None:
+        self._log.append(event)
+        if self._wal_file is not None:
+            rec = {
+                "seq": event.seq,
+                "type": event.type.value,
+                "resource": event.resource.to_json(),
+            }
+            self._wal_file.write(json.dumps(rec) + "\n")
+            self._wal_file.flush()
+            os.fsync(self._wal_file.fileno())
+        for sub in self._subs:
+            if not sub.closed:
+                sub._offer(event)
+
+    # ------------------------------------------------------------ durability
+
+    @property
+    def seq(self) -> int:
+        with self._lock:
+            return self._seq
+
+    @property
+    def event_log(self) -> list[Event]:
+        with self._lock:
+            return list(self._log)
+
+    def close(self) -> None:
+        with self._lock:
+            for sub in self._subs:
+                sub.close()
+            self._subs.clear()
+            if self._wal_file is not None:
+                self._wal_file.close()
+                self._wal_file = None
+
+    @staticmethod
+    def recover(wal_path: str) -> "ResourceStore":
+        """Rebuild a store by replaying its write-ahead log (etcd restart)."""
+        store = ResourceStore()
+        if not os.path.exists(wal_path):
+            store._wal_path = wal_path
+            store._wal_file = open(wal_path, "a", encoding="utf-8")
+            return store
+        with open(wal_path, "r", encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                res = Resource.from_json(rec["resource"])
+                etype = EventType(rec["type"])
+                store._seq = rec["seq"]
+                if etype == EventType.DELETED:
+                    store._objects.pop(res.key, None)
+                else:
+                    store._objects[res.key] = res
+                store._log.append(Event(rec["seq"], etype, res))
+        store._wal_path = wal_path
+        store._wal_file = open(wal_path, "a", encoding="utf-8")
+        return store
+
+
+def wait_for(
+    predicate: Callable[[], bool], timeout: float = 30.0, interval: float = 0.002
+) -> bool:
+    """Test/benchmark helper: spin until ``predicate()`` or timeout."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return predicate()

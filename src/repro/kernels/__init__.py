@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel: ``<name>.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), jitted wrappers in ``ops.py``, pure-jnp oracles in ``ref.py``.
+Validated with interpret=True on CPU; the TPU path enables them via
+``ops.use_pallas``.
+"""
+
+from . import ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .mlstm_chunk import mlstm_chunk
+from .rglru_scan import rglru_scan
+from .rmsnorm import rmsnorm
+
+__all__ = [
+    "decode_attention",
+    "flash_attention",
+    "mlstm_chunk",
+    "ops",
+    "ref",
+    "rglru_scan",
+    "rmsnorm",
+]

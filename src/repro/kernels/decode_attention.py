@@ -1,0 +1,106 @@
+"""GQA decode attention (split-K over the cache) — Pallas TPU kernel.
+
+Decode is memory-bound: one query token per sequence reads the whole KV
+cache.  The kernel streams the cache in ``block_k`` slices along the
+innermost sequential grid axis (split-K / flash-decoding), keeping online
+(m, l, acc) per query-head group in VMEM scratch.  All G query heads of one
+KV head are processed together as the matmul M-dimension — the natural MXU
+mapping for GQA decode (the q "matrix" is (G, D), the cache block (D, bk)).
+
+Valid-length masking uses the per-sequence ``lengths`` vector, delivered to
+SMEM (scalar memory) rather than VMEM: it is control data, not tensor data.
+
+Layouts: q (B, KV, G, D); caches (B, Smax, KV, D); lengths (B, 1) int32.
+Grid: (B, KV, Smax/block_k), cache axis innermost (sequential).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, scale: float, block_k: int, num_k: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b, 0]
+    needed = ik * block_k < length
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+        m_ref[:, 0] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(ik == num_k - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q (B,H,D); caches (B,Smax,KV,D); lengths (B,) -> (B,H,D)."""
+    B, H, D = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    block_k = min(block_k, Smax)
+    assert Smax % block_k == 0
+    nk = Smax // block_k
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KV, G, D)
+    len2d = lengths.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               num_k=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths, whole array
+            pl.BlockSpec((1, 1, G, D), lambda b, j, ik: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, j, ik: (b, ik, j, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, j, ik: (b, ik, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, j, ik: (b, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(len2d, qg, k_cache, v_cache)
+    return out.reshape(B, H, D)

@@ -1,0 +1,46 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``use_pallas(...)`` hooks the kernels into ``ModelOptions`` for the TPU
+target path; on CPU everything runs with ``interpret=True`` (correctness
+only).  Each op dispatches on availability and falls back to the pure-jnp
+reference for unsupported shapes — the module is safe to call anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention, flash_attention_bwd, flash_attention_train
+from .mlstm_chunk import mlstm_chunk
+from .rglru_scan import rglru_scan
+from .rmsnorm import rmsnorm
+
+__all__ = [
+    "decode_attention",
+    "flash_attention",
+    "flash_attention_bwd",
+    "flash_attention_train",
+    "mlstm_chunk",
+    "mlstm_recurrence_op",
+    "rglru_scan",
+    "rmsnorm",
+    "use_pallas",
+]
+
+
+def mlstm_recurrence_op(q, k, v, i_pre, f_pre, *, chunk: int = 64,
+                        interpret: bool = False):
+    """Drop-in replacement for models.recurrent.mlstm_chunk_recurrence."""
+    return mlstm_chunk(q, k, v, i_pre, f_pre, chunk=chunk, interpret=interpret)
+
+
+def use_pallas(opts, *, interpret: bool = False):
+    """Return a ModelOptions with the Pallas kernels wired in (TPU path)."""
+    return opts.__class__(
+        **{**opts.__dict__,
+           "mlstm_recurrence": functools.partial(mlstm_recurrence_op,
+                                                 interpret=interpret)})

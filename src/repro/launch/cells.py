@@ -1,0 +1,214 @@
+"""Cell construction: (arch × shape × mesh) -> a lowerable step function.
+
+A *cell* is one entry of the dry-run/roofline matrix.  This module builds,
+for any cell: the step function (train_step / prefill_step / serve_step),
+abstract input stand-ins (ShapeDtypeStructs — never allocated), and the
+in/out shardings, so both the dry-run and the benchmarks consume one code
+path.  All placement is *computed* from (arch, shape, mesh, rules) — the
+paper's deterministic-naming principle applied to distribution metadata.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ArchConfig, SHAPES, ShapeCfg, get_config, shape_applicable
+from ..data.stream import batch_specs
+from ..models import ModelOptions, abstract_params, decode_step, init_cache, stack_plan
+from ..sharding.ctx import activation_rules, use_rules
+from ..sharding.specs import PARAM_RULES, param_specs
+from ..train.step import (
+    TrainConfig,
+    abstract_train_state,
+    batch_sharding,
+    make_train_step,
+    train_state_specs,
+)
+from ..serve.engine import make_prefill_step
+
+
+@dataclass(frozen=True)
+class CellOptions:
+    """Perf levers for a cell (the §Perf hillclimb mutates these)."""
+
+    model: ModelOptions = ModelOptions()
+    train: TrainConfig = TrainConfig()
+    sequence_parallel: bool = False
+    shard_cache_seq: bool = False
+    # DP-dominant layout: batch shards over the model axis too and params
+    # replicate — the right layout for small archs where TP collectives
+    # dwarf per-device compute (xlstm/gemma-scale; §Perf)
+    dp_layout: bool = False
+    param_rules: dict = field(default_factory=lambda: dict(PARAM_RULES))
+
+
+def data_axes_for(mesh: Mesh, global_batch: int,
+                  include_model: bool = False) -> tuple:
+    """Largest prefix of (pod, data[, model]) that divides the batch."""
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    axes = [a for a in names if a in mesh.axis_names]
+    size = 1
+    chosen = []
+    for a in axes:
+        n = mesh.shape[a]
+        if global_batch % (size * n) == 0:
+            chosen.append(a)
+            size *= n
+    return tuple(chosen)
+
+
+def cache_specs(cache_abs, cfg: ArchConfig, mesh: Mesh, batch_axes: tuple,
+                rules: dict):
+    """NamedShardings for a decode cache pytree (derived from leaf shapes)."""
+    B = cache_abs["len"].shape[0]
+    model_ax = rules.get("kv_heads")
+    cache_seq_ax = rules.get("cache_seq")
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    num_heads = cfg.num_heads
+
+    model_size = mesh.shape[model_ax] if model_ax else 1
+
+    def spec_for(x):
+        shape = x.shape
+        # strip the stacked main-group leading dim: (groups, B, ...)
+        lead = ()
+        if len(shape) >= 2 and shape[0] != B and shape[1] == B:
+            lead = (None,)
+            shape = shape[1:]
+        if not shape or shape[0] != B:
+            return P()
+        rest = shape[1:]
+        if len(rest) == 3 and rest[-2:] == (kv, hd):  # (B, S, KV, hd) kv cache
+            seq_ax = cache_seq_ax
+            kv_ax = model_ax
+            if kv % model_size != 0:
+                # MQA/GQA kv heads don't divide the tensor axis: split-K over
+                # the cache sequence instead (flash-decode style) so the cache
+                # is never replicated across the tensor axis.
+                kv_ax = None
+                if rest[0] % model_size == 0:
+                    seq_ax = model_ax
+            return P(*lead, batch_axes, seq_ax, kv_ax, None)
+        if len(rest) == 3 and rest[0] == num_heads:  # mLSTM C (B, H, dk, dv)
+            return P(*lead, batch_axes, model_ax, None, None)
+        if len(rest) == 2 and rest[0] == num_heads:  # (B, H, dk)
+            return P(*lead, batch_axes, model_ax, None)
+        if len(rest) == 2:  # conv state (B, W-1, C)
+            return P(*lead, batch_axes, None, model_ax)
+        if len(rest) == 1 and rest[0] == num_heads:  # (B, H)
+            return P(*lead, batch_axes, model_ax)
+        if len(rest) == 1:  # (B, d) recurrent channels
+            return P(*lead, batch_axes, model_ax)
+        return P(*lead, batch_axes)
+
+    from ..sharding.specs import fit_spec
+
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, fit_spec(spec_for(x), x.shape, mesh)),
+        cache_abs)
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeCfg
+    cfg: ArchConfig
+    kind: str  # train | prefill | decode
+    fn: object  # the step callable
+    args: tuple  # abstract args
+    in_shardings: tuple
+    donate_argnums: tuple
+    meta: dict
+
+
+def token_count(cfg: ArchConfig, shape: ShapeCfg) -> int:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: one token per sequence
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               opts: CellOptions = CellOptions()) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell ({arch}, {shape_name}) skipped: {why}")
+
+    batch_axes = data_axes_for(mesh, shape.global_batch,
+                               include_model=opts.dp_layout)
+    act_rules = activation_rules(
+        data_axes=batch_axes,
+        sequence_parallel=opts.sequence_parallel,
+        shard_cache_seq=opts.shard_cache_seq,
+    )
+    if opts.dp_layout:
+        # params replicated (grad all-reduce is the only collective); keep
+        # tensor-axis names out of the activation rules as well
+        act_rules = {k: (v if k in ("batch", "dp") else None)
+                     for k, v in act_rules.items()}
+        prules = {}
+    else:
+        prules = {k: v for k, v in opts.param_rules.items() if
+                  (v in mesh.axis_names if isinstance(v, str) else True)}
+
+    ftok = cfg.frontend_len if cfg.frontend else 0
+    seq_tok = shape.seq_len - ftok
+
+    if shape.kind == "train":
+        tcfg = opts.train
+        if tcfg.compress_pod_grads:
+            tcfg = TrainConfig(optimizer=tcfg.optimizer, accum_steps=tcfg.accum_steps,
+                               compress_pod_grads=True,
+                               num_pods=mesh.shape.get("pod", 1), remat=tcfg.remat)
+        state_abs = abstract_train_state(cfg, tcfg)
+        st_specs = train_state_specs(state_abs, mesh, prules)
+        batch = batch_specs(cfg.vocab_size, shape.global_batch, seq_tok,
+                            ftok, cfg.frontend_dim)
+        b_specs = batch_sharding(mesh, batch, batch_axes)
+        step = make_train_step(cfg, tcfg, opts.model, mesh=mesh, act_rules=act_rules)
+        return Cell(arch, shape, cfg, "train", step, (state_abs, batch),
+                    (st_specs, b_specs), (0,), {"batch_axes": batch_axes})
+
+    params_abs = abstract_params(cfg)
+    p_specs = param_specs(params_abs, mesh, prules)
+
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, seq_tok), jnp.int32)}
+        if ftok:
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, ftok, cfg.frontend_dim), jnp.float32)
+        b_specs = batch_sharding(mesh, batch, batch_axes)
+        step = make_prefill_step(cfg, opts.model, max_len=shape.seq_len,
+                                 mesh=mesh, act_rules=act_rules)
+        return Cell(arch, shape, cfg, "prefill", step, (params_abs, batch),
+                    (p_specs, b_specs), (), {"batch_axes": batch_axes})
+
+    # decode: one new token against a cache of seq_len
+    cache_abs = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           dtype=opts.model.dtype))
+    c_specs = cache_specs(cache_abs, cfg, mesh, batch_axes, act_rules)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    t_spec = NamedSharding(mesh, P(batch_axes))
+
+    def step(params, cache, toks):
+        with use_rules(mesh, act_rules):
+            return decode_step(params, cfg, cache, toks, opts.model)
+
+    return Cell(arch, shape, cfg, "decode", step,
+                (params_abs, cache_abs, tokens),
+                (p_specs, c_specs, t_spec), (1,), {"batch_axes": batch_axes})
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate_argnums)
+    return jitted.lower(*cell.args)

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for the
+single-pod (16,16) and multi-pod (2,16,16) production meshes, every cell
+must ``.lower().compile()`` cleanly; we record memory_analysis,
+cost_analysis, and collective bytes (parsed from the optimized HLO) into a
+JSON results file that EXPERIMENTS.md §Dry-run / §Roofline and the §Perf
+hillclimb read.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod-only]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+
+The XLA_FLAGS line above must run before ANY jax import — jax locks the
+device count on first init.  Do not import this module from code that has
+already initialized jax with a different device count.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from .cells import CellOptions, build_cell, lower_cell, token_count
+from .hlo_analysis import analyze
+from .mesh import make_production_mesh
+from .roofline import model_flops, roofline_terms
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             opts: CellOptions = CellOptions(), verbose: bool = True) -> dict:
+    """Lower + compile one cell; return the full record (or skip/error)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "params": cfg.param_count(), "active_params": cfg.active_param_count()}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    num_chips = mesh.size
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh, opts)
+        lowered = lower_cell(cell)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        totals = analyze(hlo)
+        terms = roofline_terms(totals.flops, totals.bytes, totals.coll_bytes,
+                               num_chips)
+        mf = model_flops(cfg, shape, cell.kind)
+        terms["model_flops"] = mf
+        hlo_total = terms["hlo_flops_per_device"] * num_chips
+        terms["model_vs_hlo_flops"] = mf / hlo_total if hlo_total else 0.0
+        terms["unknown_trip_loops"] = totals.unknown_trip_loops
+        rec.update(
+            status="ok",
+            kind=cell.kind,
+            tokens=token_count(cfg, shape),
+            batch_axes=list(cell.meta["batch_axes"]),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            collectives=totals.coll_by_key,
+            cost_analysis_raw={"flops": float(cost.get("flops", 0.0)),
+                               "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+            roofline=terms,
+        )
+        if verbose:
+            print(f"[dryrun] {arch} {shape_name} {mesh_name}: OK "
+                  f"compile={t_compile:.0f}s "
+                  f"compute={terms['compute_s']*1e3:.2f}ms "
+                  f"memory={terms['memory_s']*1e3:.2f}ms "
+                  f"collective={terms['collective_s']*1e3:.2f}ms "
+                  f"dominant={terms['dominant']} "
+                  f"useful={terms['model_vs_hlo_flops']:.2f}")
+    except Exception as exc:  # noqa: BLE001 - record the failure, keep going
+        rec.update(status="error", error=repr(exc),
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] {arch} {shape_name} {mesh_name}: FAIL {exc!r}")
+    return rec
+
+
+def all_cells(multi_pod_values=(False, True)):
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            for mp in multi_pod_values:
+                yield arch, shape_name, mp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true", help="use the 2x16x16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--append", action="store_true")
+    ap.add_argument("--tree-attention", action="store_true")
+    ap.add_argument("--sequence-parallel", action="store_true")
+    ap.add_argument("--shard-cache-seq", action="store_true")
+    ap.add_argument("--moe-impl", default=None, choices=(None, "einsum", "sort"))
+    ap.add_argument("--compress-pod-grads", action="store_true")
+    ap.add_argument("--dp-layout", action="store_true")
+    args = ap.parse_args()
+
+    from ..models import ModelOptions
+    from ..train.step import TrainConfig
+
+    opts = CellOptions(
+        model=ModelOptions(tree_attention=args.tree_attention,
+                           moe_impl=args.moe_impl),
+        train=TrainConfig(compress_pod_grads=args.compress_pod_grads),
+        sequence_parallel=args.sequence_parallel,
+        shard_cache_seq=args.shard_cache_seq,
+        dp_layout=args.dp_layout,
+    )
+
+    records = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records
+            if r.get("status") in ("ok", "skipped")}
+
+    if args.all:
+        meshes = (False, True) if args.both_meshes or not args.multipod else (True,)
+        if args.both_meshes:
+            meshes = (False, True)
+        elif args.multipod:
+            meshes = (True,)
+        else:
+            meshes = (False,)
+        cells = list(all_cells(meshes))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, args.multipod)]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    for arch, shape_name, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        if (arch, shape_name, mesh_name) in done:
+            continue
+        rec = run_cell(arch, shape_name, multi_pod=mp, opts=opts)
+        records = [r for r in records if (r["arch"], r["shape"], r["mesh"])
+                   != (rec["arch"], rec["shape"], rec["mesh"])]
+        records.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    n_ok = sum(1 for r in records if r.get("status") == "ok")
+    n_skip = sum(1 for r in records if r.get("status") == "skipped")
+    n_err = sum(1 for r in records if r.get("status") == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

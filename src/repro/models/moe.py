@@ -1,0 +1,191 @@
+"""Mixture-of-Experts layer: shared + fine-grained routed experts.
+
+Covers deepseek-moe-16b (2 shared + 64 routed, top-6) and qwen2-moe-a2.7b
+(4 shared + 60 routed, top-4, sigmoid-gated shared expert).
+
+Two dispatch implementations, selectable via ``MoECfg.impl``:
+
+- ``einsum``: GShard-style dense dispatch/combine tensors (capacity-based,
+  one-hot einsums).  SPMD-friendly — the partitioner turns the group/expert
+  einsums into clean all-to-alls — but pays ~2*T*E*C*d extra dispatch FLOPs
+  (the known GShard overhead, significant for fine-grained experts).
+- ``sort``: argsort-based dispatch (scatter into an (E, C, d) buffer, grouped
+  GEMM, gather back).  Eliminates the dispatch-einsum FLOPs; used in the
+  §Perf hillclimb to attack the compute roofline term of the MoE cells.
+
+Both are capacity-based with identical drop semantics, so they can be
+cross-checked against each other (see tests/test_moe.py).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoECfg
+from ..sharding.ctx import shard
+from .layers import act_fn, dense_init, mlp_apply
+
+
+def init_moe(key, d: int, m: MoECfg) -> dict:
+    keys = jax.random.split(key, 8)
+    de = m.d_expert
+    p = {
+        "router": dense_init(keys[0], (d, m.num_experts)),
+        # routed experts (E, d, de): gated MLPs
+        "w_gate": dense_init(keys[1], (m.num_experts, d, de)),
+        "w_up": dense_init(keys[2], (m.num_experts, d, de)),
+        "w_down": dense_init(keys[3], (m.num_experts, de, d)),
+    }
+    if m.num_shared:
+        ds = m.num_shared * de
+        p["shared"] = {
+            "w_gate": dense_init(keys[4], (d, ds)),
+            "w_up": dense_init(keys[5], (d, ds)),
+            "w_down": dense_init(keys[6], (ds, d)),
+        }
+        if m.shared_gate:
+            p["shared_gate"] = dense_init(keys[7], (d, 1))
+    return p
+
+
+def _capacity(m: MoECfg, g: int) -> int:
+    return max(4, int(math.ceil(g * m.top_k * m.capacity_factor / m.num_experts)))
+
+
+def _route(params, xg, m: MoECfg):
+    """xg (n, g, d) -> (gate_vals (n,g,k), idx (n,g,k), probs (n,g,E))."""
+    logits = jnp.einsum("ngd,de->nge", xg, params["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, m.top_k)
+    return gate_vals, idx, probs
+
+
+def _aux_loss(probs, idx, m: MoECfg) -> jax.Array:
+    """Load-balance loss: E * sum_e f_e * P_e (Switch/GShard form)."""
+    E = m.num_experts
+    top1 = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)
+    f = jnp.mean(top1, axis=(0, 1))
+    P = jnp.mean(probs, axis=(0, 1))
+    return E * jnp.sum(f * P)
+
+
+def _experts_gemm(params, xe, act: str):
+    """xe (n, E, C, d) -> (n, E, C, d) through per-expert gated MLPs."""
+    dt = xe.dtype
+    g = jnp.einsum("necd,edf->necf", xe, params["w_gate"].astype(dt),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("necd,edf->necf", xe, params["w_up"].astype(dt),
+                   preferred_element_type=jnp.float32)
+    h = (act_fn(act)(g) * u).astype(dt)
+    return jnp.einsum("necf,efd->necd", h, params["w_down"].astype(dt),
+                      preferred_element_type=jnp.float32).astype(dt)
+
+
+def _moe_einsum(params, xg, m: MoECfg, act: str):
+    """GShard dense-dispatch path.  xg (n, g, d)."""
+    n, g, d = xg.shape
+    E, k = m.num_experts, m.top_k
+    C = _capacity(m, g)
+    gate_vals, idx, probs = _route(params, xg, m)
+
+    mask = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (n, g, k, E)
+    # GShard ordering: all tokens' choice 0, then choice 1, ... — transpose k
+    # in front of g before the running count.
+    mask_kg = mask.transpose(0, 2, 1, 3).reshape(n, k * g, E)
+    pos = jnp.cumsum(mask_kg, axis=1) * mask_kg - mask_kg  # 0-based slot index
+    keep = (pos < C) * mask_kg  # (n, k*g, E)
+    pos = pos.reshape(n, k, g, E).transpose(0, 2, 1, 3)  # (n, g, k, E)
+    keep = keep.reshape(n, k, g, E).transpose(0, 2, 1, 3)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C,
+                            dtype=jnp.float32) * keep[..., None]  # (n,g,k,E,C)
+    combine = jnp.sum(gate_vals[..., None, None] * pos_oh, axis=2)  # (n, g, E, C)
+    combine = shard(combine, ("dp", None, "expert", None))
+    dispatch = (combine > 0).astype(xg.dtype)
+
+    xe = jnp.einsum("ngec,ngd->necd", dispatch, xg,
+                    preferred_element_type=jnp.float32).astype(xg.dtype)
+    xe = shard(xe, ("dp", "expert", None, None))
+    ye = _experts_gemm(params, xe, act)
+    # combine contracts over the EP-sharded expert dim -> cross-shard psum;
+    # bf16 output halves its wire bytes
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(xg.dtype), ye,
+                     preferred_element_type=xg.dtype).astype(xg.dtype)
+    return out, _aux_loss(probs, idx, m)
+
+
+def _moe_sort(params, xg, m: MoECfg, act: str):
+    """Argsort dispatch path: no dense dispatch/combine einsums.
+
+    Same capacity & drop semantics as the einsum path, but slot assignment is
+    computed with sort/segment arithmetic and data movement is scatter/gather
+    instead of one-hot matmuls.  Applied per group for identical capacity
+    behaviour (vmap over groups).
+    """
+    E, k = m.num_experts, m.top_k
+    n, g, d = xg.shape
+    C = _capacity(m, g)
+    gate_vals, idx, probs = _route(params, xg, m)
+
+    def one_group(x, gv, ix):
+        # x (g, d); gv/ix (g, k)
+        a = g * k
+        # GShard ordering: choice-major (all choice-0 assignments first), so
+        # capacity drops prefer lower-rank choices — identical semantics to
+        # the einsum path.  Sequence index j = choice * g + token.
+        tok_of = jnp.tile(jnp.arange(g), k)
+        choice_of = jnp.repeat(jnp.arange(k), g)
+        e_seq = ix[tok_of, choice_of]  # (a,)
+        gate_seq = gv[tok_of, choice_of]
+        order = jnp.argsort(e_seq, stable=True)
+        e_sorted = e_seq[order]
+        counts = jnp.bincount(e_seq, length=E)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(a) - starts[e_sorted]
+        keep = pos < C
+        # dropped assignments write out of bounds -> discarded by mode="drop"
+        slot = jnp.where(keep, e_sorted * C + pos, E * C)
+        tok_sorted = tok_of[order]
+        buf = jnp.zeros((E * C, d), x.dtype)
+        buf = buf.at[slot].set(x[tok_sorted], mode="drop")
+        return buf.reshape(E, C, d), tok_sorted, gate_seq[order], keep, slot
+
+    xs, toks, gates, keeps, slots = jax.vmap(one_group)(xg, gate_vals, idx)
+    xs = shard(xs, ("dp", "expert", None, None))
+    ye = _experts_gemm(params, xs, act)  # (n, E, C, d)
+
+    def combine_group(y, tok_sorted, gate_sorted, keep, slot):
+        vals = y.reshape(E * C, d).at[slot].get(mode="fill", fill_value=0.0)
+        vals = vals * (gate_sorted * keep)[:, None]
+        out = jnp.zeros((g, d), jnp.float32)
+        return out.at[tok_sorted].add(vals.astype(jnp.float32))
+
+    out = jax.vmap(combine_group)(ye, toks, gates, keeps, slots)
+    return out.astype(xg.dtype), _aux_loss(probs, idx, m)
+
+
+def moe_apply(params: dict, x: jax.Array, m: MoECfg, act: str):
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    g = min(m.group_size, T)
+    assert T % g == 0, (T, g)
+    xg = x.reshape(T // g, g, d)
+    xg = shard(xg, ("dp", None, None))
+    if m.impl == "sort":
+        out, aux = _moe_sort(params, xg, m, act)
+    else:
+        out, aux = _moe_einsum(params, xg, m, act)
+    out = out.reshape(B, S, d)
+    if "shared" in params:
+        y = mlp_apply(params["shared"], x, act, gated=True)
+        if "shared_gate" in params:
+            gate = jax.nn.sigmoid(
+                jnp.einsum("bsd,do->bso", x.astype(jnp.float32),
+                           params["shared_gate"].astype(jnp.float32)))
+            y = (y.astype(jnp.float32) * gate).astype(x.dtype)
+        out = out + y
+    return out, aux

@@ -1,0 +1,570 @@
+"""Recurrent sequence-mixing blocks: RG-LRU (Griffin), mLSTM & sLSTM (xLSTM).
+
+Each block provides:
+- ``init_*``    — parameter construction,
+- ``*_seq``     — full-sequence application (training / prefill),
+- ``*_step``    — single-token application with carried state (decode).
+
+Training-time forms are TPU-friendly: RG-LRU uses an associative scan,
+mLSTM uses the chunkwise-parallel stabilized form (carry (C, n, m) across
+chunks, quadratic only within a chunk), sLSTM is inherently sequential
+(recurrent weights) and uses lax.scan.  The Pallas kernels in
+``repro.kernels`` mirror rglru_seq and the mLSTM chunk recurrence.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import act_fn, dense_init, init_rmsnorm, rmsnorm
+
+RGLRU_C = 8.0  # Griffin's fixed gate sharpness constant
+SLSTM_REMAT_CELL = True  # perf lever (see EXPERIMENTS.md §Perf xlstm cell)
+# Scan unroll was tried as a cheap way to let XLA merge the per-step
+# recurrent-weight-gradient psums — refuted (no reassociation across the
+# unrolled body); kept configurable for the record (§Perf).
+SLSTM_SCAN_UNROLL = 1
+# The decisive fix is the hand-written VJP below: the batch-contracted
+# dR = Σ_t outer(h_{t-1}, dgate_t) is deferred to ONE einsum outside the
+# backward loop, so the sharded-batch reduction costs a single psum instead
+# of one per time step (measured: 97% of the cell's collective bytes).
+SLSTM_CUSTOM_VJP = True
+
+
+# ------------------------------------------------- sLSTM custom-VJP scan
+
+
+def _gate_preacts(R, pre_stack, h_shift, num_heads):
+    """a_g = pre_g + R_g · h_{t-1}, vectorized over time.
+
+    R (4,H,dh,dh); pre_stack (4,S,B,d); h_shift (S,B,d) = [h0, h_0..h_{S-2}].
+    Returns (4,S,B,d) f32.
+    """
+    S, B, d = h_shift.shape
+    hh = h_shift.reshape(S, B, num_heads, d // num_heads)
+    rec = jnp.einsum("sbhx,ghxy->gsbhy", hh, R)
+    return pre_stack + rec.reshape(4, S, B, d)
+
+
+def _slstm_forward_seqs(R, pre_stack, num_heads):
+    """Sequential forward; returns (h_seq, c_seq, n_seq, m_seq), each (S,B,d),
+    plus h0-prepended h_shift.  Minimal residuals: gates recompute from these.
+    """
+    _, S, B, d = pre_stack.shape
+    dh = d // num_heads
+
+    def step(state, pre_t):
+        h, c, n, m = state
+        hh = h.reshape(B, num_heads, dh)
+        rec = jnp.einsum("bhx,ghxy->gbhy", hh, R).reshape(4, B, d)
+        a = pre_t + rec  # (4,B,d): z,i,f,o
+        z = jnp.tanh(a[0])
+        o = jax.nn.sigmoid(a[3])
+        lf = jax.nn.log_sigmoid(a[2])
+        m_next = jnp.maximum(lf + m, a[1])
+        i_sc = jnp.exp(a[1] - m_next)
+        f_sc = jnp.exp(lf + m - m_next)
+        c_next = f_sc * c + i_sc * z
+        n_next = jnp.maximum(f_sc * n + i_sc, 1e-6)
+        h_next = o * (c_next / n_next)
+        return (h_next, c_next, n_next, m_next), (h_next, c_next, n_next, m_next)
+
+    z0 = jnp.zeros((B, d), jnp.float32)
+    state0 = (z0, z0, jnp.full((B, d), 1e-6, jnp.float32), z0)
+    _, seqs = jax.lax.scan(step, state0, pre_stack.transpose(1, 0, 2, 3))
+    return seqs, state0
+
+
+def _slstm_scan_impl(R, pre_stack, num_heads):
+    (h_seq, _c, _n, _m), _ = _slstm_forward_seqs(R, pre_stack, num_heads)
+    return h_seq
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _slstm_scan(R, pre_stack, num_heads):
+    """hs (S,B,d) = sLSTM over pre-activations with recurrent weights R."""
+    return _slstm_scan_impl(R, pre_stack, num_heads)
+
+
+def _slstm_scan_fwd(R, pre_stack, num_heads):
+    seqs, state0 = _slstm_forward_seqs(R, pre_stack, num_heads)
+    return seqs[0], (R, pre_stack, seqs, state0)
+
+
+def _slstm_scan_bwd(num_heads, res, dhs):
+    """Reverse pass with all weight-gradient reductions deferred.
+
+    Residuals: only the four state sequences.  Gate quantities recompute
+    *vectorized* over time; the sequential part is elementwise + constant-R
+    matvecs (batch-local — no collective); dR is ONE einsum at the end, so
+    the sharded-batch contraction costs a single psum for the whole scan
+    (vs one per time step under plain autodiff)."""
+    R, pre_stack, (h_seq, c_seq, n_seq, m_seq), state0 = res
+    S, B, d = h_seq.shape
+    dh = d // num_heads
+    h0, c0, n0, m0 = state0
+
+    def shift(seq, init):
+        return jnp.concatenate([init[None], seq[:-1]], axis=0)
+
+    h_prev = shift(h_seq, h0)
+    c_prev = shift(c_seq, c0)
+    n_prev = shift(n_seq, n0)
+    m_prev = shift(m_seq, m0)
+
+    # recompute gate quantities, vectorized over time (no loop, no psum-per-step)
+    a = _gate_preacts(R, pre_stack, h_prev, num_heads)  # (4,S,B,d)
+    z = jnp.tanh(a[0])
+    o = jax.nn.sigmoid(a[3])
+    lf = jax.nn.log_sigmoid(a[2])
+    sg_naf = jax.nn.sigmoid(-a[2])  # d log_sigmoid(a_f)/d a_f
+    i_sc = jnp.exp(a[1] - m_seq)
+    f_sc = jnp.exp(lf + m_prev - m_seq)
+    n_pre = f_sc * n_prev + i_sc
+    uncl = (n_pre > 1e-6).astype(jnp.float32)
+    mxl = ((lf + m_prev) >= a[1]).astype(jnp.float32)  # m-max takes left branch
+    u = c_seq / n_seq
+
+    def bwd_step(carry, xs):
+        Dc_c, Dn_c, Dm_c, Dh_c = carry
+        (dh_out, z_t, o_t, sgnaf_t, i_t, f_t, u_t, cp, npv, nt,
+         uncl_t, mxl_t) = xs
+        Dh = dh_out + Dh_c
+        Da_o = Dh * u_t * o_t * (1.0 - o_t)
+        Dc = Dc_c + Dh * o_t / nt
+        Dn_tot = Dn_c - Dh * o_t * u_t / nt
+        Dn_pre = Dn_tot * uncl_t  # n_t = max(n_pre, eps)
+        Df = Dc * cp + Dn_pre * npv  # onto f_sc
+        Di = Dc * z_t + Dn_pre  # onto i_sc
+        Dz = Dc * i_t
+        Dc_prev = Dc * f_t
+        Dn_prev = Dn_pre * f_t
+        # i_sc = exp(a_i - m_t); f_sc = exp(lf + m_prev - m_t)
+        Da_i = Di * i_t
+        Dm_t = Dm_c - Di * i_t - Df * f_t
+        Dlf = Df * f_t
+        Dm_prev = Df * f_t
+        # m_t = max(lf + m_prev, a_i)
+        Dlf = Dlf + Dm_t * mxl_t
+        Dm_prev = Dm_prev + Dm_t * mxl_t
+        Da_i = Da_i + Dm_t * (1.0 - mxl_t)
+        Da_f = Dlf * sgnaf_t
+        Da_z = Dz * (1.0 - z_t * z_t)
+        Da = jnp.stack([Da_z, Da_i, Da_f, Da_o])  # (4,B,d)
+        # h_{t-1} chain through the recurrent matvecs (R constant here)
+        Da_h = Da.reshape(4, B, num_heads, dh)
+        Dh_prev = jnp.einsum("gbhy,ghxy->bhx", Da_h, R).reshape(B, d)
+        return (Dc_prev, Dn_prev, Dm_prev, Dh_prev), Da
+
+    zero = jnp.zeros((B, d), jnp.float32)
+    xs = (dhs, z, o, sg_naf, i_sc, f_sc, u, c_prev, n_prev, n_seq, uncl, mxl)
+    _, Das = jax.lax.scan(bwd_step, (zero, zero, zero, zero), xs, reverse=True)
+    # Das: (S,4,B,d).  Deferred weight grads: ONE batch+time contraction.
+    Da_heads = Das.reshape(S, 4, B, num_heads, dh)
+    hp_heads = h_prev.reshape(S, B, num_heads, dh)
+    DR = jnp.einsum("sbhx,sgbhy->ghxy", hp_heads, Da_heads)
+    Dpre = Das.transpose(1, 0, 2, 3)  # (4,S,B,d)
+    return DR, Dpre
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+# -------------------------------------------------------------------- rg-lru
+
+
+def init_rglru(key, d: int, d_rnn: int, conv_width: int) -> dict:
+    ks = jax.random.split(key, 8)
+    # Λ init so that a = exp(-c*softplus(Λ)) is spread in [0.9, 0.999] (Griffin §2.4)
+    u = jax.random.uniform(ks[6], (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # softplus^-1(-log(u)/c)
+    return {
+        "w_x": dense_init(ks[0], (d, d_rnn)),
+        "w_g": dense_init(ks[1], (d, d_rnn)),
+        "conv_w": dense_init(ks[2], (conv_width, d_rnn)),
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "w_a": dense_init(ks[3], (d_rnn, d_rnn)),
+        "b_a": jnp.zeros((d_rnn,), jnp.float32),
+        "w_i": dense_init(ks[4], (d_rnn, d_rnn)),
+        "b_i": jnp.zeros((d_rnn,), jnp.float32),
+        "lam": lam,
+        "w_o": dense_init(ks[5], (d_rnn, d)),
+    }
+
+
+def causal_conv_seq(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    out = x * w[W - 1].astype(x.dtype)
+    for j in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[W - 1 - j].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def causal_conv_step(x: jax.Array, state: jax.Array, w: jax.Array, b: jax.Array):
+    """x (B,C); state (B,W-1,C) holds the previous W-1 inputs (oldest first)."""
+    W = w.shape[0]
+    window = jnp.concatenate([state, x[:, None]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w) + b
+    new_state = window[:, 1:]
+    return out.astype(x.dtype), new_state
+
+
+def _rglru_gates(params, xr):
+    """xr (..., d_rnn) post-conv input -> (log_a f32, b_input f32)."""
+    x32 = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(x32 @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r  # (..., d_rnn), <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * x32)
+    return log_a, b
+
+
+def rglru_seq(params: dict, x: jax.Array, return_state: bool = False):
+    """Full RG-LRU sequence mix.  x (B,S,d) (already normed) -> (B,S,d)."""
+    dt = x.dtype
+    gate = act_fn("gelu")(x @ params["w_g"].astype(dt))
+    xr_pre = x @ params["w_x"].astype(dt)
+    xr = causal_conv_seq(xr_pre, params["conv_w"], params["conv_b"])
+    log_a, b = _rglru_gates(params, xr)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al + ar, bl * jnp.exp(ar) + br
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    out = ((h.astype(dt) * gate) @ params["w_o"].astype(dt)).astype(dt)
+    if return_state:
+        state = {"h": h[:, -1].astype(jnp.float32),
+                 "conv": _conv_tail(xr_pre, params["conv_w"].shape[0])}
+        return out, state
+    return out
+
+
+def _conv_tail(x_pre: jax.Array, W: int) -> jax.Array:
+    """Last W-1 pre-conv inputs (zero-padded at the front), oldest first."""
+    B, S, C = x_pre.shape
+    n = W - 1
+    if S >= n:
+        return x_pre[:, S - n:]
+    pad = jnp.zeros((B, n - S, C), x_pre.dtype)
+    return jnp.concatenate([pad, x_pre], axis=1)
+
+
+def rglru_step(params: dict, x: jax.Array, state: dict):
+    """One decode step.  x (B,d); state {h (B,dr) f32, conv (B,W-1,dr)}."""
+    dt = x.dtype
+    gate = act_fn("gelu")(x @ params["w_g"].astype(dt))
+    xr = x @ params["w_x"].astype(dt)
+    xr, conv_state = causal_conv_step(xr, state["conv"], params["conv_w"], params["conv_b"])
+    log_a, b = _rglru_gates(params, xr)
+    h = state["h"] * jnp.exp(log_a) + b
+    out = ((h.astype(dt) * gate) @ params["w_o"].astype(dt)).astype(dt)
+    return out, {"h": h, "conv": conv_state}
+
+
+def rglru_init_state(batch: int, d_rnn: int, conv_width: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+    }
+
+
+# --------------------------------------------------------------------- mlstm
+
+
+def init_mlstm(key, d: int, num_heads: int, conv_width: int) -> dict:
+    di = 2 * d  # up-projection factor 2
+    dk = di // num_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di)),  # (x_inner, z-gate)
+        "conv_w": dense_init(ks[1], (conv_width, di)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": dense_init(ks[2], (di, num_heads, dk)),
+        "wk": dense_init(ks[3], (di, num_heads, dk)),
+        "wv": dense_init(ks[4], (di, num_heads, dk)),
+        "w_i": dense_init(ks[5], (di, num_heads)),
+        "b_i": jnp.full((num_heads,), -3.0, jnp.float32),
+        "w_f": dense_init(ks[6], (di, num_heads)),
+        "b_f": jnp.linspace(3.0, 6.0, num_heads).astype(jnp.float32),
+        "gn": init_rmsnorm(di),
+        "w_down": dense_init(ks[7], (di, d)),
+    }
+
+
+def _mlstm_qkvif(params, xc, x_inner, num_heads):
+    """Project conv output / inner stream to per-head q,k,v and gate preacts."""
+    dt = xc.dtype
+    q = jnp.einsum("bsd,dhe->bshe", xc, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", xc, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x_inner, params["wv"].astype(dt))
+    i_pre = jnp.einsum("bsd,dh->bsh", xc.astype(jnp.float32), params["w_i"]) + params["b_i"]
+    f_pre = jnp.einsum("bsd,dh->bsh", xc.astype(jnp.float32), params["w_f"]) + params["b_f"]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_chunk_recurrence(q, k, v, i_pre, f_pre, *, chunk: int = 128,
+                           return_final: bool = False):
+    """Chunkwise-parallel stabilized mLSTM recurrence (the ref the Pallas
+    kernel mirrors).
+
+    q,k,v: (B,S,H,dk) ; i_pre,f_pre: (B,S,H) preactivations.
+    Returns h (B,S,H,dk) f32.
+    """
+    B, S, H, dk = q.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    scale = 1.0 / math.sqrt(dk)
+
+    # (B,H,nc,c,dk) layouts
+    qs = q.transpose(0, 2, 1, 3).reshape(B, H, nc, c, dk).astype(jnp.float32) * scale
+    ks = k.transpose(0, 2, 1, 3).reshape(B, H, nc, c, dk).astype(jnp.float32)
+    vs = v.transpose(0, 2, 1, 3).reshape(B, H, nc, c, dk).astype(jnp.float32)
+    log_i = i_pre.transpose(0, 2, 1).reshape(B, H, nc, c)
+    log_f = jax.nn.log_sigmoid(f_pre).transpose(0, 2, 1).reshape(B, H, nc, c)
+
+    def body(carry, xs_t):
+        C, n, m = carry  # (B,H,dk,dk), (B,H,dk), (B,H)
+        qt, kt, vt, li, lf = xs_t  # (B,H,c,dk) ... (B,H,c)
+        csum = jnp.cumsum(lf, axis=-1)  # b_i: decay from chunk start to i
+        total = csum[..., -1:]  # (B,H,1)
+        # intra-chunk log weights D[i,j] = csum_i - csum_j + li_j (j <= i)
+        D = csum[..., :, None] - csum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        D = jnp.where(tri, D, -jnp.inf)
+        g = csum + m[..., None]  # inter contribution magnitude per position
+        m_i = jnp.maximum(jnp.max(D, axis=-1), g)  # (B,H,c)
+        w_intra = jnp.exp(D - m_i[..., None])
+        S_qk = jnp.einsum("bhqd,bhkd->bhqk", qt, kt)
+        W = S_qk * w_intra
+        inter_scale = jnp.exp(g - m_i)  # (B,H,c)
+        num = jnp.einsum("bhqk,bhkd->bhqd", W, vt) + inter_scale[..., None] * jnp.einsum(
+            "bhqd,bhde->bhqe", qt, C)
+        den = jnp.sum(W, axis=-1) + inter_scale * jnp.einsum("bhqd,bhd->bhq", qt, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # carry update to the end of the chunk
+        dec = total - csum + li  # (B,H,c): weight of k_j v_j at chunk end
+        m_next = jnp.maximum(m + total[..., 0], jnp.max(dec, axis=-1))
+        w_new = jnp.exp(dec - m_next[..., None])
+        C_next = jnp.exp(m + total[..., 0] - m_next)[..., None, None] * C + jnp.einsum(
+            "bhk,bhkd,bhke->bhde", w_new, kt, vt)
+        n_next = jnp.exp(m + total[..., 0] - m_next)[..., None] * n + jnp.einsum(
+            "bhk,bhkd->bhd", w_new, kt)
+        return (C_next, n_next, m_next), h
+
+    C0 = jnp.zeros((B, H, dk, dk), jnp.float32)
+    n0 = jnp.zeros((B, H, dk), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    xs = (qs.transpose(2, 0, 1, 3, 4), ks.transpose(2, 0, 1, 3, 4),
+          vs.transpose(2, 0, 1, 3, 4), log_i.transpose(2, 0, 1, 3),
+          log_f.transpose(2, 0, 1, 3))
+    final, hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    # hs (nc,B,H,c,dk) -> (B,S,H,dk)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dk)
+    if return_final:
+        return h, final
+    return h
+
+
+def mlstm_seq(params: dict, x: jax.Array, num_heads: int, *, chunk: int = 128,
+              recurrence=None, return_state: bool = False):
+    """Full mLSTM block mix.  x (B,S,d) normed -> (B,S,d).
+
+    ``recurrence`` may override the chunk recurrence with a Pallas kernel.
+    """
+    dt = x.dtype
+    di = 2 * x.shape[-1]
+    up = x @ params["w_up"].astype(dt)
+    x_inner, z = up[..., :di], up[..., di:]
+    xc = causal_conv_seq(x_inner, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, xc, x_inner, num_heads)
+    if return_state:
+        h, (C, n, m) = mlstm_chunk_recurrence(q, k, v, i_pre, f_pre, chunk=chunk,
+                                              return_final=True)
+    else:
+        rec_fn = recurrence or mlstm_chunk_recurrence
+        h = rec_fn(q, k, v, i_pre, f_pre, chunk=chunk)  # (B,S,H,dk) f32
+    B, S = x.shape[:2]
+    h = h.reshape(B, S, di)
+    h = rmsnorm(h.astype(dt), params["gn"]["scale"])
+    h = h * jax.nn.silu(z)
+    out = (h @ params["w_down"].astype(dt)).astype(dt)
+    if return_state:
+        state = {"C": C, "n": n, "m": m,
+                 "conv": _conv_tail(x_inner, params["conv_w"].shape[0])}
+        return out, state
+    return out
+
+
+def mlstm_step(params: dict, x: jax.Array, state: dict, num_heads: int):
+    """One decode step.  x (B,d); state {C (B,H,dk,dk), n, m, conv}."""
+    dt = x.dtype
+    di = 2 * x.shape[-1]
+    up = x @ params["w_up"].astype(dt)
+    x_inner, z = up[..., :di], up[..., di:]
+    xc, conv_state = causal_conv_step(x_inner, state["conv"], params["conv_w"],
+                                      params["conv_b"])
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("bd,dhe->bhe", xc, params["wq"].astype(dt)).astype(jnp.float32)
+    k = jnp.einsum("bd,dhe->bhe", xc, params["wk"].astype(dt)).astype(jnp.float32)
+    v = jnp.einsum("bd,dhe->bhe", x_inner, params["wv"].astype(dt)).astype(jnp.float32)
+    i_pre = jnp.einsum("bd,dh->bh", xc.astype(jnp.float32), params["w_i"]) + params["b_i"]
+    f_pre = jnp.einsum("bd,dh->bh", xc.astype(jnp.float32), params["w_f"]) + params["b_f"]
+    log_f = jax.nn.log_sigmoid(f_pre)
+    dk = q.shape[-1]
+    q = q / math.sqrt(dk)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_next = jnp.maximum(log_f + m, i_pre)
+    f_sc = jnp.exp(log_f + m - m_next)
+    i_sc = jnp.exp(i_pre - m_next)
+    C_next = f_sc[..., None, None] * C + i_sc[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n_next = f_sc[..., None] * n + i_sc[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_next)
+    den = jnp.einsum("bhd,bhd->bh", q, n_next)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_next))[..., None]
+    B = x.shape[0]
+    h = h.reshape(B, di)
+    h = rmsnorm(h.astype(dt), params["gn"]["scale"])
+    h = h * jax.nn.silu(z)
+    out = (h @ params["w_down"].astype(dt)).astype(dt)
+    return out, {"C": C_next, "n": n_next, "m": m_next, "conv": conv_state}
+
+
+def mlstm_init_state(batch: int, d: int, num_heads: int, conv_width: int,
+                     dtype=jnp.bfloat16) -> dict:
+    di = 2 * d
+    dk = di // num_heads
+    return {
+        "C": jnp.zeros((batch, num_heads, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, dk), jnp.float32),
+        "m": jnp.zeros((batch, num_heads), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, di), dtype),
+    }
+
+
+# --------------------------------------------------------------------- slstm
+
+
+def init_slstm(key, d: int, num_heads: int) -> dict:
+    dh = d // num_heads
+    ks = jax.random.split(key, 12)
+    p = {}
+    for gi, gate in enumerate(("z", "i", "f", "o")):
+        p[f"w_{gate}"] = dense_init(ks[2 * gi], (d, d))
+        p[f"r_{gate}"] = dense_init(ks[2 * gi + 1], (num_heads, dh, dh))
+        p[f"b_{gate}"] = (jnp.linspace(3.0, 6.0, d).astype(jnp.float32)
+                          if gate == "f" else jnp.zeros((d,), jnp.float32))
+    p["gn"] = init_rmsnorm(d)
+    p["w_o_proj"] = dense_init(ks[8], (d, d))
+    d_ff = max(int(round(d * 4 / 3 / 64) * 64), 64)
+    p["ffn"] = {
+        "norm": init_rmsnorm(d),
+        "w_gate": dense_init(ks[9], (d, d_ff)),
+        "w_up": dense_init(ks[10], (d, d_ff)),
+        "w_down": dense_init(ks[11], (d_ff, d)),
+    }
+    return p
+
+
+def _slstm_cell(params, x_pre: dict, state: dict, num_heads: int):
+    """One sLSTM step from precomputed input projections.
+
+    x_pre: dict gate -> (B,d) f32 input contributions (W_g x + b_g).
+    state: {h (B,d), c (B,d), n (B,d), m (B,d)} f32.
+    """
+    B, d = x_pre["z"].shape
+    dh = d // num_heads
+    h_heads = state["h"].reshape(B, num_heads, dh)
+
+    def rec(gate):
+        r = jnp.einsum("bhx,hxy->bhy", h_heads, params[f"r_{gate}"]).reshape(B, d)
+        return x_pre[gate] + r
+
+    z = jnp.tanh(rec("z"))
+    i_pre = rec("i")
+    f_pre = rec("f")
+    o = jax.nn.sigmoid(rec("o"))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_next = jnp.maximum(log_f + state["m"], i_pre)
+    i_sc = jnp.exp(i_pre - m_next)
+    f_sc = jnp.exp(log_f + state["m"] - m_next)
+    c_next = f_sc * state["c"] + i_sc * z
+    n_next = jnp.maximum(f_sc * state["n"] + i_sc, 1e-6)
+    h_next = o * (c_next / n_next)
+    return {"h": h_next, "c": c_next, "n": n_next, "m": m_next}
+
+
+def slstm_seq(params: dict, x: jax.Array, num_heads: int,
+              return_state: bool = False):
+    """Full sLSTM block (cell + GN + out proj + gated FFN residual inside)."""
+    dt = x.dtype
+    B, S, d = x.shape
+    x32 = x.astype(jnp.float32)
+    pre = {g: x32 @ params[f"w_{g}"] + params[f"b_{g}"] for g in ("z", "i", "f", "o")}
+    state0 = slstm_init_state(B, d)
+
+    if SLSTM_CUSTOM_VJP and not return_state:
+        R = jnp.stack([params[f"r_{g}"] for g in ("z", "i", "f", "o")])
+        pre_stack = jnp.stack([pre[g].transpose(1, 0, 2)
+                               for g in ("z", "i", "f", "o")])  # (4,S,B,d)
+        hs = _slstm_scan(R, pre_stack, num_heads)  # (S,B,d)
+        final = None
+    else:
+        # checkpoint the cell: the scan's backward otherwise stashes every
+        # per-step gate intermediate (~12 full (S,B,d) f32 buffers/layer);
+        # recompute is nearly free.  SLSTM_REMAT_CELL exists so §Perf can
+        # measure the before/after.
+        def body(state, xs):
+            state = _slstm_cell(params, {g: xs[gi] for gi, g in
+                                         enumerate(("z", "i", "f", "o"))},
+                                state, num_heads)
+            return state, state["h"]
+
+        if SLSTM_REMAT_CELL:
+            body = jax.checkpoint(body)
+
+        xs = tuple(pre[g].transpose(1, 0, 2) for g in ("z", "i", "f", "o"))
+        final, hs = jax.lax.scan(body, state0, xs,
+                                 unroll=min(SLSTM_SCAN_UNROLL, S))
+    h = hs.transpose(1, 0, 2).astype(dt)  # (B,S,d)
+    h = rmsnorm(h, params["gn"]["scale"])
+    out = (h @ params["w_o_proj"].astype(dt)).astype(dt)
+    # gated FFN sub-layer (xLSTM post-up projection, pf 4/3)
+    y = rmsnorm(out + x, params["ffn"]["norm"]["scale"])
+    g = jax.nn.gelu((y @ params["ffn"]["w_gate"].astype(dt)).astype(jnp.float32))
+    u = (y @ params["ffn"]["w_up"].astype(dt)).astype(jnp.float32)
+    ff = ((g * u).astype(dt) @ params["ffn"]["w_down"].astype(dt)).astype(dt)
+    result = out + ff  # caller adds the block-input residual
+    if return_state:
+        return result, final
+    return result
+
+
+def slstm_step(params: dict, x: jax.Array, state: dict, num_heads: int):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    pre = {g: x32 @ params[f"w_{g}"] + params[f"b_{g}"] for g in ("z", "i", "f", "o")}
+    new_state = _slstm_cell(params, pre, state, num_heads)
+    h = rmsnorm(new_state["h"].astype(dt), params["gn"]["scale"])
+    out = (h @ params["w_o_proj"].astype(dt)).astype(dt)
+    y = rmsnorm(out + x, params["ffn"]["norm"]["scale"])
+    g = jax.nn.gelu((y @ params["ffn"]["w_gate"].astype(dt)).astype(jnp.float32))
+    u = (y @ params["ffn"]["w_up"].astype(dt)).astype(jnp.float32)
+    ff = ((g * u).astype(dt) @ params["ffn"]["w_down"].astype(dt)).astype(dt)
+    return out + ff, new_state
+
+
+def slstm_init_state(batch: int, d: int) -> dict:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.full((batch, d), 1e-6, jnp.float32), "m": z}

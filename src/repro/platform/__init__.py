@@ -1,0 +1,196 @@
+"""Cloud-native Streams platform: the paper's architecture, end to end.
+
+``Platform`` wires the resource store, the instance operator (controllers /
+conductors / coordinators), the consistent-region operator, the cluster
+substrate (scheduler + kubelets), and the data-plane fabric into a running
+system.  See DESIGN.md for the paper mapping.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from ..ckpt import CheckpointStore
+from ..core import CausalTrace, Coordinator, ResourceStore, Runtime, wait_for
+from . import crds
+from .cluster import KubeletController, SchedulerController
+from .fabric import Fabric
+from .operator import (
+    ConsistentRegionController,
+    ConsistentRegionOperator,
+    ExportController,
+    ImportController,
+    JobConductor,
+    JobController,
+    ParallelRegionController,
+    PEController,
+    PodConductor,
+    PodController,
+    RestFacade,
+    StragglerMonitor,
+    SubscriptionBroker,
+)
+from .pipeline import plan_job
+
+
+class Platform:
+    """One namespace's worth of cloud-native Streams."""
+
+    def __init__(self, namespace: str = "default", num_nodes: int = 4,
+                 cores_per_node: int = 8, ckpt_root: str | None = None,
+                 wal_path: str | None = None, dns_delay: float = 0.0,
+                 threaded: bool = True, with_cluster: bool = True,
+                 store: ResourceStore | None = None):
+        self.namespace = namespace
+        self.store = store or ResourceStore(wal_path=wal_path)
+        self.trace = CausalTrace()
+        self.fabric = Fabric(dns_delay=dns_delay)
+        self.ckpt = CheckpointStore(ckpt_root or tempfile.mkdtemp(prefix="repro-ckpt-"))
+
+        coords = {
+            "job": Coordinator(self.store, crds.JOB, namespace, trace=self.trace),
+            "pe": Coordinator(self.store, crds.PE, namespace, trace=self.trace),
+            "pod": Coordinator(self.store, crds.POD, namespace, trace=self.trace),
+            "cr": Coordinator(self.store, crds.CONSISTENT_REGION, namespace,
+                              trace=self.trace),
+        }
+        self.coords = coords
+        self.rest = RestFacade(self.store, coords["pod"], self.ckpt, namespace)
+
+        # --- instance operator actors
+        self.job_controller = JobController(self.store, namespace, coords, self.trace)
+        self.pe_controller = PEController(self.store, namespace, coords, self.trace)
+        self.pod_controller = PodController(self.store, namespace, coords, self.trace)
+        self.pr_controller = ParallelRegionController(self.store, namespace,
+                                                      coords, self.trace)
+        self.import_controller = ImportController(self.store, namespace, self.trace)
+        self.export_controller = ExportController(self.store, namespace, self.trace)
+        self.cr_controller = ConsistentRegionController(self.store, namespace,
+                                                        self.trace)
+        self.pod_conductor = PodConductor(self.store, namespace, coords, self.trace)
+        self.job_conductor = JobConductor(self.store, namespace, coords, self.trace)
+        self.broker = SubscriptionBroker(self.store, namespace, self.fabric,
+                                         self.trace)
+        self.cr_operator = ConsistentRegionOperator(self.store, namespace, coords,
+                                                    self.fabric, self.ckpt,
+                                                    self.trace)
+        self.rest.cr_operator = self.cr_operator
+        self.rest.broker = self.broker
+        self.straggler_monitor = StragglerMonitor(self.store, namespace,
+                                                  coords["pod"], self.trace)
+
+        # conductor registration (paper Fig. 4 observation matrix)
+        self.pe_controller.add_listener(self.pod_conductor)
+        self.pe_controller.add_listener(self.job_conductor)
+        self.pod_controller.add_listener(self.pod_conductor)
+        self.pod_controller.add_listener(self.job_conductor)
+        self.pod_controller.add_listener(self.cr_operator)
+        self.job_controller.add_listener(self.job_conductor)
+        self.import_controller.add_listener(self.broker)
+        self.export_controller.add_listener(self.broker)
+        self.cr_controller.add_listener(self.cr_operator)
+
+        # ConfigMap/Service events reach conductors through dedicated
+        # lightweight controllers (a controller tracks exactly one kind).
+        from ..core import Controller
+
+        self.cm_controller = Controller(self.store, crds.CONFIG_MAP, namespace,
+                                        "configmap-controller", self.trace)
+        self.svc_controller = Controller(self.store, crds.SERVICE, namespace,
+                                         "service-controller", self.trace)
+        self.cm_controller.add_listener(self.pod_conductor)
+        self.cm_controller.add_listener(self.job_conductor)
+        self.svc_controller.add_listener(self.pod_conductor)
+        self.svc_controller.add_listener(self.job_conductor)
+
+        controllers = [
+            self.job_controller, self.pe_controller, self.pod_controller,
+            self.pr_controller, self.import_controller, self.export_controller,
+            self.cr_controller, self.cm_controller, self.svc_controller,
+        ]
+
+        # --- cluster substrate (Kubernetes's half)
+        self.kubelet = None
+        if with_cluster:
+            self.scheduler = SchedulerController(self.store, coords["pod"],
+                                                 namespace, self.trace)
+            self.kubelet = KubeletController(self.store, coords["pod"],
+                                             self.fabric, self.rest, namespace,
+                                             self.trace)
+            controllers += [self.scheduler, self.kubelet]
+            for i in range(num_nodes):
+                self.store.create(crds.make_node(f"node{i}", cores_per_node))
+
+        self.runtime = Runtime(self.store, threaded=threaded)
+        for c in controllers:
+            self.runtime.register(c)
+
+    # ------------------------------------------------------------- actions
+
+    def submit(self, name: str, spec: dict):
+        return self.store.create(crds.make_job(name, spec, self.namespace))
+
+    def delete_job(self, name: str) -> None:
+        self.store.try_delete(crds.JOB, name, self.namespace)
+
+    def set_width(self, job: str, region: str, width: int) -> None:
+        """kubectl edit parallelregion ... (paper §6.3)."""
+
+        def edit(res):
+            res.spec["width"] = width
+
+        self.store.update(crds.PARALLEL_REGION, crds.pr_name(job, region), edit,
+                          namespace=self.namespace)
+
+    def kill_pod(self, job: str, pe_id: int) -> bool:
+        assert self.kubelet is not None
+        return self.kubelet.kill_pod(crds.pod_name(job, pe_id))
+
+    # -------------------------------------------------------------- waits
+
+    def job_status(self, name: str) -> dict:
+        res = self.store.try_get(crds.JOB, name, self.namespace)
+        return dict(res.status) if res else {}
+
+    def wait_submitted(self, name: str, timeout: float = 30.0) -> bool:
+        return wait_for(lambda: self.job_status(name).get("state") == "Submitted",
+                        timeout)
+
+    def wait_full_health(self, name: str, timeout: float = 60.0) -> bool:
+        return wait_for(lambda: self.job_status(name).get("fullHealth"), timeout)
+
+    def wait_terminated(self, name: str, timeout: float = 60.0) -> bool:
+        def gone():
+            left = self.store.list(namespace=self.namespace,
+                                   label_selector=crds.job_labels(name))
+            return not left
+        return wait_for(gone, timeout)
+
+    def wait_cr_committed(self, job: str, region: str, step: int,
+                          timeout: float = 120.0) -> bool:
+        def ok():
+            st = self.rest.get_cr_state(job, region)
+            return st is not None and st.get("lastCommitted", -1) >= step
+        return wait_for(ok, timeout)
+
+    def pods(self, job: str) -> list:
+        return self.store.list(crds.POD, self.namespace, crds.job_labels(job))
+
+    def metrics(self, job: str) -> dict:
+        out = {}
+        for pod in self.pods(job):
+            if pod.status.get("metrics"):
+                out[pod.spec["peId"]] = pod.status["metrics"]
+        return out
+
+    def shutdown(self) -> None:
+        self.straggler_monitor.stop()
+        if self.kubelet is not None:
+            self.kubelet.stop_all()
+        self.runtime.stop()
+        self.store.close()
+
+
+__all__ = ["Platform", "crds", "plan_job"]

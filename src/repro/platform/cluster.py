@@ -1,0 +1,171 @@
+"""Cluster substrate: nodes, scheduler, kubelets.
+
+This is the "Kubernetes" half of the system (the part the paper *offloads
+to*): a scheduler controller that assigns pods to nodes honoring
+affinity/anti-affinity/nodeName constraints and balancing load, and kubelet
+controllers that start/stop the PE runtime for pods bound to their node.
+Pod *creation* and failure *handling* belong to the platform (instance
+operator), not here — exactly the paper's division of responsibility.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from ..core import Controller, Coordinator, Resource, ResourceStore
+from . import crds
+from .fabric import Fabric
+from .runtime import PERuntime
+
+
+class SchedulerController(Controller):
+    """Assigns ``nodeName`` to pending pods (paper §6.2 semantics)."""
+
+    def __init__(self, store: ResourceStore, pod_coord: Coordinator,
+                 namespace=None, trace=None):
+        super().__init__(store, crds.POD, namespace, "scheduler", trace)
+        self.pod_coord = pod_coord
+
+    def on_addition(self, res: Resource) -> None:
+        self._maybe_schedule(res)
+
+    def on_modification(self, old, new) -> None:
+        if not new.spec.get("nodeName") and new.status.get("phase") == "Pending":
+            self._maybe_schedule(new)
+
+    def _maybe_schedule(self, pod: Resource) -> None:
+        if pod.spec.get("nodeName"):
+            return
+        nodes = self.store.list(kind=crds.NODE)
+        if not nodes:
+            return
+        placed = [p for p in self.cache.values()
+                  if p.kind == crds.POD and p.spec.get("nodeName")]
+        by_node: dict = {}
+        for p in placed:
+            by_node.setdefault(p.spec["nodeName"], []).append(p)
+
+        want = pod.spec.get("pod_spec", {})
+        affinity = want.get("podAffinity", [])
+        anti = want.get("podAntiAffinity", [])
+        tags = set(want.get("nodeAffinityTags", []))
+        forced = want.get("nodeName")
+
+        def pod_labels(p):
+            return p.spec.get("pod_spec", {}).get("labels", {})
+
+        candidates = []
+        for node in nodes:
+            if forced and node.name != forced:
+                continue
+            if tags and not tags.issubset(set(node.labels)):
+                continue
+            here = by_node.get(node.name, [])
+            if any(lbl in pod_labels(p) for p in here for lbl in anti):
+                continue
+            if affinity:
+                anywhere = [p for p in placed
+                            if any(lbl in pod_labels(p) for lbl in affinity)]
+                if anywhere and not any(p.spec["nodeName"] == node.name
+                                        for p in anywhere):
+                    continue
+            load = len(here) / max(node.spec.get("cores", 8), 1)
+            candidates.append((load, node.name))
+        if not candidates:
+            self.pod_coord.submit_status(pod.name, {"phase": "Unschedulable"},
+                                         requester=self.name)
+            return
+        candidates.sort()
+        node_name = candidates[0][1]
+
+        def bind(res: Resource) -> None:
+            res.spec["nodeName"] = node_name
+
+        self.pod_coord.submit(pod.name, bind, requester=self.name)
+
+
+class PodHandle:
+    def __init__(self, runtime: PERuntime, stop_event: threading.Event):
+        self.runtime = runtime
+        self.stop_event = stop_event
+
+
+class KubeletController(Controller):
+    """Starts/stops PE runtimes for pods bound to nodes (all nodes in one
+    controller here — the per-node split is an artifact of real clusters)."""
+
+    def __init__(self, store: ResourceStore, pod_coord: Coordinator,
+                 fabric: Fabric, rest, namespace=None, trace=None):
+        super().__init__(store, crds.POD, namespace, "kubelet", trace)
+        self.pod_coord = pod_coord
+        self.fabric = fabric
+        self.rest = rest
+        self.handles: dict = {}
+        self._hlock = threading.Lock()
+
+    def on_addition(self, res: Resource) -> None:
+        self._maybe_start(res)
+
+    def on_modification(self, old, new) -> None:
+        self._maybe_start(new)
+
+    def on_deletion(self, res: Resource) -> None:
+        self.stop_pod(res.name)
+
+    def _maybe_start(self, pod: Resource) -> None:
+        if not pod.spec.get("nodeName") or pod.status.get("phase") != "Pending":
+            return
+        with self._hlock:
+            if pod.name in self.handles:
+                return
+            cm = self.store.try_get(crds.CONFIG_MAP,
+                                    crds.cm_name(pod.spec["job"], pod.spec["peId"]),
+                                    pod.namespace)
+            if cm is None:  # pod conductor guarantees this; guard anyway
+                return
+            stop = threading.Event()
+            runtime = PERuntime(
+                job=pod.spec["job"], pe_id=pod.spec["peId"],
+                metadata=cm.spec["data"], fabric=self.fabric, rest=self.rest,
+                launch_count=pod.spec.get("launchCount", 0), stop_event=stop,
+                on_exit=self._on_runtime_exit)
+            self.handles[pod.name] = PodHandle(runtime, stop)
+        self.pod_coord.submit_status(pod.name, {"phase": "Running"},
+                                     requester=self.name)
+        runtime.start()
+
+    def _on_runtime_exit(self, runtime: PERuntime) -> None:
+        pod_name = crds.pod_name(runtime.job, runtime.pe_id)
+        with self._hlock:
+            self.handles.pop(pod_name, None)
+        if runtime.crashed:
+            self.pod_coord.submit_status(pod_name, {"phase": "Failed"},
+                                         requester=self.name)
+        elif not runtime.stop_event.is_set():
+            self.pod_coord.submit_status(pod_name, {"phase": "Succeeded"},
+                                         requester=self.name)
+
+    def stop_pod(self, pod_name: str, timeout: float = 5.0) -> None:
+        with self._hlock:
+            handle = self.handles.pop(pod_name, None)
+        if handle:
+            handle.stop_event.set()
+            handle.runtime.join(timeout=timeout)
+
+    def kill_pod(self, pod_name: str) -> bool:
+        """Simulate an involuntary PE crash (test/benchmark hook)."""
+        with self._hlock:
+            handle = self.handles.pop(pod_name, None)
+        if not handle:
+            return False
+        handle.stop_event.set()
+        handle.runtime.join(timeout=5.0)
+        self.pod_coord.submit_status(pod_name, {"phase": "Failed"},
+                                     requester="chaos")
+        return True
+
+    def stop_all(self) -> None:
+        with self._hlock:
+            names = list(self.handles)
+        for n in names:
+            self.stop_pod(n)

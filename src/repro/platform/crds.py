@@ -1,0 +1,168 @@
+"""Custom resource definitions (paper Fig. 4) and their constructors.
+
+All platform state lives in these resources; everything else is ephemeral
+and recomputable.  Naming is hierarchical and deterministic (paper §7.5):
+PE ids are local to the job, port ids local to the PE, pod/configmap/service
+names are pure functions of (job, pe id) — nothing is stored that can be
+computed.
+"""
+
+from __future__ import annotations
+
+from ..core import OwnerRef, Resource
+
+JOB = "Job"
+PE = "ProcessingElement"
+PARALLEL_REGION = "ParallelRegion"
+HOSTPOOL = "HostPool"
+IMPORT = "Import"
+EXPORT = "Export"
+CONSISTENT_REGION = "ConsistentRegion"
+CONFIG_MAP = "ConfigMap"
+POD = "Pod"
+SERVICE = "Service"
+NODE = "Node"
+TEST_SUITE = "TestSuite"
+
+CUSTOM_KINDS = (JOB, PE, PARALLEL_REGION, HOSTPOOL, IMPORT, EXPORT,
+                CONSISTENT_REGION, TEST_SUITE)
+K8S_KINDS = (CONFIG_MAP, POD, SERVICE, NODE)
+
+
+# ------------------------------------------------------------ name helpers
+
+
+def pe_name(job: str, pe_id: int) -> str:
+    return f"{job}-pe-{pe_id}"
+
+
+def pod_name(job: str, pe_id: int) -> str:
+    return f"{job}-pe-{pe_id}"
+
+
+def cm_name(job: str, pe_id: int) -> str:
+    return f"{job}-pe-{pe_id}-config"
+
+
+def service_name(job: str, pe_id: int) -> str:
+    return f"{job}-pe-{pe_id}"
+
+
+def pr_name(job: str, region: str) -> str:
+    return f"{job}-pr-{region}"
+
+
+def cr_name(job: str, region: str) -> str:
+    return f"{job}-cr-{region}"
+
+
+def job_labels(job: str) -> dict:
+    return {"repro.ibm.com/job": job}
+
+
+# ----------------------------------------------------------- constructors
+
+
+def make_job(name: str, spec: dict, namespace: str = "default") -> Resource:
+    return Resource(kind=JOB, name=name, namespace=namespace, spec=spec,
+                    labels=job_labels(name))
+
+
+def make_pe(job: str, pe_id: int, spec: dict, namespace: str = "default") -> Resource:
+    return Resource(
+        kind=PE, name=pe_name(job, pe_id), namespace=namespace,
+        spec={"job": job, "peId": pe_id, **spec},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+        status={"launchCount": 0},
+    )
+
+
+def make_config_map(job: str, pe_id: int, data: dict, generation: int,
+                    namespace: str = "default") -> Resource:
+    return Resource(
+        kind=CONFIG_MAP, name=cm_name(job, pe_id), namespace=namespace,
+        spec={"job": job, "peId": pe_id, "data": data,
+              "jobGeneration": generation},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+    )
+
+
+def make_service(job: str, pe_id: int, ports: list,
+                 namespace: str = "default") -> Resource:
+    return Resource(
+        kind=SERVICE, name=service_name(job, pe_id), namespace=namespace,
+        spec={"job": job, "peId": pe_id, "ports": ports},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+    )
+
+
+def make_pod(job: str, pe_id: int, pod_spec: dict, launch_count: int,
+             generation: int, namespace: str = "default") -> Resource:
+    return Resource(
+        kind=POD, name=pod_name(job, pe_id), namespace=namespace,
+        spec={"job": job, "peId": pe_id, "launchCount": launch_count,
+              "jobGeneration": generation, **pod_spec},
+        labels={**job_labels(job), "repro.ibm.com/pe": str(pe_id)},
+        owner_refs=(OwnerRef(PE, pe_name(job, pe_id)),),
+        status={"phase": "Pending"},
+    )
+
+
+def make_parallel_region(job: str, region: str, width: int,
+                         namespace: str = "default") -> Resource:
+    return Resource(
+        kind=PARALLEL_REGION, name=pr_name(job, region), namespace=namespace,
+        spec={"job": job, "region": region, "width": width},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+    )
+
+
+def make_hostpool(job: str, name: str, tags: list,
+                  namespace: str = "default") -> Resource:
+    return Resource(
+        kind=HOSTPOOL, name=f"{job}-hp-{name}", namespace=namespace,
+        spec={"job": job, "name": name, "tags": tags},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+    )
+
+
+def make_export(job: str, op_name: str, stream: str, properties: dict,
+                namespace: str = "default") -> Resource:
+    return Resource(
+        kind=EXPORT, name=f"{job}-export-{op_name}", namespace=namespace,
+        spec={"job": job, "operator": op_name, "stream": stream,
+              "properties": properties},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+    )
+
+
+def make_import(job: str, op_name: str, subscription: dict,
+                namespace: str = "default") -> Resource:
+    return Resource(
+        kind=IMPORT, name=f"{job}-import-{op_name}", namespace=namespace,
+        spec={"job": job, "operator": op_name, "subscription": subscription},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+    )
+
+
+def make_consistent_region(job: str, region: str, spec: dict,
+                           namespace: str = "default") -> Resource:
+    return Resource(
+        kind=CONSISTENT_REGION, name=cr_name(job, region), namespace=namespace,
+        spec={"job": job, "region": region, **spec},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+        status={"state": "Idle", "lastCommitted": -1},
+    )
+
+
+def make_node(name: str, cores: int = 16, labels: dict | None = None) -> Resource:
+    return Resource(kind=NODE, name=name, spec={"cores": cores},
+                    labels=labels or {})

@@ -1,0 +1,169 @@
+"""Data-plane fabric: queues ("TCP"), name resolution ("DNS"), collectives
+("ICI") and checkpoint/abort epochs.
+
+The platform (controllers/conductors) never touches tuple or tensor data —
+exactly the paper's control/data-plane separation (§8 discussion).  PEs find
+each other through ``resolve`` (with a configurable propagation delay that
+reproduces the paper's DNS-latency observations), stream tuples over bounded
+queues, and data-parallel trainer shards combine gradients through
+``CollectiveGroup`` — the stand-in for ICI all-reduce, which on real
+hardware belongs to XLA, not the platform.
+
+``CollectiveGroup`` supports *epoch aborts*: when the consistent-region
+operator initiates rollback-and-recovery, in-flight barriers abort with
+``EpochAborted`` so surviving shards rewind to the committed checkpoint
+instead of deadlocking on a dead peer.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+
+class EpochAborted(Exception):
+    def __init__(self, epoch: int):
+        super().__init__(f"collective epoch aborted -> {epoch}")
+        self.epoch = epoch
+
+
+class ShutDown(Exception):
+    pass
+
+
+class TupleQueue:
+    """Bounded blocking queue standing in for a PE-PE TCP connection."""
+
+    def __init__(self, maxsize: int = 1024):
+        self._q = queue.Queue(maxsize=maxsize)
+        self.closed = False
+
+    def put(self, item, timeout: float = 10.0) -> None:
+        self._q.put(item, timeout=timeout)
+
+    def get(self, timeout: float = 0.2):
+        try:
+            return self._q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def drain(self) -> None:
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+    def __len__(self):
+        return self._q.qsize()
+
+
+class CollectiveGroup:
+    """Barrier-average over ``width`` contributors with abortable epochs."""
+
+    def __init__(self, width: int):
+        self.width = width
+        self.epoch = 0
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._contrib: dict = {}  # key -> list of values
+        self._result: dict = {}
+
+    def allreduce_mean(self, key, value, epoch: int, timeout: float = 30.0,
+                       rank: int = 0):
+        """Blocks until all ``width`` shards contribute (same epoch).
+
+        Contributions are summed in ``rank`` order so the float reduction is
+        deterministic regardless of thread arrival order — what makes
+        recovered training bit-identical to an uninterrupted run."""
+        import numpy as np
+
+        with self._cond:
+            if epoch != self.epoch:
+                raise EpochAborted(self.epoch)
+            bucket = self._contrib.setdefault((epoch, key), [])
+            bucket.append((rank, value))
+            if len(bucket) == self.width:
+                arrs = [v for _, v in sorted(bucket, key=lambda rv: rv[0])]
+                self._result[(epoch, key)] = [
+                    sum(np.asarray(a[i], dtype=np.float32) for a in arrs) / self.width
+                    for i in range(len(arrs[0]))
+                ]
+                self._cond.notify_all()
+            deadline = time.monotonic() + timeout
+            while (epoch, key) not in self._result:
+                if epoch != self.epoch:
+                    raise EpochAborted(self.epoch)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(f"collective {key} timed out")
+                self._cond.wait(timeout=min(remaining, 0.1))
+            res = self._result[(epoch, key)]
+            bucket = self._contrib.get((epoch, key))
+            if bucket is not None:
+                bucket.pop()
+                if not bucket:
+                    # last leaver cleans up
+                    self._contrib.pop((epoch, key), None)
+                    self._result.pop((epoch, key), None)
+            return res
+
+    def abort(self) -> int:
+        with self._cond:
+            self.epoch += 1
+            self._contrib.clear()
+            self._result.clear()
+            self._cond.notify_all()
+            return self.epoch
+
+
+class Fabric:
+    """Cluster-wide connection registry + DNS + collectives."""
+
+    def __init__(self, dns_delay: float = 0.0):
+        self._lock = threading.Lock()
+        self._endpoints: dict = {}  # (job, pe_id, port_id) -> TupleQueue
+        self._published_at: dict = {}
+        self._collectives: dict = {}  # (job, region) -> CollectiveGroup
+        self.dns_delay = dns_delay
+
+    def publish(self, job: str, pe_id: int, port_id: int, q: TupleQueue) -> None:
+        with self._lock:
+            self._endpoints[(job, pe_id, port_id)] = q
+            self._published_at[(job, pe_id, port_id)] = time.monotonic()
+
+    def unpublish_pe(self, job: str, pe_id: int) -> None:
+        with self._lock:
+            for key in list(self._endpoints):
+                if key[:2] == (job, pe_id):
+                    del self._endpoints[key]
+                    self._published_at.pop(key, None)
+
+    def resolve(self, job: str, pe_id: int, port_id: int,
+                timeout: float = 30.0):
+        """Name resolution with propagation delay (paper §8: DNS latency)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                q = self._endpoints.get((job, pe_id, port_id))
+                ts = self._published_at.get((job, pe_id, port_id), 0.0)
+            if q is not None and time.monotonic() >= ts + self.dns_delay:
+                return q
+            time.sleep(0.002)
+        raise TimeoutError(f"resolve({job}, pe {pe_id}, port {port_id})")
+
+    def collective(self, job: str, region: str, width: int) -> CollectiveGroup:
+        with self._lock:
+            key = (job, region)
+            grp = self._collectives.get(key)
+            if grp is None or grp.width != width:
+                grp = CollectiveGroup(width)
+                self._collectives[key] = grp
+            return grp
+
+    def abort_collectives(self, job: str) -> None:
+        with self._lock:
+            groups = [g for (j, _), g in self._collectives.items() if j == job]
+        for g in groups:
+            g.abort()

@@ -1,0 +1,647 @@
+"""The Streams instance operator: controllers, conductors, coordinators.
+
+One instance operator per namespace (paper §5.1 — the legacy "domain" is
+the cluster itself).  Actors communicate ONLY by creating / modifying /
+deleting resources; Kubernetes-style event delivery (repro.core) does the
+rest.  The causal chains from §4.4:
+
+  1. PE creation        -> PE controller bumps launchCount (PE coordinator)
+  2. voluntary PE delete-> PE controller recreates the PE  -> (1)
+  3. pod failure/delete -> pod controller bumps launchCount (PE coordinator)
+  4. generation change  -> job controller rewrites ConfigMaps; pod conductor
+                           restarts only PEs whose metadata changed
+  *  pod conductor is the only actor that creates pods, and only in
+     reaction to launchCount changes with all dependencies present.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+
+from ..ckpt import CheckpointStore
+from ..core import (
+    Conductor,
+    Controller,
+    Coordinator,
+    Event,
+    EventType,
+    Resource,
+    ResourceStore,
+)
+from . import crds
+from .fabric import Fabric
+from .pipeline import JobPlan, plan_job
+
+
+# ----------------------------------------------------------- REST facade
+
+
+class RestFacade:
+    """§5.2: the temporary REST layer PEs use to reach the platform.
+
+    Every mutation goes through a coordinator — concurrent agents never
+    write resources directly (§4.3).  Stands in for HTTP endpoints.
+    """
+
+    def __init__(self, store: ResourceStore, pod_coord: Coordinator,
+                 ckpt: CheckpointStore, namespace: str = "default"):
+        self.store = store
+        self.pod_coord = pod_coord
+        self.ckpt = ckpt
+        self.namespace = namespace
+        self.cr_operator = None  # wired by Platform
+        self.broker = None
+        self._last_metric: dict = {}
+
+    def notify_connected(self, job: str, pe_id: int) -> None:
+        self.pod_coord.submit_status(crds.pod_name(job, pe_id),
+                                     {"connected": True}, requester="pe-rest")
+
+    def notify_source_done(self, job: str, pe_id: int) -> None:
+        self.pod_coord.submit_status(crds.pod_name(job, pe_id),
+                                     {"sourceDone": True}, requester="pe-rest")
+
+    def report_metrics(self, job: str, pe_id: int, metrics: dict) -> None:
+        key = (job, pe_id)
+        now = time.monotonic()
+        if now - self._last_metric.get(key, 0.0) < 0.2:
+            return
+        self._last_metric[key] = now
+        self.pod_coord.submit_status(
+            crds.pod_name(job, pe_id),
+            {"metrics": metrics, "heartbeat": time.time()}, requester="pe-rest")
+
+    def report_sink(self, job: str, pe_id: int, seen: int, maxseq: int) -> None:
+        self.pod_coord.submit_status(
+            crds.pod_name(job, pe_id),
+            {"sink": {"seen": seen, "maxseq": maxseq}}, requester="pe-rest")
+
+    def notify_checkpoint(self, job: str, region: str, pe_id: int, step: int) -> None:
+        if self.cr_operator is not None:
+            self.cr_operator.receive_checkpoint(job, region, pe_id, step)
+
+    def get_cr_state(self, job: str, region: str) -> dict | None:
+        res = self.store.try_get(crds.CONSISTENT_REGION,
+                                 crds.cr_name(job, region), self.namespace)
+        return dict(res.status) if res else None
+
+    def get_routes(self, job: str, op_name: str) -> list:
+        if self.broker is None:
+            return []
+        return self.broker.routes_for(job, op_name)
+
+
+# ------------------------------------------------------------ controllers
+
+
+class JobController(Controller):
+    """Runs the submission pipeline; owns Job + all derived resources."""
+
+    def __init__(self, store, namespace, coords, trace=None):
+        super().__init__(store, crds.JOB, namespace, "job-controller", trace)
+        self.coords = coords
+        self._ids = itertools.count(1)
+        # local, ephemeral context (paper §6.1): lost on restart, recomputed
+        self.ctx: dict = {}
+
+    # -- causal link: Job ADDED -> assign id, mark Submitting
+    def on_addition(self, job: Resource) -> None:
+        if job.status.get("state"):  # controller restart replay
+            self.ctx[job.name] = {"applied": job.status.get("appliedGeneration", 0)}
+            return
+        self.ctx[job.name] = {"applied": 0}
+        job_id = next(self._ids)
+
+        def mark(res: Resource) -> None:
+            res.status.update(state="Submitting", jobId=job_id)
+            res.spec.setdefault("widths", {})
+
+        self.coords["job"].submit(job.name, mark, requester=self.name)
+
+    # -- causal link: own Submitting write confirmed -> create resources;
+    #    widths/generation change -> re-run the pipeline (§6.3)
+    def on_modification(self, old, new: Resource) -> None:
+        state = new.status.get("state")
+        if state not in ("Submitting", "Submitted"):
+            return
+        ctx = self.ctx.setdefault(new.name, {"applied": 0})
+        if ctx["applied"] >= new.generation:
+            return
+        ctx["applied"] = new.generation
+        plan = plan_job(new.name, new.spec, new.spec.get("widths") or None,
+                        generation=new.generation)
+        self._apply_plan(new, plan)
+
+        def stamp(res: Resource) -> None:
+            res.status["appliedGeneration"] = new.generation
+            res.status["expectedPEs"] = len(plan.pes)
+
+        self.coords["job"].submit(new.name, stamp, requester=self.name)
+
+    def _apply_plan(self, job: Resource, plan: JobPlan) -> None:
+        ns = job.namespace
+        store = self.store
+        # ConfigMaps FIRST (pod dependencies — the pod conductor gates on them)
+        for pe in plan.pes:
+            # widths go only into PEs whose runtime *uses* them (trainer
+            # collective width, reducer fan-in): putting them everywhere
+            # would change every CM on a width edit and restart every pod,
+            # defeating §6.3's only-restart-what-changed property.
+            needs_widths = any(o.kind in ("trainer", "reducer")
+                               for o in pe.operators)
+            data = {**pe.graph_metadata,
+                    "widths": plan.widths if needs_widths else {},
+                    "consistentRegion": plan.consistent_region}
+            name = crds.cm_name(job.name, pe.pe_id)
+            existing = store.try_get(crds.CONFIG_MAP, name, ns)
+            if existing is None:
+                store.create(crds.make_config_map(job.name, pe.pe_id, data,
+                                                  job.generation, ns))
+            elif existing.spec["data"] != data or \
+                    existing.spec.get("jobGeneration") != job.generation:
+                def upd(res, data=data):
+                    res.spec["data"] = data
+                    res.spec["jobGeneration"] = job.generation
+                store.update(crds.CONFIG_MAP, name, upd, namespace=ns)
+        for pe in plan.pes:
+            name = crds.service_name(job.name, pe.pe_id)
+            if not store.exists(crds.SERVICE, name, ns):
+                store.create(crds.make_service(
+                    job.name, pe.pe_id,
+                    [p["portId"] for p in pe.input_ports], ns))
+        # aux CRDs
+        for region, width in plan.widths.items():
+            name = crds.pr_name(job.name, region)
+            if not store.exists(crds.PARALLEL_REGION, name, ns):
+                store.create(crds.make_parallel_region(job.name, region, width, ns))
+        if plan.consistent_region:
+            region = plan.consistent_region.get("name", "region")
+            # members = stateful region participants: trainers, and sources
+            # that own an offset.  A train app's data op is stateless by
+            # design (batches are computed, not stored) and never checkpoints.
+            members = [pe.pe_id for pe in plan.pes
+                       if any(o.in_region_cr and
+                              (o.kind == "trainer" or
+                               (o.kind == "source" and
+                                o.config.get("role") != "data"))
+                              for o in pe.operators)]
+            name = crds.cr_name(job.name, region)
+            if not store.exists(crds.CONSISTENT_REGION, name, ns):
+                store.create(crds.make_consistent_region(
+                    job.name, region,
+                    {**plan.consistent_region, "members": members}, ns))
+            else:
+                def upd_cr(res, members=members):
+                    res.spec["members"] = members
+                store.update(crds.CONSISTENT_REGION, name, upd_cr, namespace=ns)
+        for op_name, stream, props in plan.exports:
+            name = f"{job.name}-export-{op_name}"
+            if not store.exists(crds.EXPORT, name, ns):
+                pe = next(p for p in plan.pes
+                          if any(o.name == op_name for o in p.operators))
+                res = crds.make_export(job.name, op_name, stream, props, ns)
+                res.spec["peId"] = pe.pe_id
+                store.create(res)
+        for op_name, sub in plan.imports:
+            name = f"{job.name}-import-{op_name}"
+            if not store.exists(crds.IMPORT, name, ns):
+                pe = next(p for p in plan.pes
+                          if any(o.name == op_name for o in p.operators))
+                res = crds.make_import(job.name, op_name, sub, ns)
+                res.spec["peId"] = pe.pe_id
+                store.create(res)
+        # PEs LAST: their creation triggers the pod causal chain.
+        # create-or-replace (paper §6.3): an existing PE whose operator set
+        # changed gets its spec updated in place (the pod restart, if any,
+        # flows from the ConfigMap diff, not from here).
+        for pe in plan.pes:
+            name = crds.pe_name(job.name, pe.pe_id)
+            want = {"operators": [o.name for o in pe.operators],
+                    "podSpec": pe.pod_spec}
+            existing = store.try_get(crds.PE, name, ns)
+            if existing is None:
+                store.create(crds.make_pe(job.name, pe.pe_id, want, ns))
+            elif (existing.spec.get("operators") != want["operators"] or
+                  existing.spec.get("podSpec") != want["podSpec"]):
+                def upd_pe(res, want=want):
+                    res.spec.update(want)
+                store.update(crds.PE, name, upd_pe, namespace=ns)
+        # width decrease: retire PEs beyond the plan (delete pod+cm+svc+pe)
+        for pe_res in store.list(crds.PE, ns, crds.job_labels(job.name)):
+            pe_id = pe_res.spec["peId"]
+            if pe_id >= len(plan.pes):
+                store.try_delete(crds.POD, crds.pod_name(job.name, pe_id), ns)
+                store.try_delete(crds.PE, pe_res.name, ns)
+                store.try_delete(crds.CONFIG_MAP, crds.cm_name(job.name, pe_id), ns)
+                store.try_delete(crds.SERVICE, crds.service_name(job.name, pe_id), ns)
+
+    # -- teardown: bulk deletion by label (paper §8 GC mitigation)
+    def on_deletion(self, job: Resource) -> None:
+        if job.spec.get("gcMode", "manual") == "manual":
+            self.store.delete_collection(namespace=job.namespace,
+                                         label_selector=crds.job_labels(job.name))
+        self.ctx.pop(job.name, None)
+
+
+class PEController(Controller):
+    def __init__(self, store, namespace, coords, trace=None):
+        super().__init__(store, crds.PE, namespace, "pe-controller", trace)
+        self.coords = coords
+
+    # causal link 1: new PE -> bump launch count
+    def on_addition(self, pe: Resource) -> None:
+        self.coords["pe"].submit(
+            pe.name, lambda r: r.status.update(
+                launchCount=r.status.get("launchCount", 0) + 1),
+            requester=self.name)
+
+    # causal link 2: voluntary deletion -> recreate (if still expected)
+    def on_deletion(self, pe: Resource) -> None:
+        job = self.store.try_get(crds.JOB, pe.spec["job"], pe.namespace)
+        if job is None or job.status.get("state") not in ("Submitted", "Submitting"):
+            return
+        plan = plan_job(job.name, job.spec, job.spec.get("widths") or None,
+                        generation=job.generation)
+        if pe.spec["peId"] < len(plan.pes):
+            fresh = crds.make_pe(job.name, pe.spec["peId"],
+                                 {k: v for k, v in pe.spec.items()
+                                  if k not in ("job", "peId")}, pe.namespace)
+            try:
+                self.store.create(fresh)
+            except Exception:
+                pass
+
+
+class PodController(Controller):
+    """Overrides kubelet restart: failures route through the PE coordinator."""
+
+    def __init__(self, store, namespace, coords, trace=None):
+        super().__init__(store, crds.POD, namespace, "pod-controller", trace)
+        self.coords = coords
+
+    # causal link 3a: pod failure -> bump owning PE launch count
+    def on_modification(self, old, new: Resource) -> None:
+        was = (old.status.get("phase") if old else None)
+        if new.status.get("phase") == "Failed" and was != "Failed":
+            self.store.try_delete(crds.POD, new.name, new.namespace)
+            self._bump(new)
+
+    # causal link 3b: pod deletion while PE alive -> bump launch count
+    def on_deletion(self, pod: Resource) -> None:
+        pe_name = crds.pe_name(pod.spec["job"], pod.spec["peId"])
+        pe = self.store.try_get(crds.PE, pe_name, pod.namespace)
+        if pe is not None:
+            self._bump(pod)
+
+    def _bump(self, pod: Resource) -> None:
+        pe_name = crds.pe_name(pod.spec["job"], pod.spec["peId"])
+        self.coords["pe"].submit(
+            pe_name, lambda r: r.status.update(
+                launchCount=r.status.get("launchCount", 0) + 1),
+            requester=self.name)
+
+
+class ParallelRegionController(Controller):
+    """Width edits feed the normal submission path via the job coordinator."""
+
+    def __init__(self, store, namespace, coords, trace=None):
+        super().__init__(store, crds.PARALLEL_REGION, namespace,
+                         "parallelregion-controller", trace)
+        self.coords = coords
+
+    def on_modification(self, old, new: Resource) -> None:
+        if old and old.spec.get("width") == new.spec.get("width"):
+            return
+        job, region, width = new.spec["job"], new.spec["region"], new.spec["width"]
+
+        def set_width(res: Resource) -> None:
+            widths = dict(res.spec.get("widths") or {})
+            widths[region] = width
+            res.spec["widths"] = widths  # spec change -> generation++
+
+        self.coords["job"].submit(job, set_width, requester=self.name)
+
+
+class ImportController(Controller):
+    def __init__(self, store, namespace, trace=None):
+        super().__init__(store, crds.IMPORT, namespace, "import-controller", trace)
+
+
+class ExportController(Controller):
+    def __init__(self, store, namespace, trace=None):
+        super().__init__(store, crds.EXPORT, namespace, "export-controller", trace)
+
+
+class ConsistentRegionController(Controller):
+    def __init__(self, store, namespace, trace=None):
+        super().__init__(store, crds.CONSISTENT_REGION, namespace,
+                         "consistentregion-controller", trace)
+
+
+# ------------------------------------------------------------- conductors
+
+
+class PodConductor(Conductor):
+    """The ONLY creator of pods.  Reacts to PE launchCount changes; gates on
+    ConfigMap + Service existence; restarts pods whose graph metadata
+    changed across generations (identical metadata -> no restart, §6.3)."""
+
+    kinds = (crds.PE, crds.CONFIG_MAP, crds.POD, crds.SERVICE)
+
+    def __init__(self, store, namespace, coords, trace=None):
+        super().__init__(store, "pod-conductor", trace)
+        self.namespace = namespace
+        self.coords = coords
+        self._cm_seen: dict = {}  # cm name -> last graph data applied
+
+    def on_event(self, event: Event) -> None:
+        res = event.resource
+        if res.kind == crds.PE and event.type != EventType.DELETED:
+            self._reconcile_pe(res)
+        elif res.kind == crds.SERVICE and event.type == EventType.ADDED:
+            pe = self.store.try_get(crds.PE, crds.pe_name(
+                res.spec["job"], res.spec["peId"]), self.namespace)
+            if pe:
+                self._reconcile_pe(pe)
+        elif res.kind == crds.CONFIG_MAP:
+            self._reconcile_cm(event, res)
+
+    def _reconcile_pe(self, pe: Resource) -> None:
+        job, pe_id = pe.spec["job"], pe.spec["peId"]
+        want = pe.status.get("launchCount", 0)
+        if want < 1:
+            return
+        cm = self.store.try_get(crds.CONFIG_MAP, crds.cm_name(job, pe_id),
+                                self.namespace)
+        svc = self.store.try_get(crds.SERVICE, crds.service_name(job, pe_id),
+                                 self.namespace)
+        if cm is None or svc is None:
+            return  # dependencies not ready; later events re-trigger
+        pod = self.store.try_get(crds.POD, crds.pod_name(job, pe_id),
+                                 self.namespace)
+        if pod is not None and pod.spec.get("launchCount", 0) >= want:
+            return
+        if pod is not None:
+            # stale pod for an older launch: delete, recreate on next event
+            self.store.try_delete(crds.POD, pod.name, self.namespace)
+            return
+        new_pod = crds.make_pod(job, pe_id, {"pod_spec": pe.spec.get("podSpec", {})},
+                                want, cm.spec.get("jobGeneration", 1),
+                                self.namespace)
+        try:
+            self.store.create(new_pod)
+            self._record("create", new_pod.key, f"launch={want}")
+        except Exception:
+            pass
+
+    def _reconcile_cm(self, event: Event, cm: Resource) -> None:
+        key = cm.name
+        data = cm.spec.get("data")
+        prev = self._cm_seen.get(key)
+        self._cm_seen[key] = data
+        if event.type != EventType.MODIFIED or prev is None:
+            return
+        if prev == data:
+            # identical metadata: bump the pod's generation, no restart
+            def bump(res: Resource) -> None:
+                res.spec["jobGeneration"] = cm.spec.get("jobGeneration", 1)
+
+            self.coords["pod"].submit(crds.pod_name(cm.spec["job"],
+                                                    cm.spec["peId"]),
+                                      bump, requester=self.name)
+            return
+        # changed metadata -> restart via causal chain: delete pod; pod
+        # controller bumps launchCount; this conductor recreates
+        self.store.try_delete(crds.POD, crds.pod_name(cm.spec["job"],
+                                                      cm.spec["peId"]),
+                              self.namespace)
+
+
+class JobConductor(Conductor):
+    """Tracks submission/health/termination state (recomputable only)."""
+
+    kinds = (crds.JOB, crds.PE, crds.POD, crds.CONFIG_MAP, crds.SERVICE)
+
+    def __init__(self, store, namespace, coords, trace=None):
+        super().__init__(store, "job-conductor", trace)
+        self.namespace = namespace
+        self.coords = coords
+
+    def on_event(self, event: Event) -> None:
+        res = event.resource
+        job_name = res.name if res.kind == crds.JOB else res.spec.get("job")
+        if not job_name:
+            return
+        job = self.store.try_get(crds.JOB, job_name, self.namespace)
+        if job is None:
+            return
+        expected = job.status.get("expectedPEs")
+        if expected is None:
+            return
+        pes = self.store.list(crds.PE, self.namespace, crds.job_labels(job_name))
+        pods = self.store.list(crds.POD, self.namespace, crds.job_labels(job_name))
+        patch: dict = {}
+        if (job.status.get("state") == "Submitting" and len(pes) >= expected):
+            patch.update(state="Submitted", submittedAt=time.time())
+        healthy = [p for p in pods
+                   if (p.status.get("phase") == "Running" and p.status.get("connected"))
+                   or p.status.get("phase") == "Succeeded"]
+        full = (len(healthy) >= expected and len(pods) >= expected)
+        if full and not job.status.get("fullHealth"):
+            patch.update(fullHealth=True, fullHealthAt=time.time())
+        elif not full and job.status.get("fullHealth"):
+            patch.update(fullHealth=False)
+        done = [p for p in pods if p.status.get("phase") == "Succeeded"
+                or p.status.get("sourceDone")]
+        if done and job.status.get("state") == "Submitted":
+            src_pes = [p for p in pods if p.status.get("sourceDone")]
+            if src_pes:
+                patch.setdefault("sourcesDone", len(src_pes))
+        if patch:
+            self.coords["job"].submit_status(job_name, patch, requester=self.name)
+
+
+class SubscriptionBroker(Conductor):
+    """§6.4: matches Import/Export CRDs; its board is recomputable state."""
+
+    kinds = (crds.IMPORT, crds.EXPORT)
+
+    def __init__(self, store, namespace, fabric: Fabric, trace=None):
+        super().__init__(store, "subscription-broker", trace)
+        self.namespace = namespace
+        self.fabric = fabric
+        self._lock = threading.Lock()
+        self._exports: dict = {}  # (job, op) -> (stream, props, peId)
+        self._imports: dict = {}  # (job, op) -> (subscription, peId)
+        self._routes: dict = {}  # (exp job, exp op) -> [(imp job, peId)]
+
+    def on_event(self, event: Event) -> None:
+        res = event.resource
+        with self._lock:
+            if res.kind == crds.EXPORT:
+                key = (res.spec["job"], res.spec["operator"])
+                if event.type == EventType.DELETED:
+                    self._exports.pop(key, None)
+                else:
+                    self._exports[key] = (res.spec["stream"],
+                                          res.spec.get("properties", {}),
+                                          res.spec["peId"])
+            elif res.kind == crds.IMPORT:
+                key = (res.spec["job"], res.spec["operator"])
+                if event.type == EventType.DELETED:
+                    self._imports.pop(key, None)
+                else:
+                    self._imports[key] = (res.spec["subscription"],
+                                          res.spec["peId"])
+            self._rematch()
+
+    @staticmethod
+    def _matches(sub: dict, stream: str, props: dict) -> bool:
+        if sub.get("stream"):
+            return sub["stream"] == stream
+        want = sub.get("properties", {})
+        return bool(want) and all(props.get(k) == v for k, v in want.items())
+
+    def _rematch(self) -> None:
+        routes: dict = {}
+        for (ejob, eop), (stream, props, _epe) in self._exports.items():
+            for (ijob, _iop), (sub, ipe) in self._imports.items():
+                if self._matches(sub, stream, props):
+                    routes.setdefault((ejob, eop), []).append((ijob, ipe))
+        self._routes = routes
+
+    def routes_for(self, job: str, op_name: str) -> list:
+        with self._lock:
+            targets = list(self._routes.get((job, op_name), ()))
+        out = []
+        for ijob, ipe in targets:
+            try:
+                out.append(self.fabric.resolve(ijob, ipe, 0, timeout=0.01))
+            except TimeoutError:
+                pass
+        return out
+
+
+class StragglerMonitor:
+    """Straggler mitigation: a pod that stops making progress is treated as
+    failed — same causal chain as a crash (launchCount++ → recreate →
+    consistent-region rollback picks up the replacement).
+
+    Progress = the ``heartbeat`` timestamp PEs attach to their metric
+    reports.  Scans are explicit (``scan()``) or driven by a daemon thread
+    (``start``); only pods of jobs that opted in via
+    ``spec.stragglerTimeout`` are eligible.
+    """
+
+    def __init__(self, store, namespace, pod_coord, trace=None):
+        self.store = store
+        self.namespace = namespace
+        self.pod_coord = pod_coord
+        self.trace = trace
+        self._stop = threading.Event()
+        self._thread = None
+
+    def scan(self, now: float | None = None) -> list:
+        now = time.time() if now is None else now
+        marked = []
+        for pod in self.store.list(crds.POD, self.namespace):
+            if pod.status.get("phase") != "Running":
+                continue
+            job = self.store.try_get(crds.JOB, pod.spec.get("job"), self.namespace)
+            if job is None:
+                continue
+            timeout = job.spec.get("stragglerTimeout")
+            hb = pod.status.get("heartbeat")
+            if not timeout or hb is None:
+                continue
+            if now - hb > timeout:
+                self.pod_coord.submit_status(pod.name, {"phase": "Failed"},
+                                             requester="straggler-monitor")
+                if self.trace is not None:
+                    self.trace.record("straggler-monitor", "mark-failed",
+                                      pod.key, f"stale={now - hb:.1f}s")
+                marked.append(pod.name)
+        return marked
+
+    def start(self, interval: float = 1.0) -> None:
+        def loop():
+            while not self._stop.is_set():
+                try:
+                    self.scan()
+                except Exception:  # noqa: BLE001
+                    pass
+                self._stop.wait(interval)
+
+        self._thread = threading.Thread(target=loop, name="straggler-monitor",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)
+
+
+class ConsistentRegionOperator(Conductor):
+    """§6.5: its own operator; coordinates checkpoints + rollback/recovery.
+
+    Observes pod life-cycle events for region members; receives checkpoint
+    notifications via the REST facade; commits a checkpoint id into the CR
+    CRD only when every member reported it.  On a member failure it aborts
+    the job's collective epochs (surviving shards rewind) — rollback —
+    and the pod-restart causal chain performs recovery.
+    """
+
+    kinds = (crds.CONSISTENT_REGION, crds.POD)
+
+    def __init__(self, store, namespace, coords, fabric: Fabric,
+                 ckpt: CheckpointStore, trace=None):
+        super().__init__(store, "consistentregion-operator", trace)
+        self.namespace = namespace
+        self.coords = coords
+        self.fabric = fabric
+        self.ckpt = ckpt
+        self._lock = threading.Lock()
+        self._pending: dict = {}  # (job, region, step) -> set(pe ids)
+
+    def receive_checkpoint(self, job: str, region: str, pe_id: int, step: int) -> None:
+        cr = self.store.try_get(crds.CONSISTENT_REGION,
+                                crds.cr_name(job, region), self.namespace)
+        if cr is None:
+            return
+        members = set(cr.spec.get("members", ()))
+        with self._lock:
+            got = self._pending.setdefault((job, region, step), set())
+            got.add(pe_id)
+            complete = members.issubset(got)
+            if complete:
+                for key in list(self._pending):
+                    if key[:2] == (job, region) and key[2] <= step:
+                        del self._pending[key]
+        if complete and step > cr.status.get("lastCommitted", -1):
+            self.coords["cr"].submit_status(
+                crds.cr_name(job, region),
+                {"lastCommitted": step, "state": "Processing"},
+                requester=self.name)
+            self.ckpt.sweep(job, region, step)
+            self._record("commit", cr.key, f"step={step}")
+
+    def on_event(self, event: Event) -> None:
+        res = event.resource
+        if res.kind != crds.POD:
+            return
+        failed = (event.type == EventType.DELETED or
+                  res.status.get("phase") == "Failed")
+        if not failed:
+            return
+        job = res.spec.get("job")
+        pe_id = res.spec.get("peId")
+        for cr in self.store.list(crds.CONSISTENT_REGION, self.namespace,
+                                  crds.job_labels(job)):
+            if pe_id in cr.spec.get("members", ()):  # rollback
+                self.fabric.abort_collectives(job)
+                self.coords["cr"].submit_status(
+                    cr.name, {"state": "Recovering"}, requester=self.name)
+                self._record("rollback", cr.key, f"pe={pe_id}")

@@ -1,0 +1,361 @@
+"""Job submission pipeline (paper §6.1, steps 1-5).
+
+archive/spec -> logical model -> transforms (parallel expansion, consistent
+regions) -> topology model -> fusion into PEs -> per-PE graph metadata.
+
+Everything here is a *pure function* of (job spec, region widths,
+generation): the pipeline is re-run — never persisted — for submission,
+recovery, and parallel-region width changes (paper §6.3 and lesson §7.1
+"don't store what you can compute").  Deterministic hierarchical naming
+(PE ids local to job, port ids local to PE) guarantees that re-running at a
+new width yields identical metadata for unchanged PEs, which is what lets
+the pod conductor restart only the PEs whose ConfigMap actually changed.
+
+Application kinds:
+- ``streams``: the paper's own test app (source -> n-way parallel region of
+  operator pipelines -> sink) used by the platform benchmarks;
+- ``train``:   a data-parallel training job (source -> parallel region of
+  trainer shards -> gradient-combine -> sink), the ML workload;
+- ``serve``:   a replicated serving job (router -> parallel region of
+  server replicas).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class OpDef:
+    name: str
+    kind: str  # source | pipe | sink | trainer | reducer | server | router
+    region: str | None = None
+    placement: dict = field(default_factory=dict)
+    config: dict = field(default_factory=dict)
+    exports: dict | None = None  # {"stream": name, "properties": {...}}
+    imports: dict | None = None  # {"subscription": {...}}
+
+
+@dataclass
+class LogicalModel:
+    ops: list
+    edges: list  # (producer name, consumer name)
+    regions: dict  # region name -> default width
+    consistent_region: dict | None = None
+    hostpools: list = field(default_factory=list)
+
+
+# ------------------------------------------------------- logical model (1)
+
+
+def build_logical_model(spec: dict) -> LogicalModel:
+    app = spec["app"]
+    kind = app.get("type", "streams")
+    cr = spec.get("consistentRegion")
+    if kind == "streams":
+        return _streams_logical(app, cr)
+    if kind == "train":
+        return _train_logical(app, cr)
+    if kind == "serve":
+        return _serve_logical(app, cr)
+    raise ValueError(f"unknown app type {kind!r}")
+
+
+def _streams_logical(app: dict, cr) -> LogicalModel:
+    width = app.get("width", 2)
+    depth = app.get("pipeline_depth", 2)
+    ops: list = [OpDef("src", "source", config=app.get("source", {}),
+                       exports=app.get("export"))]
+    edges = []
+    prev = "src"
+    for i in range(app.get("pre_ops", 1)):
+        ops.append(OpDef(f"pre{i}", "pipe", placement=app.get("placement", {})))
+        edges.append((prev, f"pre{i}"))
+        prev = f"pre{i}"
+    # the parallel region: a pipeline of ``depth`` ops, expanded ``width``-way
+    region_first = prev
+    rprev = None
+    for j in range(depth):
+        ops.append(OpDef(f"ch{j}", "pipe", region="par"))
+        if rprev is None:
+            edges.append((region_first, f"ch{j}"))
+        else:
+            edges.append((rprev, f"ch{j}"))
+        rprev = f"ch{j}"
+    prev = rprev
+    for i in range(app.get("post_ops", 1)):
+        ops.append(OpDef(f"post{i}", "pipe"))
+        edges.append((prev, f"post{i}"))
+        prev = f"post{i}"
+    ops.append(OpDef("sink", "sink", imports=app.get("import"),
+                     config=app.get("sink", {})))
+    edges.append((prev, "sink"))
+    return LogicalModel(ops, edges, {"par": width}, cr)
+
+
+def _train_logical(app: dict, cr) -> LogicalModel:
+    width = app.get("data_parallel", 1)
+    ops = [
+        OpDef("data", "source", config={"role": "data"}),
+        OpDef("trainer", "trainer", region="dp", config=app,
+              placement=app.get("placement", {})),
+        OpDef("combine", "reducer", config=app),
+        OpDef("metrics", "sink", exports=app.get("export")),
+    ]
+    edges = [("data", "trainer"), ("trainer", "combine"), ("combine", "metrics")]
+    return LogicalModel(ops, edges, {"dp": width}, cr)
+
+
+def _serve_logical(app: dict, cr) -> LogicalModel:
+    width = app.get("replicas", 1)
+    ops = [
+        OpDef("router", "router", config=app, imports=app.get("import")),
+        OpDef("server", "server", region="replicas", config=app),
+        OpDef("responses", "sink", exports=app.get("export")),
+    ]
+    edges = [("router", "server"), ("server", "responses")]
+    return LogicalModel(ops, edges, {"replicas": width}, cr)
+
+
+# ------------------------------------- transform + topology model (2 & 3)
+
+
+@dataclass(frozen=True)
+class TopoOp:
+    id: int  # local to the job — deterministic
+    name: str  # e.g. "ch0[2]" for channel replica 2
+    logical: str
+    kind: str
+    region: str | None
+    channel: int  # replica index within the region (-1 outside regions)
+    placement: dict
+    config: dict
+    exports: dict | None
+    imports: dict | None
+    in_region_cr: bool
+
+
+def expand_topology(model: LogicalModel, widths: dict) -> tuple:
+    """Parallel expansion: replicate region ops ``width`` times.
+
+    Returns (topo_ops, topo_edges) with deterministic operator ids: logical
+    order first, channel index second — so changing a region's width never
+    renumbers operators outside that region's higher channels.
+    """
+    cr_ops = set()
+    if model.consistent_region:
+        cr_ops = set(model.consistent_region.get("operators", ())) or {
+            op.name for op in model.ops}
+    topo: list = []
+    name_of: dict = {}  # (logical, channel) -> topo name
+    for op in model.ops:
+        if op.region is None:
+            name_of[(op.name, -1)] = op.name
+        else:
+            for c in range(widths.get(op.region, model.regions[op.region])):
+                name_of[(op.name, c)] = f"{op.name}[{c}]"
+
+    # Deterministic, width-stable ids (paper §7.5): non-region operators
+    # first (their ids never move), then region operators ordered by
+    # (region, channel, logical position) — growing a region APPENDS ids,
+    # so no existing PE is ever renumbered by a width change.
+    logical_pos = {op.name: i for i, op in enumerate(model.ops)}
+    region_order = {}
+    for op in model.ops:
+        if op.region is not None and op.region not in region_order:
+            region_order[op.region] = len(region_order)
+    entries = []  # (sort key, op, channel)
+    for op in model.ops:
+        if op.region is None:
+            entries.append(((0, 0, 0, logical_pos[op.name]), op, -1))
+        else:
+            w = widths.get(op.region, model.regions[op.region])
+            for c in range(w):
+                entries.append(((1, region_order[op.region], c,
+                                 logical_pos[op.name]), op, c))
+    entries.sort(key=lambda e: e[0])
+    for idx, (_, op, c) in enumerate(entries):
+        topo.append(TopoOp(
+            id=idx, name=name_of[(op.name, c)], logical=op.name,
+            kind=op.kind, region=op.region, channel=c,
+            placement=op.placement, config=op.config,
+            exports=op.exports, imports=op.imports,
+            in_region_cr=op.name in cr_ops))
+
+    by_logical: dict = {}
+    for t in topo:
+        by_logical.setdefault(t.logical, []).append(t)
+
+    edges: list = []
+    logical_region = {op.name: op.region for op in model.ops}
+    for a, b in model.edges:
+        ra, rb = logical_region[a], logical_region[b]
+        if ra is None and rb is None:
+            edges.append((by_logical[a][0].name, by_logical[b][0].name))
+        elif ra is None and rb is not None:
+            for t in by_logical[b]:  # split: producer feeds every channel
+                edges.append((by_logical[a][0].name, t.name))
+        elif ra is not None and rb is None:
+            for t in by_logical[a]:  # merge: every channel feeds consumer
+                edges.append((t.name, by_logical[b][0].name))
+        elif ra == rb:
+            for ta, tb in zip(by_logical[a], by_logical[b]):
+                if ta.channel == tb.channel:
+                    edges.append((ta.name, tb.name))
+        else:  # cross-region: full mesh
+            for ta in by_logical[a]:
+                for tb in by_logical[b]:
+                    edges.append((ta.name, tb.name))
+    return topo, edges
+
+
+# ------------------------------------------------------------- fusion (4)
+
+
+@dataclass
+class PEPlan:
+    pe_id: int
+    operators: list  # list[TopoOp]
+    input_ports: list  # [{"portId", "from": [peId, portId], "operator"}]
+    output_ports: list  # [{"portId", "to": [[peId, portId], ...], "operator"}]
+    pod_spec: dict = field(default_factory=dict)
+
+    @property
+    def graph_metadata(self) -> dict:
+        return {
+            "peId": self.pe_id,
+            "operators": [
+                {"id": o.id, "name": o.name, "kind": o.kind,
+                 "channel": o.channel, "region": o.region,
+                 "config": o.config, "inCR": o.in_region_cr}
+                for o in self.operators
+            ],
+            "inputs": self.input_ports,
+            "outputs": self.output_ports,
+        }
+
+
+def fuse(topo: list, edges: list, scheme: str = "one-per-op") -> list:
+    """Fusion into PEs.  ``one-per-op`` (paper's experiments) or
+    ``per-channel`` (each parallel channel's pipeline fused into one PE)."""
+    groups: list = []
+    if scheme == "per-channel":
+        seen: dict = {}
+        for t in topo:
+            key = ("ch", t.region, t.channel) if t.region else ("op", t.name)
+            if key not in seen:
+                seen[key] = []
+                groups.append(seen[key])
+            seen[key].append(t)
+    else:
+        groups = [[t] for t in topo]
+
+    # deterministic PE ids: order of first operator id
+    groups.sort(key=lambda g: g[0].id)
+    plans = [PEPlan(pe_id=i, operators=g, input_ports=[], output_ports=[])
+             for i, g in enumerate(groups)]
+    pe_of_op = {}
+    for p in plans:
+        for o in p.operators:
+            pe_of_op[o.name] = p
+
+    # ports: deterministic local ids in edge-sorted order (paper §6.3)
+    name_to_op = {t.name: t for t in topo}
+    cross = [(a, b) for a, b in sorted(edges)
+             if pe_of_op[a].pe_id != pe_of_op[b].pe_id]
+    out_port_id: dict = {}
+    in_port_id: dict = {}
+    for a, b in cross:
+        pa, pb = pe_of_op[a], pe_of_op[b]
+        if (pa.pe_id, a) not in out_port_id:
+            out_port_id[(pa.pe_id, a)] = len(pa.output_ports)
+            pa.output_ports.append({"portId": len(pa.output_ports),
+                                    "operator": a, "to": []})
+        if (pb.pe_id, b) not in in_port_id:
+            in_port_id[(pb.pe_id, b)] = len(pb.input_ports)
+            pb.input_ports.append({"portId": len(pb.input_ports),
+                                   "operator": b, "from": []})
+        po = out_port_id[(pa.pe_id, a)]
+        pi = in_port_id[(pb.pe_id, b)]
+        pa.output_ports[po]["to"].append([pb.pe_id, pi])
+        pb.input_ports[pi]["from"].append([pa.pe_id, po])
+    return plans
+
+
+# ----------------------------------------------- scheduling constraints (6)
+
+
+def pod_specs(plans: list, job: str) -> None:
+    """Fill each plan's pod_spec from SPL placement semantics (paper §6.2).
+
+    colocate  -> podAffinity on a shared label
+    exlocate  -> podAntiAffinity on a shared label (symmetric+transitive)
+    isolate   -> unique label on every *other* pod + podAntiAffinity here
+                 (builds symmetric isolation from the asymmetric primitive)
+    host      -> nodeName;  hostpool tags -> nodeAffinity
+    """
+    iso_tokens = []
+    for p in plans:
+        for o in p.operators:
+            if o.placement.get("isolate"):
+                iso_tokens.append((p.pe_id, f"iso-{job}-pe-{p.pe_id}"))
+    for p in plans:
+        labels: dict = {}
+        affinity: list = []
+        anti: list = []
+        node_name = None
+        node_tags: list = []
+        for o in p.operators:
+            pl = o.placement
+            if pl.get("colocate"):
+                labels[f"colo-{pl['colocate']}"] = "1"
+                affinity.append(f"colo-{pl['colocate']}")
+            if pl.get("exlocate"):
+                labels[f"exlo-{pl['exlocate']}"] = "1"
+                anti.append(f"exlo-{pl['exlocate']}")
+            if pl.get("host"):
+                node_name = pl["host"]
+            if pl.get("hostpool_tags"):
+                node_tags.extend(pl["hostpool_tags"])
+        for pe_id, token in iso_tokens:
+            if pe_id == p.pe_id:
+                anti.append(token)  # the requester anti-affines to the label
+            else:
+                labels[token] = "1"  # everyone else carries the label
+        p.pod_spec = {
+            "labels": labels,
+            "podAffinity": affinity,
+            "podAntiAffinity": anti,
+            "nodeName": node_name,
+            "nodeAffinityTags": node_tags,
+        }
+
+
+# -------------------------------------------------------------- full plan
+
+
+@dataclass
+class JobPlan:
+    job: str
+    generation: int
+    widths: dict
+    pes: list  # list[PEPlan]
+    exports: list  # (op name, stream, properties)
+    imports: list  # (op name, subscription)
+    consistent_region: dict | None
+    logical: LogicalModel
+
+
+def plan_job(job: str, spec: dict, widths: dict | None = None,
+             generation: int = 1) -> JobPlan:
+    """The full pipeline: spec -> PE plans + metadata.  Pure & deterministic."""
+    model = build_logical_model(spec)
+    widths = {**model.regions, **(widths or {})}
+    topo, edges = expand_topology(model, widths)
+    plans = fuse(topo, edges, spec.get("fusion", "one-per-op"))
+    pod_specs(plans, job)
+    exports = [(t.name, t.exports["stream"], t.exports.get("properties", {}))
+               for t in topo if t.exports]
+    imports = [(t.name, t.imports["subscription"]) for t in topo if t.imports]
+    return JobPlan(job, generation, widths, plans, exports, imports,
+                   model.consistent_region, model)

@@ -1,0 +1,298 @@
+"""PE runtimes: the user code executing inside pods.
+
+Each pod runs one PE (the paper's fundamental design decision, §5.1).  The
+runtime implements the paper's PE translation layer: it publishes its input
+ports to the fabric ("creates socket receivers + publishes port labels"),
+resolves peer ports by *computed* names (no stored port labels — §5.2 name
+resolution), reports connectivity/liveness/metrics through the REST facade
+(§5.2 message bus), and participates in the consistent-region protocol
+(§6.5).
+
+Operator kinds:
+- source / pipe / sink: the paper's streaming operators (tuple dataflow);
+- trainer / reducer: a data-parallel JAX training shard + metric combine —
+  gradient all-reduce goes over the fabric's CollectiveGroup ("ICI");
+- router / server: replicated serving.
+
+A PE with multiple fused operators executes them as an in-process chain
+(operator fusion, §6.1 step 4).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..data.stream import StreamSource
+from .fabric import EpochAborted, Fabric, TupleQueue
+
+
+class PERuntime(threading.Thread):
+    def __init__(self, *, job: str, pe_id: int, metadata: dict, fabric: Fabric,
+                 rest, launch_count: int, stop_event: threading.Event,
+                 on_exit=None):
+        super().__init__(name=f"pe-{job}-{pe_id}", daemon=True)
+        self.job = job
+        self.pe_id = pe_id
+        self.meta = metadata
+        self.fabric = fabric
+        self.rest = rest
+        self.launch_count = launch_count
+        self.stop_event = stop_event
+        self.on_exit = on_exit
+        self.in_queues: dict = {}
+        self.out_targets: dict = {}  # portId -> list[TupleQueue]
+        self.crashed = False
+        self.counts = {"in": 0, "out": 0}
+
+    # ------------------------------------------------------------- plumbing
+
+    def _connect(self) -> None:
+        for port in self.meta.get("inputs", []):
+            q = TupleQueue()
+            self.in_queues[port["portId"]] = q
+            self.fabric.publish(self.job, self.pe_id, port["portId"], q)
+        for port in self.meta.get("outputs", []):
+            # verify peers resolve (connection established), but keep the
+            # *names* — sends re-resolve through the fabric so a restarted
+            # peer's fresh endpoint is picked up (paper: PEs re-establish
+            # connections after failures; names are computed, never stale)
+            for peer_pe, peer_port in port["to"]:
+                self.fabric.resolve(self.job, peer_pe, peer_port)
+            self.out_targets[port["portId"]] = list(map(tuple, port["to"]))
+        self.rest.notify_connected(self.job, self.pe_id)
+
+    def _send(self, peer: tuple, item) -> None:
+        try:
+            q = self.fabric.resolve(self.job, peer[0], peer[1], timeout=0.2)
+            q.put(item, timeout=2.0)
+        except Exception:
+            # peer down/restarting: outside a consistent region streams are
+            # best-effort; within one, replay-from-checkpoint repairs this
+            pass
+
+    def _emit(self, port_id: int, item, partition: int | None = None) -> None:
+        targets = self.out_targets.get(port_id, [])
+        if not targets:
+            return
+        if partition is not None:  # split into a parallel region
+            self._send(targets[partition % len(targets)], item)
+        else:
+            for t in targets:
+                self._send(t, item)
+        self.counts["out"] += 1
+        # pub/sub routes (Import/Export, §6.4) — read fresh every send so
+        # route updates from the subscription broker apply without restart
+        op0 = self.meta["operators"][0]
+        for q in self.rest.get_routes(self.job, op0["name"]):
+            try:
+                q.put(item, timeout=1.0)
+            except Exception:
+                pass
+
+    # ---------------------------------------------------------------- body
+
+    def run(self) -> None:
+        try:
+            self._connect()
+            kinds = [o["kind"] for o in self.meta["operators"]]
+            if "trainer" in kinds:
+                self._run_trainer()
+            elif "source" in kinds:
+                self._run_source()
+            elif "reducer" in kinds:
+                self._run_reducer()
+            elif "server" in kinds or "router" in kinds:
+                self._run_chain()  # same pull-transform-push loop
+            elif "sink" in kinds:
+                self._run_chain()
+            else:
+                self._run_chain()
+        except Exception:  # noqa: BLE001 — a PE crash is a pod failure
+            if not self.stop_event.is_set():
+                self.crashed = True
+                traceback.print_exc()
+        finally:
+            self.fabric.unpublish_pe(self.job, self.pe_id)
+            if self.on_exit:
+                self.on_exit(self)
+
+    # ------------------------------------------------------------ streaming
+
+    def _cr(self):
+        return self.meta.get("consistentRegion")
+
+    def _run_source(self) -> None:
+        cfg = self.meta["operators"][0].get("config", {})
+        if cfg.get("role") == "data":
+            # Training data source: batches are pure functions of (seed,
+            # offset) — "don't store (or send) what you can compute".  The op
+            # exists as the dataflow's logical source; it only signals
+            # liveness.
+            while not self.stop_event.is_set():
+                time.sleep(0.05)
+            return
+        limit = cfg.get("tuples", 0)  # 0 = unbounded
+        interval = (self._cr() or {}).get("interval", 0)
+        region = (self._cr() or {}).get("name", "region")
+        offset = 0
+        if self._cr():
+            st = self.rest.get_cr_state(self.job, region)
+            if st and st.get("lastCommitted", -1) >= 0:
+                _, meta = self.rest.ckpt.load_shard(
+                    self.job, region, st["lastCommitted"], f"pe{self.pe_id}")
+                if meta:
+                    offset = meta["offset"]
+        while not self.stop_event.is_set():
+            if limit and offset >= limit:
+                break
+            item = {"seq": offset, "data": offset % 97}
+            self._emit(0, item, partition=offset)
+            offset += 1
+            if interval and offset % interval == 0:
+                self.rest.ckpt.save_shard(self.job, region, offset,
+                                          f"pe{self.pe_id}",
+                                          meta={"offset": offset})
+                self.rest.notify_checkpoint(self.job, region,
+                                            self.pe_id, offset)
+            if cfg.get("rate_sleep"):
+                time.sleep(cfg["rate_sleep"])
+        # mark completion for finite sources
+        self.rest.notify_source_done(self.job, self.pe_id)
+
+    def _run_chain(self) -> None:
+        """pipe/sink/router/server: pull, transform, push."""
+        op = self.meta["operators"][0]
+        is_sink = op["kind"] == "sink"
+        seen = 0
+        maxseq = -1
+        while not self.stop_event.is_set():
+            q = self.in_queues.get(0)
+            if q is None:
+                time.sleep(0.01)
+                continue
+            item = q.get(timeout=0.1)
+            if item is None:
+                continue
+            self.counts["in"] += 1
+            if is_sink:
+                seen += 1
+                maxseq = max(maxseq, item.get("seq", -1))
+                if seen % 50 == 0 or item.get("flush"):
+                    self.rest.report_sink(self.job, self.pe_id, seen, maxseq)
+            else:
+                item = dict(item)
+                item["hops"] = item.get("hops", 0) + 1
+                self._emit(0, item, partition=item.get("seq"))
+        if is_sink:
+            self.rest.report_sink(self.job, self.pe_id, seen, maxseq)
+
+    def _run_reducer(self) -> None:
+        """Aggregates trainer metric tuples per step, forwards means."""
+        width = self.meta.get("widths", {}).get("dp", 1)
+        pending: dict = {}
+        while not self.stop_event.is_set():
+            q = self.in_queues.get(0)
+            if q is None:
+                time.sleep(0.01)
+                continue
+            item = q.get(timeout=0.1)
+            if item is None:
+                continue
+            self.counts["in"] += 1
+            step = item["step"]
+            pending.setdefault(step, []).append(item["loss"])
+            if len(pending[step]) == width:
+                mean = float(np.mean(pending.pop(step)))
+                self._emit(0, {"seq": step, "step": step, "loss": mean})
+                self.rest.report_metrics(self.job, self.pe_id,
+                                         {"step": step, "loss": mean})
+
+    # -------------------------------------------------------------- trainer
+
+    def _run_trainer(self) -> None:
+        from ..configs import reduced_config
+        from ..models import ModelOptions, init_params, loss_fn
+        from ..train.optim import OptimizerConfig, adamw_update, clip_by_global_norm, init_opt_state
+
+        op = self.meta["operators"][0]
+        cfg_app = op["config"]
+        channel = op["channel"] if op["channel"] >= 0 else 0
+        width = self.meta.get("widths", {}).get("dp", 1)
+        arch_cfg = reduced_config(cfg_app["arch"]) if isinstance(
+            cfg_app.get("arch"), str) else cfg_app["arch"]
+        opts = ModelOptions(compute_dtype="float32")
+        ocfg = OptimizerConfig(lr=cfg_app.get("lr", 1e-3), warmup_steps=10)
+        batch_per_shard = cfg_app.get("batch_per_shard", 4)
+        seq_len = cfg_app.get("seq_len", 64)
+        max_steps = cfg_app.get("steps", 50)
+        cr = self._cr()
+        region = (cr or {}).get("name", "dp")
+        interval = (cr or {}).get("interval", 10)
+
+        source = StreamSource(vocab_size=arch_cfg.vocab_size,
+                              batch=batch_per_shard, seq_len=seq_len,
+                              seed=cfg_app.get("data_seed", 0), mode="lcg")
+
+        params = init_params(jax.random.key(cfg_app.get("param_seed", 7)), arch_cfg)
+        opt = init_opt_state(params)
+        step = 0
+
+        def lossf(p, b):
+            return loss_fn(p, arch_cfg, b, opts, remat=False)
+
+        grad_fn = jax.jit(jax.value_and_grad(lossf, has_aux=True))
+        flat_params, treedef = jax.tree.flatten(params)
+
+        def load_committed():
+            nonlocal params, opt, step, flat_params
+            st = self.rest.get_cr_state(self.job, region) if cr else None
+            if st and st.get("lastCommitted", -1) >= 0:
+                cstep = st["lastCommitted"]
+                payload, meta = self.rest.ckpt.load_shard(
+                    self.job, region, cstep, "params",
+                    like={"params": params, "opt": opt})
+                params = payload["params"]
+                opt = payload["opt"]
+                step = meta["step"]
+                flat_params = jax.tree.leaves(params)
+
+        load_committed()
+        group = self.fabric.collective(self.job, region, width)
+        epoch = group.epoch
+
+        while not self.stop_event.is_set() and step < max_steps:
+            # deterministic shard: global batch at offset=step, this channel's
+            # slice — recomputable from (seed, step, channel): no data state
+            batch = source.batch_at(step * width + channel)
+            (loss, _metrics), grads = grad_fn(params, batch)
+            flat_g, gtree = jax.tree.flatten(grads)
+            try:
+                reduced = group.allreduce_mean(
+                    ("step", step), [np.asarray(loss)] + [np.asarray(g) for g in flat_g],
+                    epoch, rank=channel)
+            except EpochAborted as e:
+                epoch = e.epoch
+                load_committed()
+                continue
+            mean_loss = float(reduced[0])
+            grads = jax.tree.unflatten(gtree, reduced[1:])
+            grads, _ = clip_by_global_norm(grads, ocfg.clip_norm)
+            params, opt = adamw_update(ocfg, params, grads, opt,
+                                       np.int32(step))
+            step += 1
+            self._emit(0, {"seq": step, "step": step, "loss": mean_loss})
+            if cr and step % interval == 0:
+                if channel == 0:  # replicas identical post-allreduce
+                    self.rest.ckpt.save_shard(self.job, region, step, "params",
+                                              arrays={"params": params, "opt": opt},
+                                              meta={"step": step})
+                self.rest.notify_checkpoint(self.job, region, self.pe_id, step)
+            self.rest.report_metrics(self.job, self.pe_id,
+                                     {"step": step, "loss": mean_loss})
+        if step >= max_steps:
+            self.rest.notify_source_done(self.job, self.pe_id)

@@ -1,0 +1,173 @@
+"""Test-harness operator (paper §6.6): the TestSuite CRD and its actors.
+
+A TestSuite CRD holds five lists — pending / running / passed / failed /
+aborted — plus run parameters (concurrency, failure threshold).  The
+TestSuite controller admits up to ``concurrency`` tests from pending to
+running and creates a pod for each; when a test pod finishes, the pod
+controller reports the outcome through the TestSuite *coordinator*, which
+serially recomputes the lists, admits the next pending test, and updates
+the CRD.  All important state lives in the CRD: the harness is resilient
+to restarts, discoverable with standard tooling, and blind to what the
+test runners actually do (it only manipulates pods and their phases).
+
+Test payloads here are platform scenarios (the paper's tests are SPL
+applications): each test is a named scenario function executed inside the
+pod's runtime thread; probes assert on resource states.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+
+from ..core import Controller, Coordinator, EventType, Resource, ResourceStore
+from . import crds
+
+TEST_POD = "TestPod"  # test-runner pods get their own kind to keep the
+#                       application pod controllers out of their life cycle
+
+
+def make_test_suite(name: str, tests: list, concurrency: int = 2,
+                    failure_threshold: int = 0,
+                    namespace: str = "default") -> Resource:
+    return Resource(
+        kind=crds.TEST_SUITE, name=name, namespace=namespace,
+        spec={"tests": list(tests), "concurrency": concurrency,
+              "failureThreshold": failure_threshold},
+        status={"pending": list(tests), "running": [], "passed": [],
+                "failed": [], "aborted": [], "state": "Running"},
+    )
+
+
+class TestRunnerKubelet:
+    """Executes test-runner pods (threads running scenario callables)."""
+
+    def __init__(self, registry: dict):
+        self.registry = registry
+        self._threads: dict = {}
+
+    def start(self, pod: Resource, report) -> None:
+        test = pod.spec["test"]
+        fn = self.registry.get(test)
+
+        def run():
+            try:
+                if fn is None:
+                    raise KeyError(f"unknown test {test!r}")
+                fn()
+                report(pod.name, test, "passed")
+            except Exception:  # noqa: BLE001 — test failure
+                traceback.print_exc()
+                report(pod.name, test, "failed")
+
+        t = threading.Thread(target=run, name=f"test-{test}", daemon=True)
+        self._threads[pod.name] = t
+        t.start()
+
+
+class TestSuiteController(Controller):
+    """Admits pending tests up to the concurrency limit; creates test pods."""
+
+    def __init__(self, store: ResourceStore, namespace, coord: Coordinator,
+                 kubelet: TestRunnerKubelet, trace=None):
+        super().__init__(store, crds.TEST_SUITE, namespace,
+                         "testsuite-controller", trace)
+        self.coord = coord
+        self.kubelet = kubelet
+
+    def on_addition(self, suite: Resource) -> None:
+        self._admit(suite)
+
+    def on_modification(self, old, new: Resource) -> None:
+        self._admit(new)
+
+    def _admit(self, suite: Resource) -> None:
+        if suite.status.get("state") != "Running":
+            return
+        conc = suite.spec.get("concurrency", 2)
+        running = suite.status.get("running", [])
+        pending = suite.status.get("pending", [])
+        to_start = []
+
+        def admit(res: Resource) -> None:
+            while (len(res.status["running"]) < conc and res.status["pending"]):
+                test = res.status["pending"].pop(0)
+                res.status["running"].append(test)
+                to_start.append(test)
+
+        updated = self.coord.submit(suite.name, admit, requester=self.name)
+        if updated is None:
+            return
+        for test in to_start:
+            pod = Resource(
+                kind=TEST_POD, name=f"{suite.name}-{test}",
+                namespace=self.namespace or "default",
+                spec={"suite": suite.name, "test": test},
+                status={"phase": "Running"},
+            )
+            try:
+                self.store.create(pod)
+            except Exception:
+                continue
+            self.kubelet.start(pod, self._report)
+
+    def _report(self, pod_name: str, test: str, outcome: str) -> None:
+        pod = self.store.try_get(TEST_POD, pod_name, self.namespace or "default")
+        if pod is None:
+            return
+        suite_name = pod.spec["suite"]
+
+        # the paper's TestSuite *coordinator* recomputes the lists serially
+        def finish(res: Resource) -> None:
+            if test in res.status.get("running", []):
+                res.status["running"].remove(test)
+            res.status.setdefault(outcome, []).append(test)
+            threshold = res.spec.get("failureThreshold", 0)
+            failures = len(res.status.get("failed", [])) + len(
+                res.status.get("aborted", []))
+            if threshold and failures >= threshold:
+                res.status["aborted"] = (res.status.get("aborted", []) +
+                                         res.status.get("pending", []))
+                res.status["pending"] = []
+                res.status["state"] = "Aborted"
+            elif not res.status.get("pending") and not res.status.get("running"):
+                res.status["state"] = "Completed"
+
+        self.coord.submit(suite_name, finish, requester="testsuite-coordinator")
+        self.store.try_delete(TEST_POD, pod_name, self.namespace or "default")
+        # admission of the next pending test happens via the MODIFIED event
+
+
+class TestHarness:
+    """Standalone harness operator: give it scenarios, submit a TestSuite.
+
+    Runs its own store + runtime so it can drive scenarios against any
+    system under test (including full Platform instances the scenarios
+    construct internally) — the harness is blind to runner content.
+    """
+
+    def __init__(self, registry: dict, store: ResourceStore | None = None):
+        from ..core import Runtime
+
+        self.store = store or ResourceStore()
+        self.registry = registry
+        self.coord = Coordinator(self.store, crds.TEST_SUITE)
+        self.kubelet = TestRunnerKubelet(registry)
+        self.controller = TestSuiteController(self.store, None, self.coord,
+                                              self.kubelet)
+        self.runtime = Runtime(self.store, threaded=True)
+        self.runtime.register(self.controller)
+
+    def run_suite(self, name: str, tests: list, concurrency: int = 2,
+                  failure_threshold: int = 0, timeout: float = 300.0) -> dict:
+        from ..core import wait_for
+
+        self.store.create(make_test_suite(name, tests, concurrency,
+                                          failure_threshold))
+        wait_for(lambda: self.store.get(crds.TEST_SUITE, name).status["state"]
+                 != "Running", timeout)
+        return dict(self.store.get(crds.TEST_SUITE, name).status)
+
+    def shutdown(self) -> None:
+        self.runtime.stop()

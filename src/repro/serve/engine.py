@@ -1,0 +1,176 @@
+"""Serving: prefill + decode steps and a continuous-batching engine.
+
+``make_prefill_step`` / ``make_decode_step`` build the jit-able pure
+functions the dry-run lowers for the inference shapes.  ``ServeEngine`` is a
+small continuous-batching driver used by the serving example and the
+platform's serving jobs: it keeps a fixed batch of slots, admits new
+requests into free slots (prefilling them), and steps the whole batch one
+token at a time, retiring finished requests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import ModelOptions, decode_step, forward_with_cache, init_cache
+from ..sharding.ctx import use_rules
+
+
+def make_prefill_step(cfg: ArchConfig, opts: ModelOptions = ModelOptions(),
+                      max_len: int = 0, mesh=None, act_rules=None):
+    def prefill(params, batch):
+        ctx = use_rules(mesh, act_rules) if (mesh is not None and act_rules) else None
+        if ctx is not None:
+            with ctx:
+                return forward_with_cache(params, cfg, batch["tokens"],
+                                          batch.get("frontend_embeds"),
+                                          max_len=max_len, opts=opts)
+        return forward_with_cache(params, cfg, batch["tokens"],
+                                  batch.get("frontend_embeds"),
+                                  max_len=max_len, opts=opts)
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, opts: ModelOptions = ModelOptions(),
+                     mesh=None, act_rules=None):
+    def step(params, cache, tokens):
+        ctx = use_rules(mesh, act_rules) if (mesh is not None and act_rules) else None
+        if ctx is not None:
+            with ctx:
+                return decode_step(params, cfg, cache, tokens, opts)
+        return decode_step(params, cfg, cache, tokens, opts)
+
+    return step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Continuous batching over a fixed slot count (single-host driver).
+
+    Admission prefills a request into a free slot by re-running the batched
+    prefill with the slot's row swapped in (slot caches are batch rows of the
+    shared cache pytree).  Greedy decoding; per-slot lengths.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, num_slots: int, max_len: int,
+                 opts: ModelOptions = ModelOptions()):
+        self.cfg = cfg
+        self.params = params
+        self.opts = opts
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, num_slots, max_len,
+                                dtype=opts.dtype if opts.compute_dtype != "float32"
+                                else jnp.float32)
+        self.slots: list = [None] * num_slots
+        self.queue: list = []
+        self.finished: list = []
+        self._decode = jax.jit(make_decode_step(cfg, opts))
+        self._next_token = jnp.zeros((num_slots,), jnp.int32)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.num_slots):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[slot] = req
+                # reset the slot's cache row and feed the prompt token by token
+                self.cache = _reset_slot(self.cache, slot)
+                tok = self._next_token
+                for t in req.prompt:
+                    tok = tok.at[slot].set(t)
+                    logits, self.cache = self._decode_one_slot(slot, tok)
+                self._next_token = self._next_token.at[slot].set(
+                    int(jnp.argmax(logits[slot])))
+
+    def _decode_one_slot(self, slot: int, tokens):
+        # mask: only this slot advances during admission; other slots' len
+        # must not change.  We run the batched step but restore other rows.
+        before = self.cache
+        logits, after = self._decode(self.params, self.cache, tokens)
+        self.cache = _merge_slot(before, after, slot)
+        return logits, self.cache
+
+    def step(self) -> list:
+        """One engine tick: admit, decode one token for all active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        logits, self.cache = self._decode(self.params, self.cache, self._next_token)
+        out = []
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+            out.append((req.rid, tok))
+        self._next_token = nxt
+        return out
+
+    def run_until_drained(self, max_ticks: int = 10000) -> list:
+        ticks = 0
+        while (self.queue or any(s is not None for s in self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished
+
+
+def _is_stacked(path) -> bool:
+    """Leaves under cache['main'] carry a leading scanned-group dim; the
+    batch dim is axis 1 there, axis 0 elsewhere.  Decide by path, not by
+    shape — group count can collide with the slot count."""
+    from jax.tree_util import DictKey
+
+    for p in path:
+        if isinstance(p, DictKey):
+            return p.key == "main"
+    return False
+
+
+def _reset_slot(cache, slot: int):
+    def zero_row(path, x):
+        if _is_stacked(path):
+            return x.at[:, slot].set(jnp.zeros_like(x[:, slot]))
+        if x.ndim >= 1:
+            return x.at[slot].set(jnp.zeros_like(x[slot]))
+        return x
+
+    new = jax.tree_util.tree_map_with_path(zero_row, cache)
+    new["len"] = cache["len"].at[slot].set(0)
+    return new
+
+
+def _merge_slot(before, after, slot: int):
+    """Take ``after``'s row ``slot``; keep ``before`` elsewhere."""
+
+    def merge(path, b, a):
+        if _is_stacked(path):
+            return b.at[:, slot].set(a[:, slot])
+        if b.ndim >= 1:
+            return b.at[slot].set(a[slot])
+        return b
+
+    out = jax.tree_util.tree_map_with_path(merge, before, after)
+    out["len"] = before["len"].at[slot].set(after["len"][slot])
+    return out

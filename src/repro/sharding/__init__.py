@@ -1,0 +1,11 @@
+from .ctx import activation_rules, shard, use_rules
+from .specs import param_logical_axes, param_specs, logical_to_spec
+
+__all__ = [
+    "activation_rules",
+    "logical_to_spec",
+    "param_logical_axes",
+    "param_specs",
+    "shard",
+    "use_rules",
+]

@@ -1,0 +1,118 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names via ``shard(x,
+axes)``; the launcher binds logical names to mesh axes with ``use_rules``.
+Outside any binding (unit tests, single device) ``shard`` is the identity —
+the models stay mesh-agnostic, mirroring the paper's split between
+application code and platform-owned placement.
+
+Rule sets are plain dicts: logical name -> mesh axis (str), tuple of mesh
+axes, or None.  Unknown names shard to None (replicated).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current() -> Optional[tuple]:
+    return getattr(_state, "binding", None)
+
+
+@contextmanager
+def use_rules(mesh: Mesh, rules: dict):
+    prev = _current()
+    _state.binding = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.binding = prev
+
+
+def resolve(axes: tuple, rules: dict) -> P:
+    parts = []
+    for a in axes:
+        if a is None:
+            parts.append(None)
+        else:
+            parts.append(rules.get(a))
+    return P(*parts)
+
+
+def shard(x: jax.Array, axes: tuple) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by logical ``axes``.
+
+    Inside a partial-manual shard_map region (e.g. the compressed-gradient
+    path, manual over 'pod'), constraints must be built against the current
+    *abstract* mesh — its axis types carry the Manual marking — and must not
+    mention manual axes.
+    """
+    binding = _current()
+    if binding is None:
+        return x
+    mesh, rules = binding
+    abstract = jax.sharding.get_abstract_mesh()
+    if abstract is not None and not abstract.empty:
+        manual = {name for name, kind in zip(abstract.axis_names,
+                                             abstract.axis_types)
+                  if str(kind).endswith("Manual")}
+        if manual:
+            rules = _strip_axes(rules, manual)
+            spec = resolve(axes, rules)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(abstract, spec))
+    spec = resolve(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _strip_axes(rules: dict, banned: set) -> dict:
+    out = {}
+    for k, v in rules.items():
+        if isinstance(v, tuple):
+            v = tuple(a for a in v if a not in banned) or None
+        elif v in banned:
+            v = None
+        out[k] = v
+    return out
+
+
+# ---------------------------------------------------------------- rule sets
+
+
+def activation_rules(
+    *,
+    data_axes: tuple = ("pod", "data"),
+    model_axis: str = "model",
+    sequence_parallel: bool = False,
+    shard_cache_seq: bool = False,
+) -> dict:
+    """Standard rule set for the (pod, data, model) production mesh.
+
+    - ``batch``/``dp`` over the pure-DP axes,
+    - heads / ff / vocab / experts over the tensor axis,
+    - ``seq``: sharded over the tensor axis between blocks iff
+      ``sequence_parallel`` (the SP hillclimb lever),
+    - ``cache_seq``: KV-cache sequence axis; sharding it over the tensor
+      axis is the flash-decode/split-K lever for MQA decode.
+    """
+    return {
+        "batch": data_axes,
+        "dp": data_axes,
+        "seq": model_axis if sequence_parallel else None,
+        "heads": model_axis,
+        "kv_heads": model_axis,
+        "ff": model_axis,
+        "vocab": model_axis,
+        "expert": model_axis,
+        "rnn": model_axis,
+        "cache_seq": model_axis if shard_cache_seq else None,
+        "fsdp": "data",
+        "embed": None,
+    }

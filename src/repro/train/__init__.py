@@ -1,0 +1,22 @@
+from .optim import OptimizerConfig, adamw_update, clip_by_global_norm, init_opt_state
+from .step import (
+    TrainConfig,
+    abstract_train_state,
+    batch_sharding,
+    init_train_state,
+    make_train_step,
+    train_state_specs,
+)
+
+__all__ = [
+    "OptimizerConfig",
+    "TrainConfig",
+    "abstract_train_state",
+    "adamw_update",
+    "batch_sharding",
+    "clip_by_global_norm",
+    "init_opt_state",
+    "init_train_state",
+    "make_train_step",
+    "train_state_specs",
+]

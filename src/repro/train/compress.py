@@ -1,0 +1,85 @@
+"""Cross-pod gradient compression (int8 + error feedback).
+
+Cross-pod links are the scarcest bandwidth at multi-pod scale (the paper's
+networking-latency lesson, §8, transposed to ICI/DCN).  Pods are pure
+data-parallel replicas, so the only cross-pod traffic is the gradient
+combine; quantizing it to int8 cuts wire bytes 4x vs f32 (2x vs bf16).
+
+Mechanism: per-tensor symmetric int8 quantization with an error-feedback
+buffer (residual accumulation), combined via all-gather of the quantized
+payloads + per-pod scales, dequantize-and-mean locally.  The EF buffer keeps
+the scheme unbiased over time (Seide et al. 1-bit SGD; Karimireddy et al.
+EF-SGD).  EF state is per-pod: stored with a leading pod axis in the train
+state, sharded P('pod').
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array):
+    """Symmetric per-tensor int8.  Returns (q int8, scale f32 scalar)."""
+    g32 = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_mean_over_axis(grads, ef, axis_name: str):
+    """Inside shard_map(manual over ``axis_name``): EF-compressed mean.
+
+    grads/ef: matching pytrees (per-pod local values).
+    Returns (mean_grads f32, new_ef).
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        new_e = corrected - q.astype(jnp.float32) * scale
+        qs = jax.lax.all_gather(q, axis_name)  # int8 on the wire
+        ss = jax.lax.all_gather(scale, axis_name)
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * g.ndim)
+        return jnp.mean(deq, axis=0), new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    mean = jax.tree.unflatten(tree, [o[0] for o in outs])
+    new_ef = jax.tree.unflatten(tree, [o[1] for o in outs])
+    return mean, new_ef
+
+
+def init_ef_state(params, num_pods: int):
+    """Error-feedback buffers, one per pod (leading pod axis)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((num_pods,) + p.shape, jnp.float32), params)
+
+
+def ef_quantize_mean(grads_g, ef):
+    """Pure-pjit EF-compressed cross-pod gradient combine.
+
+    grads_g / ef: pytrees with leading pod dim (npods, ...), sharded
+    P('pod', ...).  Everything except the final mean is elementwise over
+    the pod dim (pod-local); the mean's gathered operand is int8, so the
+    cross-pod wire traffic is 1 byte/element + one scale per tensor per pod.
+    Returns (mean_grads (no pod dim), new_ef (pod dim)).
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        red_axes = tuple(range(1, corrected.ndim))
+        amax = jnp.max(jnp.abs(corrected), axis=red_axes, keepdims=True)
+        scale = jnp.maximum(amax, 1e-12) / 127.0  # (npods, 1, 1, ...)
+        q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+        new_e = corrected - q.astype(jnp.float32) * scale
+        mean = jnp.mean(q.astype(jnp.float32) * scale, axis=0)
+        return mean, new_e
+
+    flat_g, tree = jax.tree.flatten(grads_g)
+    flat_e = jax.tree.leaves(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tree, [o[0] for o in outs]),
+            jax.tree.unflatten(tree, [o[1] for o in outs]))

@@ -1,0 +1,75 @@
+"""AdamW optimizer over parameter pytrees, with global-norm clipping.
+
+Pure-pytree implementation (no optax dependency): the optimizer state is
+sharded exactly like the parameters (specs derive from the same logical
+axes — see repro.sharding.specs), which is what makes FSDP-style
+optimizer-state sharding automatic under pjit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return {"m": zeros(), "v": zeros()}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, clip: float):
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * factor.astype(g.dtype), grads), norm
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, opt_state, step):
+    """Returns (new_params, new_opt_state)."""
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step_dir = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32
+        return (p32 - lr * step_dir).astype(p.dtype), m_new, v_new
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tree, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}

@@ -1,0 +1,255 @@
+"""Core patterns: store semantics, controllers/conductors/coordinators, and
+the paper's determinism claim (§4) as a property test — random event
+interleavings converge to the same final state."""
+
+import os
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AlreadyExistsError,
+    CausalTrace,
+    Conductor,
+    ConflictError,
+    Controller,
+    Coordinator,
+    EventType,
+    NotFoundError,
+    OwnerRef,
+    Resource,
+    ResourceStore,
+    Runtime,
+)
+
+
+# ------------------------------------------------------------------- store
+
+
+def test_store_crud_and_versions():
+    s = ResourceStore()
+    r = s.create(Resource(kind="Job", name="a", spec={"x": 1}))
+    assert r.resource_version == 1 and r.generation == 1
+    r2 = s.update("Job", "a", lambda res: res.spec.update(x=2))
+    assert r2.generation == 2  # spec change bumps generation
+    r3 = s.update_status("Job", "a", {"state": "Up"})
+    assert r3.generation == 2  # status change does not
+    with pytest.raises(AlreadyExistsError):
+        s.create(Resource(kind="Job", name="a"))
+    s.delete("Job", "a")
+    with pytest.raises(NotFoundError):
+        s.get("Job", "a")
+
+
+def test_store_cas_conflict():
+    s = ResourceStore()
+    s.create(Resource(kind="Job", name="a"))
+    stale = s.get("Job", "a")
+    s.update("Job", "a", lambda r: r.spec.update(x=1))
+    with pytest.raises(ConflictError):
+        s.replace(stale, expected_version=stale.resource_version)
+
+
+def test_watch_replay_full_history():
+    s = ResourceStore()
+    s.create(Resource(kind="Job", name="a"))
+    s.update("Job", "a", lambda r: r.spec.update(x=1))
+    s.delete("Job", "a")
+    sub = s.watch(kinds=("Job",), replay=True)
+    events = [sub.poll() for _ in range(3)]
+    assert [e.type for e in events] == [EventType.ADDED, EventType.MODIFIED,
+                                        EventType.DELETED]
+    assert [e.seq for e in events] == [1, 2, 3]  # total order
+
+
+def test_wal_recovery(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    s = ResourceStore(wal_path=wal)
+    s.create(Resource(kind="Job", name="a", spec={"x": 1}))
+    s.create(Resource(kind="Pod", name="p"))
+    s.update("Job", "a", lambda r: r.spec.update(x=5))
+    s.delete("Pod", "p")
+    s.close()
+    s2 = ResourceStore.recover(wal)
+    assert s2.get("Job", "a").spec["x"] == 5
+    assert s2.try_get("Pod", "p") is None
+    assert s2.seq == 4
+
+
+def test_owner_gc_vs_bulk_delete():
+    s = ResourceStore()
+    s.create(Resource(kind="Job", name="j", labels={"job": "j"}))
+    for i in range(5):
+        s.create(Resource(kind="Pod", name=f"p{i}", labels={"job": "j"},
+                          owner_refs=(OwnerRef("Job", "j"),)))
+        s.create(Resource(kind="ConfigMap", name=f"c{i}", labels={"job": "j"},
+                          owner_refs=(OwnerRef("Pod", f"p{i}"),)))
+    s.delete("Job", "j")
+    removed = s.gc_collect()  # cascading: pods then configmaps
+    assert removed == 10
+    # bulk path
+    s.create(Resource(kind="Job", name="k", labels={"job": "k"}))
+    for i in range(5):
+        s.create(Resource(kind="Pod", name=f"q{i}", labels={"job": "k"}))
+    n = s.delete_collection(label_selector={"job": "k"})
+    assert n == 6
+
+
+# ------------------------------------------------------ controller semantics
+
+
+class CountingController(Controller):
+    def __init__(self, store, kind):
+        super().__init__(store, kind)
+        self.adds, self.mods, self.dels = [], [], []
+
+    def on_addition(self, res):
+        self.adds.append(res.name)
+
+    def on_modification(self, old, new):
+        self.mods.append((old.spec.get("x") if old else None, new.spec.get("x")))
+
+    def on_deletion(self, res):
+        self.dels.append(res.name)
+
+
+def test_controller_callbacks_and_cache():
+    s = ResourceStore()
+    c = CountingController(s, "Job")
+    rt = Runtime(s, threaded=False)
+    rt.register(c)
+    s.create(Resource(kind="Job", name="a", spec={"x": 1}))
+    s.update("Job", "a", lambda r: r.spec.update(x=2))
+    s.create(Resource(kind="Pod", name="p"))  # different kind: filtered
+    s.delete("Job", "a")
+    rt.drain()
+    assert c.adds == ["a"] and c.mods == [(1, 2)] and c.dels == ["a"]
+    assert c.cache == {}
+
+
+def test_conductor_receives_from_multiple_controllers():
+    s = ResourceStore()
+    seen = []
+
+    class C(Conductor):
+        kinds = ("Job", "Pod")
+
+        def on_event(self, event):
+            seen.append((event.resource.kind, event.type))
+
+    ca, cb = Controller(s, "Job"), Controller(s, "Pod")
+    cond = C(s)
+    ca.add_listener(cond)
+    cb.add_listener(cond)
+    rt = Runtime(s, threaded=False)
+    rt.register(ca)
+    rt.register(cb)
+    s.create(Resource(kind="Job", name="a"))
+    s.create(Resource(kind="Pod", name="p"))
+    rt.drain()
+    assert ("Job", EventType.ADDED) in seen and ("Pod", EventType.ADDED) in seen
+
+
+def test_coordinator_serializes_concurrent_writers():
+    s = ResourceStore()
+    s.create(Resource(kind="PE", name="pe", status={"launchCount": 0}))
+    coord = Coordinator(s, "PE")
+    n_threads, n_incr = 8, 50
+
+    def bump():
+        for _ in range(n_incr):
+            coord.submit("pe", lambda r: r.status.update(
+                launchCount=r.status["launchCount"] + 1))
+
+    threads = [threading.Thread(target=bump) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert s.get("PE", "pe").status["launchCount"] == n_threads * n_incr
+
+
+# --------------------------------------------------- determinism (property)
+
+
+class LaunchController(Controller):
+    """PE-controller-like: new resource -> coordinator bumps launchCount."""
+
+    def __init__(self, store, coord):
+        super().__init__(store, "PE")
+        self.coord = coord
+
+    def on_addition(self, res):
+        self.coord.submit(res.name, lambda r: r.status.update(
+            launchCount=r.status.get("launchCount", 0) + 1))
+
+
+class PodCreator(Conductor):
+    """Pod-conductor-like: launchCount changes -> create pods."""
+
+    kinds = ("PE",)
+
+    def on_event(self, event):
+        if event.type == EventType.DELETED:
+            return
+        res = event.resource
+        want = res.status.get("launchCount", 0)
+        if want < 1:
+            return
+        pod_name = f"pod-{res.name}"
+        pod = self.store.try_get("Pod", pod_name)
+        if pod is None:
+            self.store.create(Resource(kind="Pod", name=pod_name,
+                                       spec={"launch": want}))
+        elif pod.spec["launch"] < want:
+            self.store.update("Pod", pod_name,
+                              lambda r: r.spec.update(launch=want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 4), min_size=0, max_size=60),
+       st.integers(2, 6))
+def test_causal_chain_deterministic_under_interleaving(schedule, n_pes):
+    """Any interleaving of event delivery yields the same final state."""
+    s = ResourceStore()
+    pe_coord = Coordinator(s, "PE")
+    ctrl = LaunchController(s, pe_coord)
+    pod_ctrl = Controller(s, "Pod")
+    cond = PodCreator(s)
+    ctrl.add_listener(cond)
+    rt = Runtime(s, threaded=False)
+    rt.register(ctrl)
+    rt.register(pod_ctrl)
+    for i in range(n_pes):
+        s.create(Resource(kind="PE", name=f"pe{i}"))
+    it = iter(schedule)
+
+    def order(nonempty):
+        try:
+            return nonempty[next(it) % len(nonempty)]
+        except StopIteration:
+            return nonempty[0]
+
+    rt.drain(order=order)
+    pods = s.list(kind="Pod")
+    assert len(pods) == n_pes
+    for p in pods:
+        assert p.spec["launch"] == 1
+    for pe in s.list(kind="PE"):
+        assert pe.status["launchCount"] == 1
+
+
+def test_causal_trace_records_chain():
+    s = ResourceStore()
+    trace = CausalTrace()
+    pe_coord = Coordinator(s, "PE", trace=trace)
+    ctrl = LaunchController(s, pe_coord)
+    ctrl.trace = trace
+    rt = Runtime(s, threaded=False)
+    rt.register(ctrl)
+    s.create(Resource(kind="PE", name="pe0"))
+    rt.drain()
+    chain = trace.chain()
+    assert any("pe-coordinator:modify" in c for c in chain)
+    assert any("observe-add" in c for c in chain)

@@ -1,0 +1,105 @@
+"""System-level behaviour: the paper's test-harness style scenarios (§6.6) —
+submit, probe for states, randomly kill critical processes, assert recovery.
+Also covers the legacy-platform baseline used in benchmarks."""
+
+import time
+
+import pytest
+
+from repro.core import wait_for
+from repro.platform import Platform, crds
+from repro.platform.legacy import LegacyPlatform
+
+
+def test_scenario_kill_random_pes_streams():
+    """Paper §6.6: 'randomly killing critical processes' — the app must
+    return to full health after each kill and keep processing."""
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("chaos", {"app": {"type": "streams", "width": 2,
+                                   "pipeline_depth": 2,
+                                   "source": {"rate_sleep": 0.001}}})
+        assert p.wait_full_health("chaos", 60)
+        import random
+        rng = random.Random(0)
+        n_pes = len(p.pods("chaos"))
+        for _ in range(3):
+            victim = rng.randrange(1, n_pes)  # keep the source alive
+            p.kill_pod("chaos", victim)
+            assert p.wait_full_health("chaos", 90), f"no recovery after pe {victim}"
+
+        def sink_seen():
+            for x in p.pods("chaos"):
+                if x.status.get("sink"):
+                    return x.status["sink"]["seen"]
+            return 0
+
+        before = sink_seen()
+        assert wait_for(lambda: sink_seen() > before, 30)
+        p.delete_job("chaos")
+        assert p.wait_terminated("chaos", 30)
+    finally:
+        p.shutdown()
+
+
+def test_consistent_region_at_least_once(tmp_path):
+    """Kill the source of a consistent region: after recovery the sink must
+    have seen every sequence number at least once (duplicates allowed)."""
+    p = Platform(num_nodes=4, ckpt_root=str(tmp_path / "ckpt"))
+    try:
+        p.submit("cr-app", {
+            "app": {"type": "streams", "width": 1, "pipeline_depth": 1,
+                    "source": {"rate_sleep": 0.002}},
+            "consistentRegion": {"name": "region", "interval": 50,
+                                 "operators": ["src"]},
+        })
+        assert p.wait_full_health("cr-app", 60)
+        assert p.wait_cr_committed("cr-app", "region", 50, 60)
+        p.kill_pod("cr-app", 0)  # kill the source
+        assert p.wait_full_health("cr-app", 90)
+        assert p.wait_cr_committed("cr-app", "region", 100, 90)
+
+        def sink():
+            for x in p.pods("cr-app"):
+                if x.status.get("sink"):
+                    return x.status["sink"]
+            return None
+
+        assert wait_for(lambda: (sink() or {}).get("maxseq", -1) >= 150, 60)
+        s = sink()
+        # at-least-once: seen count >= distinct sequence numbers (replays
+        # after rollback produce duplicates, never gaps)
+        assert s["seen"] >= s["maxseq"] * 0.9
+    finally:
+        p.shutdown()
+
+
+def test_legacy_platform_parity_smoke():
+    lp = LegacyPlatform(num_nodes=4, zk_op_cost=0.0)
+    try:
+        lp.submit("l1", {"app": {"type": "streams", "width": 2,
+                                 "pipeline_depth": 2,
+                                 "source": {"tuples": 200}}})
+        assert wait_for(lambda: lp.full_health("l1"), 30)
+        assert wait_for(lambda: any(s["seen"] >= 200 for s in lp.sinks.values()),
+                        60)
+        lp.change_width("l1", "par", 4)
+        assert len(lp.plans["l1"].pes) > 0
+        lp.cancel("l1")
+        assert not any(j == "l1" for (j, _) in lp.pes)
+    finally:
+        lp.shutdown()
+
+
+def test_legacy_kill_pe_recovers():
+    lp = LegacyPlatform(num_nodes=4, zk_op_cost=0.0)
+    try:
+        lp.submit("l2", {"app": {"type": "streams", "width": 2,
+                                 "pipeline_depth": 1,
+                                 "source": {"rate_sleep": 0.001}}})
+        assert wait_for(lambda: lp.full_health("l2"), 30)
+        assert lp.kill_pe("l2", 2)
+        assert wait_for(lambda: lp.full_health("l2"), 60)
+        lp.cancel("l2")
+    finally:
+        lp.shutdown()

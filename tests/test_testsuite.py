@@ -1,0 +1,74 @@
+"""The paper's §6.6 test-harness operator: TestSuite CRD life cycle."""
+
+import time
+
+from repro.platform.testsuite import TestHarness
+
+
+def test_suite_runs_to_completion_with_concurrency():
+    seen = []
+
+    def ok(name):
+        def fn():
+            seen.append(name)
+            time.sleep(0.05)
+        return fn
+
+    registry = {f"t{i}": ok(f"t{i}") for i in range(6)}
+    h = TestHarness(registry)
+    try:
+        status = h.run_suite("suite1", list(registry), concurrency=2)
+        assert status["state"] == "Completed"
+        assert sorted(status["passed"]) == sorted(registry)
+        assert status["failed"] == [] and status["pending"] == []
+        assert sorted(seen) == sorted(registry)
+    finally:
+        h.shutdown()
+
+
+def test_suite_failure_threshold_aborts_pending():
+    def boom():
+        raise RuntimeError("deliberate test failure")
+
+    def slow_ok():
+        time.sleep(0.2)
+
+    registry = {"bad1": boom, "bad2": boom, "ok1": slow_ok, "ok2": slow_ok,
+                "ok3": slow_ok, "ok4": slow_ok}
+    h = TestHarness(registry)
+    try:
+        status = h.run_suite("suite2", ["bad1", "bad2", "ok1", "ok2", "ok3", "ok4"],
+                             concurrency=1, failure_threshold=2)
+        assert status["state"] == "Aborted"
+        assert set(status["failed"]) == {"bad1", "bad2"}
+        assert status["aborted"], "pending tests should move to aborted"
+    finally:
+        h.shutdown()
+
+
+def test_suite_scenario_against_real_platform():
+    """A harness scenario that drives a real Platform instance — the paper's
+    'randomly killing critical processes' style, platform-under-test."""
+    from repro.core import wait_for
+    from repro.platform import Platform
+
+    def scenario_submit_and_recover():
+        p = Platform(num_nodes=2)
+        try:
+            p.submit("sut", {"app": {"type": "streams", "width": 1,
+                                     "pipeline_depth": 1,
+                                     "source": {"rate_sleep": 0.002}}})
+            assert p.wait_full_health("sut", 60)
+            assert p.kill_pod("sut", 1)
+            assert p.wait_full_health("sut", 60)
+        finally:
+            p.shutdown()
+
+    h = TestHarness({"submit_and_recover": scenario_submit_and_recover})
+    try:
+        status = h.run_suite("platform-suite", ["submit_and_recover"],
+                             concurrency=1, timeout=180)
+        assert status["state"] == "Completed"
+        assert status["passed"] == ["submit_and_recover"]
+    finally:
+        h.shutdown()
