@@ -8,6 +8,10 @@
   fig11  consistent-region (training) failure recovery       (paper Fig. 11)
   table1 lines-of-code accounting                            (paper Table 1)
   roofline  per-cell roofline terms from the dry-run         (EXPERIMENTS §Roofline)
+  autoscale  closed-loop elasticity: reaction latency + steady width
+             (paper-Fig.9-style, but the platform reacts on its own)
+
+``--smoke`` runs only the cheap, thread-free benchmarks (CI regression guard).
 
 Prints ``name,us_per_call,derived`` CSV rows.  Scales are reduced for the
 single-core CPU container; the *shape* of each comparison (scaling with
@@ -229,6 +233,43 @@ def bench_fig11_cr_recovery(tmpdir="/tmp/repro-bench-ckpt") -> None:
         p.shutdown()
 
 
+# ------------------------------------------------------------- autoscale
+
+
+def bench_autoscale_rampup(max_width: int = 4, settle: float = 3.0) -> None:
+    """Closed-loop elasticity (the self-driving version of Fig. 9): a width-1
+    region under a source that outruns its channels; measure the latency from
+    policy creation to the conductor's first width change, to the pods
+    existing, and to full health — then the steady-state width it settles at."""
+    spec = {"app": {"type": "streams", "width": 1, "pipeline_depth": 1,
+                    "source": {"rate_sleep": 0.0005},
+                    "channel": {"work_sleep": 0.004}}}
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("j", spec)
+        assert p.wait_full_health("j", 120)
+        n0 = len(p.pods("j"))
+        t0 = time.monotonic()
+        p.set_scaling_policy("j", "par", max_width=max_width, scale_up_at=0.3,
+                             cooldown=0.5)
+        assert wait_for(lambda: p.region_width("j", "par") >= 2, 120)
+        emit("autoscale.reaction.width", time.monotonic() - t0,
+             "policy -> first width change")
+        assert wait_for(lambda: len(p.pods("j")) >= n0 + 1, 120)
+        emit("autoscale.reaction.pods", time.monotonic() - t0,
+             "policy -> scaled pods exist")
+        assert p.wait_full_health("j", 120)
+        emit("autoscale.reaction.fullhealth", time.monotonic() - t0)
+        time.sleep(settle)  # let further scale steps land
+        width = p.region_width("j", "par")
+        bp = p.job_metrics("j").get("regions", {}).get("par", {}).get(
+            "backpressure", -1.0)
+        emit("autoscale.steady.width", 0.0,
+             f"width={width};backpressure={bp:.2f};max={max_width}")
+    finally:
+        p.shutdown()
+
+
 # ---------------------------------------------------------------- table 1
 
 
@@ -292,11 +333,18 @@ BENCHES = {
     "fig11": bench_fig11_cr_recovery,
     "table1": bench_table1_loc,
     "roofline": bench_roofline,
+    "autoscale": bench_autoscale_rampup,
 }
+
+# cheap, thread-free subset for CI (`--smoke`)
+SMOKE = ("fig7c", "table1")
 
 
 def main() -> None:
-    only = sys.argv[1:] or list(BENCHES)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    only = list(SMOKE) if smoke else (args or list(BENCHES))
+    errors = 0
     print("name,us_per_call,derived")
     for name in only:
         try:
@@ -306,6 +354,7 @@ def main() -> None:
 
             traceback.print_exc()
             emit(f"{name}.ERROR", 0.0, repr(exc))
+            errors += 1
     out = os.path.join(os.path.dirname(__file__), "..", "results",
                        "benchmarks.csv")
     os.makedirs(os.path.dirname(out), exist_ok=True)
@@ -313,6 +362,8 @@ def main() -> None:
         f.write("name,us_per_call,derived\n")
         for name, us, derived in ROWS:
             f.write(f"{name},{us:.1f},{derived}\n")
+    if smoke and errors:  # the CI guard must actually guard
+        sys.exit(1)
 
 
 if __name__ == "__main__":

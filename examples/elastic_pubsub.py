@@ -1,0 +1,87 @@
+"""Elastic pub-sub: the platform reacts to its own workload.
+
+An ingest job burns through a finite backlog (a consistent region
+checkpoints the source offset, so width-change restarts resume instead of
+replaying) with channels that are much slower than the source.  A
+ScalingPolicy on its parallel region lets the AutoscaleConductor watch the
+metrics plane and widen the region — no human edits any spec.  An
+analytics job subscribes to the exported stream by property and keeps
+receiving tuples across every scaling event (loose coupling).  When the
+backlog is done the load vanishes and the same policy shrinks the region
+back to minWidth.
+
+Run:  PYTHONPATH=src python examples/elastic_pubsub.py
+"""
+
+from repro.core import wait_for
+from repro.platform import Platform
+
+
+def region_state(p, job, region):
+    agg = p.job_metrics(job).get("regions", {}).get(region, {})
+    return (p.region_width(job, region), agg.get("backpressure", 0.0))
+
+
+def sink_seen(p, job):
+    for x in p.pods(job):
+        if x.status.get("sink"):
+            return x.status["sink"]["seen"]
+    return 0
+
+
+def main() -> None:
+    p = Platform(num_nodes=4)
+    try:
+        print("== deploy ingest: a 6000-tuple backlog, channels ~250 tuples/s")
+        p.submit("ingest", {
+            "app": {
+                "type": "streams", "width": 1, "pipeline_depth": 1,
+                "source": {"tuples": 6000, "rate_sleep": 0.0005},
+                "channel": {"work_sleep": 0.004},
+                "export": {"stream": "firehose",
+                           "properties": {"team": "analytics"}},
+            },
+            # source offset checkpoints: scale restarts resume, not replay
+            "consistentRegion": {"name": "region", "interval": 500},
+        })
+        assert p.wait_full_health("ingest", 60)
+        print("   width=%d backpressure=%.2f" % region_state(p, "ingest", "par"))
+
+        print("== attach a ScalingPolicy; the platform does the rest")
+        p.set_scaling_policy("ingest", "par", min_width=1, max_width=3,
+                             scale_up_at=0.6, scale_down_at=0.02,
+                             cooldown=0.5)
+        assert wait_for(lambda: p.region_width("ingest", "par") >= 2, 60)
+        w, bp = region_state(p, "ingest", "par")
+        print(f"   scaled up: width={w} backpressure={bp:.2f}")
+
+        print("== deploy analytics: subscribes to the stream by property")
+        p.submit("analytics", {"app": {
+            "type": "streams", "width": 1, "pipeline_depth": 1,
+            "pre_ops": 0, "post_ops": 0, "source": {"tuples": 1},
+            "import": {"subscription": {"properties": {"team": "analytics"}}},
+        }})
+        assert wait_for(lambda: sink_seen(p, "analytics") > 100, 60)
+        print("   analytics received:", sink_seen(p, "analytics"),
+              "tuples while ingest was scaling")
+
+        print("== backlog drains; load vanishes; region shrinks back")
+        assert wait_for(lambda: p.region_width("ingest", "par") == 1, 180)
+        w, bp = region_state(p, "ingest", "par")
+        print(f"   scaled down: width={w} backpressure={bp:.2f}")
+
+        print("== causal chain (autoscale entries):")
+        for e in p.trace.chain():
+            if e.startswith("autoscale-conductor:scale"):
+                print("   ", e)
+        print("OK")
+    finally:
+        p.delete_job("analytics")
+        p.delete_job("ingest")
+        p.wait_terminated("analytics", 30)
+        p.wait_terminated("ingest", 30)
+        p.shutdown()
+
+
+if __name__ == "__main__":
+    main()

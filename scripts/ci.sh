@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 verification + cheap benchmark smoke. Run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests"
+python -m pytest -x -q
+
+echo "== benchmark smoke (thread-free subset)"
+python benchmarks/run.py --smoke
+
+echo "CI OK"

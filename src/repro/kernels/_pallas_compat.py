@@ -1,0 +1,10 @@
+"""JAX-version compatibility for Pallas TPU symbols.
+
+Newer JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+the kernels here are written against the new name.  Resolve whichever the
+installed JAX provides so the kernels run on both.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -15,8 +15,10 @@ import time
 from ..ckpt import CheckpointStore
 from ..core import CausalTrace, Coordinator, ResourceStore, Runtime, wait_for
 from . import crds
+from .autoscale import AutoscaleConductor
 from .cluster import KubeletController, SchedulerController
 from .fabric import Fabric
+from .metrics import MetricsPlane
 from .operator import (
     ConsistentRegionController,
     ConsistentRegionOperator,
@@ -55,6 +57,12 @@ class Platform:
             "pod": Coordinator(self.store, crds.POD, namespace, trace=self.trace),
             "cr": Coordinator(self.store, crds.CONSISTENT_REGION, namespace,
                               trace=self.trace),
+            "pr": Coordinator(self.store, crds.PARALLEL_REGION, namespace,
+                              trace=self.trace),
+            "metrics": Coordinator(self.store, crds.METRICS, namespace,
+                                   trace=self.trace),
+            "policy": Coordinator(self.store, crds.SCALING_POLICY, namespace,
+                                  trace=self.trace),
         }
         self.coords = coords
         self.rest = RestFacade(self.store, coords["pod"], self.ckpt, namespace)
@@ -80,6 +88,11 @@ class Platform:
         self.rest.broker = self.broker
         self.straggler_monitor = StragglerMonitor(self.store, namespace,
                                                   coords["pod"], self.trace)
+        # metrics plane + elastic autoscaling (the load -> width control loop)
+        self.metrics_plane = MetricsPlane(self.store, namespace, coords,
+                                          self.trace)
+        self.autoscaler = AutoscaleConductor(self.store, namespace, coords,
+                                             self.trace)
 
         # conductor registration (paper Fig. 4 observation matrix)
         self.pe_controller.add_listener(self.pod_conductor)
@@ -87,10 +100,12 @@ class Platform:
         self.pod_controller.add_listener(self.pod_conductor)
         self.pod_controller.add_listener(self.job_conductor)
         self.pod_controller.add_listener(self.cr_operator)
+        self.pod_controller.add_listener(self.metrics_plane)
         self.job_controller.add_listener(self.job_conductor)
         self.import_controller.add_listener(self.broker)
         self.export_controller.add_listener(self.broker)
         self.cr_controller.add_listener(self.cr_operator)
+        self.pr_controller.add_listener(self.autoscaler)
 
         # ConfigMap/Service events reach conductors through dedicated
         # lightweight controllers (a controller tracks exactly one kind).
@@ -105,10 +120,23 @@ class Platform:
         self.svc_controller.add_listener(self.pod_conductor)
         self.svc_controller.add_listener(self.job_conductor)
 
+        # Metrics / ScalingPolicy events reach the autoscale conductor the
+        # same way: one lightweight controller per kind.
+        self.metrics_controller = Controller(self.store, crds.METRICS,
+                                             namespace, "metrics-controller",
+                                             self.trace)
+        self.policy_controller = Controller(self.store, crds.SCALING_POLICY,
+                                            namespace,
+                                            "scalingpolicy-controller",
+                                            self.trace)
+        self.metrics_controller.add_listener(self.autoscaler)
+        self.policy_controller.add_listener(self.autoscaler)
+
         controllers = [
             self.job_controller, self.pe_controller, self.pod_controller,
             self.pr_controller, self.import_controller, self.export_controller,
             self.cr_controller, self.cm_controller, self.svc_controller,
+            self.metrics_controller, self.policy_controller,
         ]
 
         # --- cluster substrate (Kubernetes's half)
@@ -147,6 +175,33 @@ class Platform:
     def kill_pod(self, job: str, pe_id: int) -> bool:
         assert self.kubelet is not None
         return self.kubelet.kill_pod(crds.pod_name(job, pe_id))
+
+    def set_scaling_policy(self, job: str, region: str, **kw):
+        """kubectl apply scalingpolicy ... (create-or-replace)."""
+        res = crds.make_scaling_policy(job, region, namespace=self.namespace,
+                                       **kw)
+        if self.store.exists(crds.SCALING_POLICY, res.name, self.namespace):
+            def edit(cur, spec=res.spec):
+                cur.spec.update(spec)
+            return self.store.update(crds.SCALING_POLICY, res.name, edit,
+                                     namespace=self.namespace)
+        return self.store.create(res)
+
+    def delete_scaling_policy(self, job: str, region: str) -> bool:
+        return self.store.try_delete(crds.SCALING_POLICY,
+                                     crds.policy_name(job, region),
+                                     self.namespace)
+
+    def region_width(self, job: str, region: str) -> int:
+        pr = self.store.try_get(crds.PARALLEL_REGION, crds.pr_name(job, region),
+                                self.namespace)
+        return pr.spec.get("width", 0) if pr else 0
+
+    def job_metrics(self, job: str) -> dict:
+        """The metrics plane's published rollup for one job."""
+        res = self.store.try_get(crds.METRICS, crds.metrics_name(job),
+                                 self.namespace)
+        return dict(res.status) if res else {}
 
     # -------------------------------------------------------------- waits
 

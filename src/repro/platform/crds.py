@@ -23,9 +23,11 @@ POD = "Pod"
 SERVICE = "Service"
 NODE = "Node"
 TEST_SUITE = "TestSuite"
+METRICS = "Metrics"
+SCALING_POLICY = "ScalingPolicy"
 
 CUSTOM_KINDS = (JOB, PE, PARALLEL_REGION, HOSTPOOL, IMPORT, EXPORT,
-                CONSISTENT_REGION, TEST_SUITE)
+                CONSISTENT_REGION, TEST_SUITE, METRICS, SCALING_POLICY)
 K8S_KINDS = (CONFIG_MAP, POD, SERVICE, NODE)
 
 
@@ -54,6 +56,14 @@ def pr_name(job: str, region: str) -> str:
 
 def cr_name(job: str, region: str) -> str:
     return f"{job}-cr-{region}"
+
+
+def metrics_name(job: str) -> str:
+    return f"{job}-metrics"
+
+
+def policy_name(job: str, region: str) -> str:
+    return f"{job}-scale-{region}"
 
 
 def job_labels(job: str) -> dict:
@@ -160,6 +170,46 @@ def make_consistent_region(job: str, region: str, spec: dict,
         labels=job_labels(job),
         owner_refs=(OwnerRef(JOB, job),),
         status={"state": "Idle", "lastCommitted": -1},
+    )
+
+
+def make_metrics(job: str, namespace: str = "default") -> Resource:
+    """One Metrics resource per job: the metrics plane's published rollups.
+
+    spec is empty (there is no desired state — metrics are pure observation);
+    all content lives in status, written only by the metrics coordinator.
+    """
+    return Resource(
+        kind=METRICS, name=metrics_name(job), namespace=namespace,
+        spec={"job": job},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+        status={"operators": {}, "regions": {}},
+    )
+
+
+def make_scaling_policy(job: str, region: str, *, min_width: int = 1,
+                        max_width: int = 4, metric: str = "backpressure",
+                        scale_up_at: float = 0.5, scale_down_at: float = 0.05,
+                        target_per_channel: float = 0.0, step: int = 1,
+                        cooldown: float = 1.0,
+                        namespace: str = "default") -> Resource:
+    """ScalingPolicy CRD: bounds + thresholds the autoscale conductor obeys.
+
+    ``metric`` selects the region aggregate to scale on: "backpressure"
+    (mean input-queue fill, thresholded) or "throughput" (tuples/s divided
+    by ``target_per_channel`` gives the wanted width directly).
+    """
+    return Resource(
+        kind=SCALING_POLICY, name=policy_name(job, region), namespace=namespace,
+        spec={"job": job, "region": region, "minWidth": min_width,
+              "maxWidth": max_width, "metric": metric,
+              "scaleUpAt": scale_up_at, "scaleDownAt": scale_down_at,
+              "targetPerChannel": target_per_channel, "step": step,
+              "cooldown": cooldown},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+        status={"lastScaleAt": 0.0},
     )
 
 

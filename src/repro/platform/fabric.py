@@ -33,27 +33,54 @@ class ShutDown(Exception):
 
 
 class TupleQueue:
-    """Bounded blocking queue standing in for a PE-PE TCP connection."""
+    """Bounded blocking queue standing in for a PE-PE TCP connection.
+
+    Instrumented for the metrics plane: cumulative enqueue/dequeue counters,
+    a depth high-watermark, and a count of puts that found the queue full
+    (the backpressure signal autoscaling acts on).
+    """
 
     def __init__(self, maxsize: int = 1024):
         self._q = queue.Queue(maxsize=maxsize)
+        self.capacity = maxsize
         self.closed = False
+        self.enqueued = 0
+        self.dequeued = 0
+        self.high_watermark = 0
+        self.blocked_puts = 0
 
     def put(self, item, timeout: float = 10.0) -> None:
+        if self._q.full():
+            self.blocked_puts += 1
         self._q.put(item, timeout=timeout)
+        self.enqueued += 1
+        depth = self._q.qsize()
+        if depth > self.high_watermark:
+            self.high_watermark = depth
 
     def get(self, timeout: float = 0.2):
         try:
-            return self._q.get(timeout=timeout)
+            item = self._q.get(timeout=timeout)
         except queue.Empty:
             return None
+        self.dequeued += 1
+        return item
 
     def drain(self) -> None:
         try:
             while True:
                 self._q.get_nowait()
+                self.dequeued += 1
         except queue.Empty:
             pass
+
+    def stats(self) -> dict:
+        depth = self._q.qsize()
+        return {"depth": depth, "capacity": self.capacity,
+                "fill": depth / self.capacity if self.capacity else 0.0,
+                "enqueued": self.enqueued, "dequeued": self.dequeued,
+                "highWatermark": self.high_watermark,
+                "blockedPuts": self.blocked_puts}
 
     def __len__(self):
         return self._q.qsize()

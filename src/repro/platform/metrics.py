@@ -1,0 +1,151 @@
+"""Metrics plane: per-PE load samples -> per-operator/region rollups.
+
+PEs already push raw metric samples through ``RestFacade.report_metrics``
+(they land in pod status).  The ``MetricsPlane`` conductor observes those
+pod events, keeps rolling windows per (job, PE), and publishes per-operator
+and per-ParallelRegion aggregates into a job's ``Metrics`` resource — so
+every downstream consumer (the autoscale conductor, dashboards, tests) gets
+metrics through the normal resource/event system instead of a side channel.
+
+Aggregates per region:
+- ``backpressure``: mean input-queue fill across the region's channels —
+  the primary elasticity signal;
+- ``throughput``:   sum of per-channel tuple rates (d tuplesIn / dt over the
+  window; tuplesOut for sources);
+- ``queueDepth``:   summed depths; ``stepTime``: mean trainer step time.
+
+Like every conductor, its state is recomputable: windows rebuild from the
+live stream after a restart, and the published resource is just a cache of
+them.  The Metrics resource is created by this conductor (the way the pod
+conductor creates pods) but only mutated through the metrics coordinator.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+
+from ..core import Conductor, Event, EventType
+from . import crds
+
+
+class MetricsPlane(Conductor):
+    """Aggregates pod metric samples and publishes Metrics resources."""
+
+    kinds = (crds.POD,)
+
+    def __init__(self, store, namespace, coords, trace=None, *,
+                 window: float = 5.0, publish_interval: float = 0.2,
+                 clock=time.monotonic):
+        super().__init__(store, "metrics-plane", trace)
+        self.namespace = namespace
+        self.coords = coords
+        self.window = window
+        self.publish_interval = publish_interval
+        self.clock = clock
+        self._samples: dict = {}  # (job, peId) -> deque[(t, sample)]
+        self._last_publish: dict = {}  # job -> t
+
+    # ------------------------------------------------------------ ingestion
+
+    def on_event(self, event: Event) -> None:
+        pod = event.resource
+        job = pod.spec.get("job")
+        pe_id = pod.spec.get("peId")
+        if job is None or pe_id is None:
+            return
+        if event.type == EventType.DELETED:
+            self._samples.pop((job, pe_id), None)
+            return
+        sample = pod.status.get("metrics")
+        if not isinstance(sample, dict) or "operator" not in sample:
+            return  # not a load sample (e.g. bare sink/heartbeat status)
+        self.ingest(job, pe_id, sample)
+        self.publish(job)
+
+    def ingest(self, job: str, pe_id: int, sample: dict,
+               now: float | None = None) -> None:
+        now = self.clock() if now is None else now
+        win = self._samples.setdefault((job, pe_id), deque())
+        # unrelated pod status patches re-deliver the last sample; appending
+        # the duplicate at a later t would dilute the computed rates
+        if not win or win[-1][1] != sample:
+            win.append((now, sample))
+        cutoff = now - self.window
+        while win and win[0][0] < cutoff:
+            win.popleft()
+
+    # ---------------------------------------------------------- aggregation
+
+    @staticmethod
+    def _rate(win) -> float:
+        """Tuple rate over the window from cumulative counters."""
+        if len(win) < 2:
+            return 0.0
+        (t0, s0), (t1, s1) = win[0], win[-1]
+        if t1 <= t0:
+            return 0.0
+        key = "tuplesIn" if s1.get("kind") != "source" else "tuplesOut"
+        d = s1.get(key, 0) - s0.get(key, 0)
+        return max(d, 0) / (t1 - t0)
+
+    def aggregate(self, job: str) -> dict:
+        """Pure rollup of the current windows for one job."""
+        operators: dict = {}
+        regions: dict = {}
+        for (j, pe_id), win in self._samples.items():
+            if j != job or not win:
+                continue
+            _, latest = win[-1]
+            rate = self._rate(win)
+            op_entry = {**latest, "rate": rate, "peId": pe_id}
+            operators[latest["operator"]] = op_entry
+            region = latest.get("region")
+            if not region:
+                continue
+            agg = regions.setdefault(region, {
+                "channels": 0, "backpressure": 0.0, "throughput": 0.0,
+                "queueDepth": 0, "blockedPuts": 0, "stepTime": 0.0,
+                "stepTimeSamples": 0})
+            agg["channels"] += 1
+            agg["backpressure"] += latest.get("backpressure", 0.0)
+            agg["throughput"] += rate
+            agg["queueDepth"] += latest.get("queueDepth", 0)
+            agg["blockedPuts"] += latest.get("blockedPuts", 0)
+            if latest.get("stepTime"):
+                agg["stepTime"] += latest["stepTime"]
+                agg["stepTimeSamples"] += 1
+        for agg in regions.values():
+            agg["backpressure"] /= max(agg["channels"], 1)
+            if agg["stepTimeSamples"]:
+                agg["stepTime"] /= agg["stepTimeSamples"]
+            del agg["stepTimeSamples"]
+        return {"operators": operators, "regions": regions}
+
+    # ------------------------------------------------------------ publishing
+
+    def publish(self, job: str, force: bool = False) -> bool:
+        """Write the rollup into the job's Metrics resource (throttled)."""
+        now = self.clock()
+        if not force and now - self._last_publish.get(job, -1e9) < self.publish_interval:
+            return False
+        if not self.store.exists(crds.JOB, job, self.namespace):
+            return False  # job torn down: don't resurrect labeled resources
+        self._last_publish[job] = now
+        rollup = self.aggregate(job)
+        name = crds.metrics_name(job)
+        if not self.store.exists(crds.METRICS, name, self.namespace):
+            try:
+                self.store.create(crds.make_metrics(job, self.namespace))
+            except Exception:  # lost a create race; the update below lands
+                pass
+            if not self.store.exists(crds.JOB, job, self.namespace):
+                # teardown swept the job between our existence check and the
+                # create: remove the orphan or wait_terminated never drains
+                self.store.try_delete(crds.METRICS, name, self.namespace)
+                return False
+        self.coords["metrics"].submit_status(
+            name, {**rollup, "updatedAt": now}, requester=self.name)
+        self._record("publish", (crds.METRICS, self.namespace, name),
+                     f"regions={len(rollup['regions'])}")
+        return True

@@ -76,7 +76,8 @@ def _streams_logical(app: dict, cr) -> LogicalModel:
     region_first = prev
     rprev = None
     for j in range(depth):
-        ops.append(OpDef(f"ch{j}", "pipe", region="par"))
+        ops.append(OpDef(f"ch{j}", "pipe", region="par",
+                         config=app.get("channel", {})))
         if rprev is None:
             edges.append((region_first, f"ch{j}"))
         else:

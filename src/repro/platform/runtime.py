@@ -48,6 +48,7 @@ class PERuntime(threading.Thread):
         self.out_targets: dict = {}  # portId -> list[TupleQueue]
         self.crashed = False
         self.counts = {"in": 0, "out": 0}
+        self._last_load_report = 0.0
 
     # ------------------------------------------------------------- plumbing
 
@@ -93,6 +94,40 @@ class PERuntime(threading.Thread):
                 q.put(item, timeout=1.0)
             except Exception:
                 pass
+
+    # ------------------------------------------------------------- metrics
+
+    def load_metrics(self, extra: dict | None = None) -> dict:
+        """The per-PE load sample the metrics plane aggregates (§5.2 metrics
+        reporting, extended with the queue-depth/backpressure signals the
+        autoscale conductor scales on)."""
+        op = self.meta["operators"][0]
+        stats = [q.stats() for q in self.in_queues.values()]
+        depth = sum(s["depth"] for s in stats)
+        cap = sum(s["capacity"] for s in stats)
+        blocked = sum(s["blockedPuts"] for s in stats)
+        sample = {
+            "operator": op["name"], "kind": op["kind"],
+            "region": op.get("region"), "channel": op.get("channel", -1),
+            "tuplesIn": self.counts["in"], "tuplesOut": self.counts["out"],
+            "queueDepth": depth, "queueCapacity": cap,
+            "backpressure": depth / cap if cap else 0.0,
+            "blockedPuts": blocked,
+            "queueHighWatermark": sum(s["highWatermark"] for s in stats),
+            "monotonic": time.monotonic(),
+        }
+        if extra:
+            sample.update(extra)
+        return sample
+
+    def _report_load(self, extra: dict | None = None,
+                     interval: float = 0.2) -> None:
+        now = time.monotonic()
+        if now - self._last_load_report < interval:
+            return
+        self._last_load_report = now
+        self.rest.report_metrics(self.job, self.pe_id,
+                                 self.load_metrics(extra))
 
     # ---------------------------------------------------------------- body
 
@@ -153,6 +188,7 @@ class PERuntime(threading.Thread):
             item = {"seq": offset, "data": offset % 97}
             self._emit(0, item, partition=offset)
             offset += 1
+            self._report_load()
             if interval and offset % interval == 0:
                 self.rest.ckpt.save_shard(self.job, region, offset,
                                           f"pe{self.pe_id}",
@@ -168,6 +204,7 @@ class PERuntime(threading.Thread):
         """pipe/sink/router/server: pull, transform, push."""
         op = self.meta["operators"][0]
         is_sink = op["kind"] == "sink"
+        work_sleep = op.get("config", {}).get("work_sleep", 0)
         seen = 0
         maxseq = -1
         while not self.stop_event.is_set():
@@ -176,9 +213,12 @@ class PERuntime(threading.Thread):
                 time.sleep(0.01)
                 continue
             item = q.get(timeout=0.1)
+            self._report_load()
             if item is None:
                 continue
             self.counts["in"] += 1
+            if work_sleep:  # synthetic per-tuple cost (load tests/benchmarks)
+                time.sleep(work_sleep)
             if is_sink:
                 seen += 1
                 maxseq = max(maxseq, item.get("seq", -1))
@@ -202,6 +242,7 @@ class PERuntime(threading.Thread):
                 continue
             item = q.get(timeout=0.1)
             if item is None:
+                self._report_load()
                 continue
             self.counts["in"] += 1
             step = item["step"]
@@ -209,8 +250,9 @@ class PERuntime(threading.Thread):
             if len(pending[step]) == width:
                 mean = float(np.mean(pending.pop(step)))
                 self._emit(0, {"seq": step, "step": step, "loss": mean})
-                self.rest.report_metrics(self.job, self.pe_id,
-                                         {"step": step, "loss": mean})
+                self.rest.report_metrics(
+                    self.job, self.pe_id,
+                    self.load_metrics({"step": step, "loss": mean}))
 
     # -------------------------------------------------------------- trainer
 
@@ -266,6 +308,7 @@ class PERuntime(threading.Thread):
         epoch = group.epoch
 
         while not self.stop_event.is_set() and step < max_steps:
+            step_t0 = time.monotonic()
             # deterministic shard: global batch at offset=step, this channel's
             # slice — recomputable from (seed, step, channel): no data state
             batch = source.batch_at(step * width + channel)
@@ -292,7 +335,9 @@ class PERuntime(threading.Thread):
                                               arrays={"params": params, "opt": opt},
                                               meta={"step": step})
                 self.rest.notify_checkpoint(self.job, region, self.pe_id, step)
-            self.rest.report_metrics(self.job, self.pe_id,
-                                     {"step": step, "loss": mean_loss})
+            self.rest.report_metrics(
+                self.job, self.pe_id,
+                self.load_metrics({"step": step, "loss": mean_loss,
+                                   "stepTime": time.monotonic() - step_t0}))
         if step >= max_steps:
             self.rest.notify_source_done(self.job, self.pe_id)

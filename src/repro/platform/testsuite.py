@@ -147,6 +147,8 @@ class TestHarness:
     construct internally) — the harness is blind to runner content.
     """
 
+    __test__ = False  # platform component, not a pytest class
+
     def __init__(self, registry: dict, store: ResourceStore | None = None):
         from ..core import Runtime
 

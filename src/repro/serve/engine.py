@@ -81,6 +81,12 @@ class ServeEngine:
         self.finished: list = []
         self._decode = jax.jit(make_decode_step(cfg, opts))
         self._next_token = jnp.zeros((num_slots,), jnp.int32)
+        # slot-occupancy metrics (the serving load signal the platform's
+        # metrics plane aggregates, so serving jobs can autoscale too)
+        self.ticks = 0
+        self.tokens_generated = 0
+        self._busy_ticks = 0
+        self.on_metrics: Optional[Callable[[dict], None]] = None
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -107,10 +113,33 @@ class ServeEngine:
         self.cache = _merge_slot(before, after, slot)
         return logits, self.cache
 
+    def metrics(self) -> dict:
+        """Slot occupancy + queue state: the engine's scaling signals.
+
+        ``occupancy`` is instantaneous (busy slots / slots); ``backpressure``
+        is the admission queue normalized by slot count — >0 means requests
+        are waiting for a slot, the cue to add replicas.
+        """
+        busy = sum(1 for s in self.slots if s is not None)
+        return {
+            "numSlots": self.num_slots, "slotsBusy": busy,
+            "occupancy": busy / self.num_slots,
+            "meanOccupancy": (self._busy_ticks / (self.ticks * self.num_slots)
+                              if self.ticks else 0.0),
+            "queueDepth": len(self.queue),
+            "backpressure": min(1.0, len(self.queue) / self.num_slots),
+            "ticks": self.ticks, "tokensGenerated": self.tokens_generated,
+            "finished": len(self.finished),
+        }
+
     def step(self) -> list:
         """One engine tick: admit, decode one token for all active slots."""
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
+        self.ticks += 1
+        self._busy_ticks += len(active)
+        if self.on_metrics is not None:
+            self.on_metrics(self.metrics())
         if not active:
             return []
         logits, self.cache = self._decode(self.params, self.cache, self._next_token)
@@ -125,6 +154,7 @@ class ServeEngine:
                 self.finished.append(req)
                 self.slots[i] = None
             out.append((req.rid, tok))
+        self.tokens_generated += len(out)
         self._next_token = nxt
         return out
 

@@ -46,6 +46,20 @@ def resolve(axes: tuple, rules: dict) -> P:
     return P(*parts)
 
 
+def _abstract_mesh():
+    """The current abstract mesh, or None where JAX doesn't expose one.
+
+    ``jax.sharding.get_abstract_mesh`` is a newer API; on older JAX (which
+    also predates Manual axis types on abstract meshes) we fall back to the
+    concrete bound mesh — correct here because the compressed-gradient path
+    is pure pjit, never an actual shard_map manual region.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        return None
+    return get()
+
+
 def shard(x: jax.Array, axes: tuple) -> jax.Array:
     """Constrain ``x`` to the sharding implied by logical ``axes``.
 
@@ -58,7 +72,7 @@ def shard(x: jax.Array, axes: tuple) -> jax.Array:
     if binding is None:
         return x
     mesh, rules = binding
-    abstract = jax.sharding.get_abstract_mesh()
+    abstract = _abstract_mesh()
     if abstract is not None and not abstract.empty:
         manual = {name for name, kind in zip(abstract.axis_names,
                                              abstract.axis_types)

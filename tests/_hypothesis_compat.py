@@ -1,0 +1,71 @@
+"""Hypothesis shim: use the real library when installed, otherwise a tiny
+seeded-random fallback so the property tests still run (with fixed-seed
+sampling instead of shrinking/coverage — strictly weaker, but green without
+the dependency; install ``requirements-dev.txt`` for the real thing).
+
+Supports exactly the subset this repo's tests use:
+  @settings(max_examples=N, deadline=None)
+  @given(st.integers(a, b), st.lists(elem, min_size=, max_size=),
+         st.sampled_from(seq))
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elem.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+    st = _Strategies()
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper():
+                rng = random.Random(0xC0FFEE)
+                for _ in range(getattr(wrapper, "_max_examples", 20)):
+                    args = [s.draw(rng) for s in strategies]
+                    try:
+                        fn(*args)
+                    except Exception:
+                        print(f"falsifying example: {fn.__name__}{tuple(args)!r}")
+                        raise
+
+            # plain attribute copy (not functools.wraps): pytest must see a
+            # zero-arg signature, not the wrapped function's draw parameters
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -1,0 +1,305 @@
+"""Metrics plane + elastic autoscaling.
+
+Three layers:
+- unit: ``decide_width`` clamps/thresholds/throughput sizing, cooldown
+  gating with a fake clock, MetricsPlane window aggregation;
+- deterministic: the full autoscale causal chain (metrics burst ->
+  AutoscaleConductor -> ParallelRegion edit -> job re-plan -> only affected
+  PEs restarted) on a manual Runtime, converging identically under random
+  event interleavings;
+- threaded e2e: a real job under synthetic load scaled 1 -> 2 by the
+  conductor alone, causal chain visible in CausalTrace.
+"""
+
+import random
+
+import pytest
+
+from repro.core import Coordinator, ResourceStore, wait_for
+from repro.platform import Platform, crds
+from repro.platform.autoscale import AutoscaleConductor, decide_width
+from repro.platform.metrics import MetricsPlane
+
+
+# ----------------------------------------------------------- decide_width
+
+
+def test_decide_width_backpressure_thresholds():
+    spec = {"minWidth": 1, "maxWidth": 4, "scaleUpAt": 0.5,
+            "scaleDownAt": 0.05, "step": 1}
+    assert decide_width(2, {"backpressure": 0.9}, spec) == 3
+    assert decide_width(2, {"backpressure": 0.2}, spec) == 2   # in band
+    assert decide_width(2, {"backpressure": 0.01}, spec) == 1
+    assert decide_width(4, {"backpressure": 0.9}, spec) == 4   # max clamp
+    assert decide_width(1, {"backpressure": 0.0}, spec) == 1   # min clamp
+    assert decide_width(2, None, spec) == 2                    # no data
+
+
+def test_decide_width_throughput_sizing():
+    spec = {"minWidth": 1, "maxWidth": 8, "metric": "throughput",
+            "targetPerChannel": 100.0}
+    assert decide_width(1, {"throughput": 350.0}, spec) == 4  # ceil(3.5)
+    assert decide_width(6, {"throughput": 120.0}, spec) == 2
+    assert decide_width(1, {"throughput": 0.0}, spec) == 1    # min clamp
+    assert decide_width(2, {"throughput": 10_000.0}, spec) == 8
+
+
+def test_decide_width_step_and_out_of_range_current():
+    spec = {"minWidth": 2, "maxWidth": 6, "scaleUpAt": 0.5, "step": 2}
+    assert decide_width(3, {"backpressure": 0.8}, spec) == 5
+    # current outside bounds gets clamped back even with no signal
+    assert decide_width(1, None, spec) == 2
+    assert decide_width(9, None, spec) == 6
+
+
+# --------------------------------------------------------------- cooldown
+
+
+def _metrics_resource(job, region, backpressure):
+    res = crds.make_metrics(job)
+    res.status["regions"] = {region: {"backpressure": backpressure,
+                                      "channels": 1}}
+    return res
+
+
+def test_cooldown_blocks_rescale_until_elapsed():
+    store = ResourceStore()
+    coords = {"pr": Coordinator(store, crds.PARALLEL_REGION),
+              "policy": Coordinator(store, crds.SCALING_POLICY)}
+    now = [100.0]
+    cond = AutoscaleConductor(store, "default", coords, clock=lambda: now[0])
+    store.create(crds.make_parallel_region("j", "par", 1))
+    store.create(crds.make_scaling_policy("j", "par", max_width=8,
+                                          cooldown=10.0))
+    store.create(_metrics_resource("j", "par", 0.9))
+
+    assert cond.evaluate("j") == [("par", 1, 2)]
+    assert store.get(crds.PARALLEL_REGION, "j-pr-par").spec["width"] == 2
+    now[0] = 105.0  # still hot, but inside the cooldown window
+    assert cond.evaluate("j") == []
+    now[0] = 110.5
+    assert cond.evaluate("j") == [("par", 2, 3)]
+    pol = store.get(crds.SCALING_POLICY, crds.policy_name("j", "par"))
+    assert pol.status["lastScaleAt"] == 110.5 and pol.status["lastWidth"] == 3
+
+
+def test_evaluate_without_metrics_or_region_is_noop():
+    store = ResourceStore()
+    coords = {"pr": Coordinator(store, crds.PARALLEL_REGION),
+              "policy": Coordinator(store, crds.SCALING_POLICY)}
+    cond = AutoscaleConductor(store, "default", coords)
+    store.create(crds.make_scaling_policy("j", "par"))
+    assert cond.evaluate("j") == []  # no ParallelRegion yet
+    store.create(crds.make_parallel_region("j", "par", 2))
+    assert cond.evaluate("j") == []  # no Metrics yet -> clamp-only, no change
+
+
+# ------------------------------------------------------------ MetricsPlane
+
+
+def _sample(op, region=None, channel=0, tin=0, bp=0.0, depth=0, **extra):
+    return {"operator": op, "kind": "pipe", "region": region,
+            "channel": channel, "tuplesIn": tin, "tuplesOut": tin,
+            "queueDepth": depth, "queueCapacity": 1024, "backpressure": bp,
+            "blockedPuts": 0, **extra}
+
+
+def test_metrics_plane_window_aggregation():
+    store = ResourceStore()
+    store.create(crds.make_job("j", {}))
+    coords = {"metrics": Coordinator(store, crds.METRICS)}
+    plane = MetricsPlane(store, "default", coords, clock=lambda: 2.0)
+    plane.ingest("j", 1, _sample("ch0[0]", "par", 0, tin=0, bp=0.2), now=0.0)
+    plane.ingest("j", 1, _sample("ch0[0]", "par", 0, tin=200, bp=0.4,
+                                 depth=410), now=2.0)
+    plane.ingest("j", 2, _sample("ch0[1]", "par", 1, tin=50, bp=0.8,
+                                 depth=820), now=2.0)
+    plane.ingest("j", 3, _sample("post0"), now=2.0)  # outside any region
+    agg = plane.aggregate("j")
+    par = agg["regions"]["par"]
+    assert par["channels"] == 2
+    assert par["throughput"] == pytest.approx(100.0)  # 200 tuples / 2 s + 0
+    assert par["backpressure"] == pytest.approx((0.4 + 0.8) / 2)
+    assert par["queueDepth"] == 410 + 820
+    assert set(agg["operators"]) == {"ch0[0]", "ch0[1]", "post0"}
+    # publish lands in a Metrics resource through the coordinator
+    assert plane.publish("j", force=True)
+    res = store.get(crds.METRICS, crds.metrics_name("j"))
+    assert res.status["regions"]["par"]["channels"] == 2
+
+
+def test_metrics_plane_prunes_window_and_dedupes():
+    store = ResourceStore()
+    store.create(crds.make_job("j", {}))
+    plane = MetricsPlane(store, "default", {}, window=5.0)
+    s = _sample("ch0[0]", "par", 0, tin=10, bp=0.1)
+    plane.ingest("j", 1, s, now=0.0)
+    plane.ingest("j", 1, dict(s), now=1.0)  # duplicate sample: not appended
+    assert len(plane._samples[("j", 1)]) == 1
+    plane.ingest("j", 1, _sample("ch0[0]", "par", 0, tin=20, bp=0.1), now=10.0)
+    assert len(plane._samples[("j", 1)]) == 1  # t=0 fell out of the window
+
+
+def test_metrics_plane_does_not_resurrect_deleted_job():
+    store = ResourceStore()
+    coords = {"metrics": Coordinator(store, crds.METRICS)}
+    plane = MetricsPlane(store, "default", coords)
+    plane.ingest("ghost", 1, _sample("ch0[0]", "par"))
+    assert not plane.publish("ghost", force=True)
+    assert not store.exists(crds.METRICS, crds.metrics_name("ghost"))
+
+
+# ----------------------------------------- deterministic causal chain tests
+
+
+STREAMS_SPEC = {"app": {"type": "streams", "width": 1, "pipeline_depth": 2,
+                        "source": {"rate_sleep": 0.001}}}
+
+
+def _region_pods(p, job):
+    out = []
+    for pod in p.pods(job):
+        pe = p.store.get(crds.PE, crds.pe_name(job, pod.spec["peId"]))
+        if any(op.startswith("ch") for op in pe.spec["operators"]):
+            out.append(pod)
+    return out
+
+
+def _burst(p, job, backpressure):
+    """Inject a metrics burst into every region pod's status (what the PE
+    runtimes would report under load), via the pod coordinator."""
+    for pod in _region_pods(p, job):
+        pe = p.store.get(crds.PE, crds.pe_name(job, pod.spec["peId"]))
+        op = next(o for o in pe.spec["operators"] if o.startswith("ch"))
+        sample = _sample(op, "par", 0, tin=1000, bp=backpressure,
+                         depth=int(backpressure * 1024))
+        p.coords["pod"].submit_status(pod.name, {"metrics": sample},
+                                      requester="test-load")
+
+
+def _autoscale_scenario(seed):
+    """Run the whole loop on a manual runtime with a seeded random event
+    interleaving; return a canonical snapshot of the converged state."""
+    rng = random.Random(seed)
+
+    def order(nonempty):
+        return rng.choice(nonempty)
+
+    p = Platform(threaded=False, with_cluster=False, num_nodes=0)
+    try:
+        p.submit("app", STREAMS_SPEC)
+        p.runtime.drain(order=order)
+        p.set_scaling_policy("app", "par", max_width=2, cooldown=0.0)
+        p.runtime.drain(order=order)
+        before = {x.name: x.spec.get("launchCount") for x in p.pods("app")}
+        assert p.region_width("app", "par") == 1
+
+        # metrics burst -> publish -> conductor scales 1 -> 2
+        _burst(p, "app", backpressure=0.9)
+        p.runtime.drain(order=order)
+        p.metrics_plane.publish("app", force=True)
+        p.runtime.drain(order=order)
+
+        assert p.region_width("app", "par") == 2
+        after = {x.name: x.spec.get("launchCount") for x in p.pods("app")}
+        # the region grew: one new PE per pipeline stage
+        assert len(after) == len(before) + 2
+        # §6.3: the pre-existing channel PEs (unchanged metadata) did NOT
+        # restart; the job did not do a stop-the-world redeploy
+        for pod in _region_pods(p, "app"):
+            if pod.name in before:
+                assert after[pod.name] == before[pod.name]
+        assert any(after[n] != before.get(n) for n in after
+                   if n in before), "no neighbor PE was rewired"
+
+        # load drains -> scale back down to minWidth, extra PEs retired
+        _burst(p, "app", backpressure=0.0)
+        p.runtime.drain(order=order)
+        p.metrics_plane.publish("app", force=True)
+        p.runtime.drain(order=order)
+        assert p.region_width("app", "par") == 1
+        assert len(p.pods("app")) == len(before)
+
+        job = p.store.get(crds.JOB, "app")
+        return {
+            "width": p.region_width("app", "par"),
+            "widths": job.spec.get("widths"),
+            "pes": sorted(x.name for x in p.store.list(
+                crds.PE, "default", crds.job_labels("app"))),
+            "pods": sorted(x.name for x in p.pods("app")),
+            "scales": [e for e in p.trace.chain()
+                       if e.startswith("autoscale-conductor:scale")],
+        }
+    finally:
+        p.shutdown()
+
+
+def test_autoscale_causal_chain_deterministic_under_interleaving():
+    snaps = [_autoscale_scenario(seed) for seed in range(6)]
+    for s in snaps[1:]:
+        assert s == snaps[0]
+    assert snaps[0]["width"] == 1
+    assert snaps[0]["widths"] == {"par": 1}
+    assert snaps[0]["scales"] == [
+        "autoscale-conductor:scale:ParallelRegion/app-pr-par:1->2",
+        "autoscale-conductor:scale:ParallelRegion/app-pr-par:2->1",
+    ]
+
+
+def test_autoscale_respects_max_width_deterministic():
+    p = Platform(threaded=False, with_cluster=False, num_nodes=0)
+    try:
+        p.submit("app", STREAMS_SPEC)
+        p.runtime.drain()
+        p.set_scaling_policy("app", "par", max_width=3, cooldown=0.0)
+        p.runtime.drain()
+        # saturating load; repeated bursts can only reach maxWidth
+        for _ in range(5):
+            _burst(p, "app", backpressure=1.0)
+            p.runtime.drain()
+            p.metrics_plane.publish("app", force=True)
+            p.runtime.drain()
+        assert p.region_width("app", "par") == 3
+    finally:
+        p.shutdown()
+
+
+# ------------------------------------------------------------ threaded e2e
+
+
+def test_autoscale_e2e_scales_up_under_load():
+    """Acceptance: a running job under synthetic load is scaled from width 1
+    to 2 by the AutoscaleConductor alone — no manual spec edit — with the
+    causal chain recorded in CausalTrace."""
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("app", {"app": {
+            "type": "streams", "width": 1, "pipeline_depth": 2,
+            "source": {"rate_sleep": 0.0005},
+            "channel": {"work_sleep": 0.004},  # consumers slower than source
+        }})
+        assert p.wait_full_health("app", 60)
+        before = {x.name: x.spec.get("launchCount") for x in p.pods("app")}
+        p.set_scaling_policy("app", "par", max_width=2, scale_up_at=0.3,
+                             cooldown=0.5)
+        assert wait_for(lambda: p.region_width("app", "par") >= 2, 60), \
+            f"autoscaler never scaled; metrics={p.job_metrics('app')}"
+        assert wait_for(lambda: len(p.pods("app")) >= len(before) + 2, 60)
+        assert p.wait_full_health("app", 60)
+
+        chain = p.trace.chain()
+        assert any(e.startswith(
+            "autoscale-conductor:scale:ParallelRegion/app-pr-par") for e in chain)
+        assert any("parallelregion-coordinator:modify" in e
+                   and "for=autoscale-conductor" in e for e in chain)
+        assert any("job-coordinator:modify" in e
+                   and "for=parallelregion-controller" in e for e in chain)
+        # §6.3 held under autoscaling too: some pod survived the re-plan
+        after = {x.name: x.spec.get("launchCount") for x in p.pods("app")}
+        assert [n for n in before if after.get(n) == before[n]], \
+            "width change restarted every pod"
+        # the published Metrics resource carries the region rollup
+        regions = p.job_metrics("app").get("regions", {})
+        assert "par" in regions and regions["par"]["channels"] >= 1
+    finally:
+        p.shutdown()

@@ -2,7 +2,7 @@
 metadata stability (the property §6.3 depends on), placement semantics."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.platform.pipeline import plan_job
 
