@@ -8,7 +8,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests"
 python -m pytest -x -q
 
-echo "== benchmark smoke (thread-free subset)"
+echo "== benchmark smoke (fig7c, table1, transport)"
+# drop any stale artifact so run.py's --smoke BENCH_transport.json gate is real
+rm -f results/BENCH_transport.json
 python benchmarks/run.py --smoke
 
 echo "CI OK"

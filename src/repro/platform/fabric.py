@@ -9,6 +9,21 @@ queues, and data-parallel trainer shards combine gradients through
 ``CollectiveGroup`` — the stand-in for ICI all-reduce, which on real
 hardware belongs to XLA, not the platform.
 
+Hot-path design (the Fig. 8 bottleneck): the control path (publish /
+resolve) is slow and rare; the data path must never pay for it per tuple.
+
+- ``Fabric`` keeps an *endpoint epoch* bumped on every ``publish`` /
+  ``unpublish_pe``.  Senders hold an ``EndpointCache`` whose entries stay
+  valid while the epoch is unchanged — the paper's §5.2 computed-names
+  contract (names never go stale, only bindings move, and every binding
+  move bumps the epoch) is what makes cache-and-invalidate safe.
+- ``resolve`` waits on a ``Condition`` signalled by ``publish`` instead of
+  sleep-polling the registry.
+- ``TupleQueue`` is a deque ring with ``put_many``/``get_many`` so a batch
+  of tuples crosses the lock once; capacity is accounted in tuples and the
+  backpressure/high-watermark stats the metrics plane scrapes are kept per
+  batch.
+
 ``CollectiveGroup`` supports *epoch aborts*: when the consistent-region
 operator initiates rollback-and-recovery, in-flight barriers abort with
 ``EpochAborted`` so surviving shards rewind to the committed checkpoint
@@ -20,6 +35,9 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
+
+import numpy as np
 
 
 class EpochAborted(Exception):
@@ -33,57 +51,181 @@ class ShutDown(Exception):
 
 
 class TupleQueue:
-    """Bounded blocking queue standing in for a PE-PE TCP connection.
+    """Bounded blocking ring standing in for a PE-PE TCP connection.
+
+    A deque guarded by one lock with separate not-empty / not-full
+    conditions (so batch puts never wake other producers).  ``put_many`` /
+    ``get_many`` move a whole batch under a single lock acquisition — the
+    per-tuple cost of ``queue.Queue`` was the dominant term in the Fig. 8
+    microbenchmark.  Capacity is accounted in tuples; a batch larger than
+    the remaining room is admitted in chunks as the consumer drains.
 
     Instrumented for the metrics plane: cumulative enqueue/dequeue counters,
-    a depth high-watermark, and a count of puts that found the queue full
-    (the backpressure signal autoscaling acts on).
+    batch counters (average batch size = tuples / batches), a depth
+    high-watermark, and a count of puts that found insufficient room — the
+    backpressure signal autoscaling acts on, counted once per batch.
     """
 
     def __init__(self, maxsize: int = 1024):
-        self._q = queue.Queue(maxsize=maxsize)
-        self.capacity = maxsize
+        self.capacity = maxsize if maxsize > 0 else 0  # 0 = unbounded
+        self._items: deque = deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
         self.closed = False
         self.enqueued = 0
         self.dequeued = 0
         self.high_watermark = 0
         self.blocked_puts = 0
+        self.put_batches = 0
+        self.get_batches = 0
+
+    # ---------------------------------------------------------------- puts
 
     def put(self, item, timeout: float = 10.0) -> None:
-        if self._q.full():
-            self.blocked_puts += 1
-        self._q.put(item, timeout=timeout)
-        self.enqueued += 1
-        depth = self._q.qsize()
-        if depth > self.high_watermark:
-            self.high_watermark = depth
+        with self._lock:
+            if self.closed:
+                raise ShutDown
+            if self.capacity and len(self._items) >= self.capacity:
+                self.blocked_puts += 1
+                self._wait_for_room(time.monotonic() + timeout)
+            self._items.append(item)
+            self.enqueued += 1
+            self.put_batches += 1
+            depth = len(self._items)
+            if depth > self.high_watermark:
+                self.high_watermark = depth
+            self._not_empty.notify()
+
+    def put_many(self, items, timeout: float = 10.0) -> None:
+        """Enqueue a batch under one lock crossing.
+
+        Blocks while the ring is full; raises ``queue.Full`` on timeout and
+        ``ShutDown`` if the queue closes while waiting.  Backpressure is
+        recorded once per batch that found insufficient room.  Delivery is
+        best-effort on failure: a raise can leave a prefix of the batch
+        admitted (already-enqueued tuples are in flight and not rolled
+        back) — callers must not retry the same batch, they would duplicate
+        the prefix.  The streaming contract absorbs this: outside a
+        consistent region tuples are best-effort, inside one replay from
+        the checkpoint repairs any loss.
+        """
+        if not isinstance(items, (list, tuple)):
+            items = list(items)
+        n = len(items)
+        if n == 0:
+            return
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            if self.closed:
+                raise ShutDown
+            if self.capacity and len(self._items) + n > self.capacity:
+                self.blocked_puts += 1
+            i = 0
+            try:
+                while i < n:
+                    room = (self.capacity - len(self._items)) if self.capacity \
+                        else (n - i)
+                    if room <= 0:
+                        try:
+                            self._wait_for_room(deadline)
+                        except (queue.Full, ShutDown) as e:
+                            # callers that account per delivered tuple need
+                            # the in-flight prefix (it is not rolled back)
+                            e.admitted = i
+                            raise
+                        continue
+                    take = min(room, n - i)
+                    self._items.extend(items[i:i + take])
+                    i += take
+                    self.enqueued += take
+                    depth = len(self._items)
+                    if depth > self.high_watermark:
+                        self.high_watermark = depth
+                    self._not_empty.notify_all()
+            finally:
+                if i:  # an admitted prefix counts toward the batch stats
+                    self.put_batches += 1
+
+    def _wait_for_room(self, deadline: float) -> None:
+        """Caller holds the lock; returns with room available or raises."""
+        while len(self._items) >= self.capacity:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise queue.Full
+            self._not_full.wait(remaining)
+            if self.closed:
+                raise ShutDown
+
+    # ---------------------------------------------------------------- gets
 
     def get(self, timeout: float = 0.2):
-        try:
-            item = self._q.get(timeout=timeout)
-        except queue.Empty:
-            return None
-        self.dequeued += 1
-        return item
+        with self._lock:
+            if not self._items and not self._wait_for_items(timeout):
+                return None
+            item = self._items.popleft()
+            self.dequeued += 1
+            self.get_batches += 1
+            self._not_full.notify()
+            return item
+
+    def get_many(self, max_items: int = 64, timeout: float = 0.2) -> list:
+        """Dequeue up to ``max_items`` under one lock crossing.
+
+        Blocks until at least one item is available; returns ``[]`` on
+        timeout or if the queue is closed and empty (never raises — the
+        consumer side mirrors ``get``'s None-on-timeout contract).
+        """
+        with self._lock:
+            if not self._items and not self._wait_for_items(timeout):
+                return []
+            take = min(max_items, len(self._items))
+            out = [self._items.popleft() for _ in range(take)]
+            self.dequeued += take
+            self.get_batches += 1
+            self._not_full.notify_all()
+            return out
+
+    def _wait_for_items(self, timeout: float) -> bool:
+        """Caller holds the lock with the ring empty; True when items
+        arrived, False on timeout/close (the deadline clock starts here so
+        the non-blocking fast path never reads it)."""
+        deadline = time.monotonic() + timeout
+        while not self._items:
+            if self.closed:
+                return False
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return False
+            self._not_empty.wait(remaining)
+        return True
 
     def drain(self) -> None:
-        try:
-            while True:
-                self._q.get_nowait()
-                self.dequeued += 1
-        except queue.Empty:
-            pass
+        with self._lock:
+            n = len(self._items)
+            self._items.clear()
+            self.dequeued += n
+            self._not_full.notify_all()
+
+    def close(self) -> None:
+        """Mark the endpoint dead: pending and future puts raise ``ShutDown``
+        (a stale cached sender fails fast instead of feeding a dead ring)."""
+        with self._lock:
+            self.closed = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
 
     def stats(self) -> dict:
-        depth = self._q.qsize()
+        depth = len(self._items)
         return {"depth": depth, "capacity": self.capacity,
                 "fill": depth / self.capacity if self.capacity else 0.0,
                 "enqueued": self.enqueued, "dequeued": self.dequeued,
+                "putBatches": self.put_batches, "getBatches": self.get_batches,
                 "highWatermark": self.high_watermark,
                 "blockedPuts": self.blocked_puts}
 
     def __len__(self):
-        return self._q.qsize()
+        return len(self._items)
 
 
 class CollectiveGroup:
@@ -94,18 +236,17 @@ class CollectiveGroup:
         self.epoch = 0
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        self._contrib: dict = {}  # key -> list of values
+        self._contrib: dict = {}  # key -> rank-ordered list of (rank, value)
         self._result: dict = {}
 
     def allreduce_mean(self, key, value, epoch: int, timeout: float = 30.0,
                        rank: int = 0):
         """Blocks until all ``width`` shards contribute (same epoch).
 
-        Contributions are summed in ``rank`` order so the float reduction is
-        deterministic regardless of thread arrival order — what makes
-        recovered training bit-identical to an uninterrupted run."""
-        import numpy as np
-
+        Contributions are summed in ``rank`` order — sorted once, by the
+        completing shard — so the float reduction is deterministic
+        regardless of thread arrival order, which is what makes recovered
+        training bit-identical to an uninterrupted run."""
         with self._cond:
             if epoch != self.epoch:
                 raise EpochAborted(self.epoch)
@@ -146,39 +287,63 @@ class CollectiveGroup:
 
 
 class Fabric:
-    """Cluster-wide connection registry + DNS + collectives."""
+    """Cluster-wide connection registry + DNS + collectives.
+
+    ``epoch`` is the endpoint generation: it moves only when a binding
+    moves (publish/unpublish).  Senders cache resolved endpoints against it
+    through ``EndpointCache`` and never touch the registry lock on the
+    tuple hot path while the epoch stands still.
+    """
 
     def __init__(self, dns_delay: float = 0.0):
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
         self._endpoints: dict = {}  # (job, pe_id, port_id) -> TupleQueue
         self._published_at: dict = {}
         self._collectives: dict = {}  # (job, region) -> CollectiveGroup
         self.dns_delay = dns_delay
+        self.epoch = 0
 
     def publish(self, job: str, pe_id: int, port_id: int, q: TupleQueue) -> None:
-        with self._lock:
+        with self._cond:
             self._endpoints[(job, pe_id, port_id)] = q
             self._published_at[(job, pe_id, port_id)] = time.monotonic()
+            self.epoch += 1
+            self._cond.notify_all()
 
     def unpublish_pe(self, job: str, pe_id: int) -> None:
-        with self._lock:
-            for key in list(self._endpoints):
-                if key[:2] == (job, pe_id):
-                    del self._endpoints[key]
-                    self._published_at.pop(key, None)
+        with self._cond:
+            removed = [key for key in self._endpoints if key[:2] == (job, pe_id)]
+            for key in removed:
+                self._endpoints.pop(key).close()
+                self._published_at.pop(key, None)
+            if removed:
+                self.epoch += 1
+                self._cond.notify_all()
 
     def resolve(self, job: str, pe_id: int, port_id: int,
                 timeout: float = 30.0):
-        """Name resolution with propagation delay (paper §8: DNS latency)."""
+        """Name resolution with propagation delay (paper §8: DNS latency).
+
+        Event-driven: waits on the registry condition (signalled by
+        ``publish``) rather than polling, waking early only to honour the
+        configured DNS propagation delay."""
+        key = (job, pe_id, port_id)
         deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            with self._lock:
-                q = self._endpoints.get((job, pe_id, port_id))
-                ts = self._published_at.get((job, pe_id, port_id), 0.0)
-            if q is not None and time.monotonic() >= ts + self.dns_delay:
-                return q
-            time.sleep(0.002)
-        raise TimeoutError(f"resolve({job}, pe {pe_id}, port {port_id})")
+        with self._cond:
+            while True:
+                q = self._endpoints.get(key)
+                now = time.monotonic()
+                if q is not None:
+                    ready_at = self._published_at.get(key, 0.0) + self.dns_delay
+                    if now >= ready_at:
+                        return q
+                    wait = min(deadline, ready_at) - now
+                else:
+                    wait = deadline - now
+                if wait <= 0:
+                    raise TimeoutError(f"resolve({job}, pe {pe_id}, port {port_id})")
+                self._cond.wait(wait)
 
     def collective(self, job: str, region: str, width: int) -> CollectiveGroup:
         with self._lock:
@@ -194,3 +359,48 @@ class Fabric:
             groups = [g for (j, _), g in self._collectives.items() if j == job]
         for g in groups:
             g.abort()
+
+
+class EndpointCache:
+    """Sender-side resolution cache, invalidated by fabric-epoch movement.
+
+    The zero-re-resolve contract: while ``fabric.epoch`` is unchanged no
+    binding has moved, so a hit costs one dict lookup and no lock.  When
+    the epoch moves (a peer published or retired anywhere in the cluster)
+    the whole cache drops and the next send re-resolves — which is exactly
+    how a restarted peer's fresh endpoint is picked up without the sender
+    ever holding a stale reference past one epoch.
+    """
+
+    def __init__(self, fabric: Fabric):
+        self.fabric = fabric
+        self._epoch = fabric.epoch
+        self._queues: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    def get(self, job: str, pe_id: int, port_id: int,
+            timeout: float = 0.2) -> TupleQueue:
+        epoch = self.fabric.epoch
+        if epoch != self._epoch:
+            if self._queues:
+                self.invalidations += 1
+                self._queues.clear()
+            self._epoch = epoch
+        key = (job, pe_id, port_id)
+        q = self._queues.get(key)
+        if q is not None:
+            self.hits += 1
+            return q
+        self.misses += 1
+        q = self.fabric.resolve(job, pe_id, port_id, timeout=timeout)
+        if self.fabric.epoch == self._epoch:
+            # only cache if no binding moved while we resolved
+            self._queues[key] = q
+        return q
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "invalidations": self.invalidations,
+                "entries": len(self._queues)}

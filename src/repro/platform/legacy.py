@@ -92,6 +92,9 @@ class _LegacyRest:
     def get_routes(self, job, op_name):
         return []
 
+    def routes_epoch(self):
+        return 0  # no subscription broker in the legacy baseline
+
 
 class LegacyPlatform:
     """Monolithic manager: one object owns scheduling, life cycle, state."""

@@ -92,6 +92,12 @@ class RestFacade:
             return []
         return self.broker.routes_for(job, op_name)
 
+    def routes_epoch(self) -> int:
+        """Subscription-broker generation: senders cache their pub/sub route
+        set against this and only re-read ``get_routes`` when it moves
+        (instead of re-matching + re-resolving per tuple)."""
+        return self.broker.epoch if self.broker is not None else 0
+
 
 # ------------------------------------------------------------ controllers
 
@@ -476,6 +482,7 @@ class SubscriptionBroker(Conductor):
         self._exports: dict = {}  # (job, op) -> (stream, props, peId)
         self._imports: dict = {}  # (job, op) -> (subscription, peId)
         self._routes: dict = {}  # (exp job, exp op) -> [(imp job, peId)]
+        self.epoch = 0  # bumped on every rematch; senders cache against it
 
     def on_event(self, event: Event) -> None:
         res = event.resource
@@ -511,14 +518,20 @@ class SubscriptionBroker(Conductor):
                 if self._matches(sub, stream, props):
                     routes.setdefault((ejob, eop), []).append((ijob, ipe))
         self._routes = routes
+        self.epoch += 1
 
     def routes_for(self, job: str, op_name: str) -> list:
         with self._lock:
             targets = list(self._routes.get((job, op_name), ()))
         out = []
+        # wait out the DNS propagation window: senders cache this result
+        # against the broker/fabric epochs, and the window elapsing bumps
+        # neither — dropping a route here would pin it missing until some
+        # unrelated publish happened
+        timeout = 0.01 + self.fabric.dns_delay
         for ijob, ipe in targets:
             try:
-                out.append(self.fabric.resolve(ijob, ipe, 0, timeout=0.01))
+                out.append(self.fabric.resolve(ijob, ipe, 0, timeout=timeout))
             except TimeoutError:
                 pass
         return out

@@ -8,6 +8,19 @@ resolution), reports connectivity/liveness/metrics through the REST facade
 (§5.2 message bus), and participates in the consistent-region protocol
 (§6.5).
 
+Tuple transport hot path (the Fig. 8 bottleneck): emission is *buffered and
+batched*.  ``_emit`` appends to a per-peer output buffer; a buffer is
+flushed — one ``EndpointCache`` lookup + one ``put_many`` lock crossing for
+the whole batch — when it reaches ``emit_batch`` tuples, when the oldest
+buffered tuple is older than the ``emit_linger`` deadline, or on
+checkpoint / drain / shutdown (so consistent-region and scale-down
+semantics are unchanged: nothing a checkpoint covers is ever stranded in a
+buffer).  Peer endpoints are resolved through the fabric's epoch-stamped
+``EndpointCache`` — zero re-resolves while no binding moves — and pub/sub
+routes (§6.4) are cached against the subscription broker's epoch instead
+of being re-read from the REST facade per send.  The pull loops mirror
+this: ``get_many`` moves a batch per lock crossing.
+
 Operator kinds:
 - source / pipe / sink: the paper's streaming operators (tuple dataflow);
 - trainer / reducer: a data-parallel JAX training shard + metric combine —
@@ -28,7 +41,7 @@ import jax
 import numpy as np
 
 from ..data.stream import StreamSource
-from .fabric import EpochAborted, Fabric, TupleQueue
+from .fabric import EndpointCache, EpochAborted, Fabric, ShutDown, TupleQueue
 
 
 class PERuntime(threading.Thread):
@@ -45,10 +58,21 @@ class PERuntime(threading.Thread):
         self.stop_event = stop_event
         self.on_exit = on_exit
         self.in_queues: dict = {}
-        self.out_targets: dict = {}  # portId -> list[TupleQueue]
+        self.out_targets: dict = {}  # portId -> list[(peer pe, peer port)]
         self.crashed = False
-        self.counts = {"in": 0, "out": 0}
+        self.counts = {"in": 0, "out": 0, "routed": 0}
         self._last_load_report = 0.0
+        # batched emission state (flush policy: size + linger + barriers)
+        cfg0 = (self.meta.get("operators") or [{}])[0].get("config", {})
+        self.emit_batch = max(1, int(cfg0.get("emit_batch", 64)))
+        self.emit_linger = float(cfg0.get("emit_linger", 0.002))
+        self.endpoints = EndpointCache(fabric)
+        self._out_buf: dict = {}  # (peer pe, peer port) -> list[tuple]
+        self._route_buf: list = []
+        self._buf_since: float | None = None  # oldest unflushed append
+        self._route_cache: list = []
+        self._route_key = None  # (broker epoch, fabric epoch) of the cache
+        self._routes_exist = False  # cheap per-tuple flag; see _refresh_routes
 
     # ------------------------------------------------------------- plumbing
 
@@ -59,41 +83,138 @@ class PERuntime(threading.Thread):
             self.fabric.publish(self.job, self.pe_id, port["portId"], q)
         for port in self.meta.get("outputs", []):
             # verify peers resolve (connection established), but keep the
-            # *names* — sends re-resolve through the fabric so a restarted
-            # peer's fresh endpoint is picked up (paper: PEs re-establish
-            # connections after failures; names are computed, never stale)
+            # *names* — sends go through the epoch-stamped EndpointCache so
+            # a restarted peer's fresh endpoint is picked up on the next
+            # epoch move (paper: PEs re-establish connections after
+            # failures; names are computed, never stale)
             for peer_pe, peer_port in port["to"]:
                 self.fabric.resolve(self.job, peer_pe, peer_port)
             self.out_targets[port["portId"]] = list(map(tuple, port["to"]))
+        self._refresh_routes()  # notice routes matched before we started
         self.rest.notify_connected(self.job, self.pe_id)
 
-    def _send(self, peer: tuple, item) -> None:
-        try:
-            q = self.fabric.resolve(self.job, peer[0], peer[1], timeout=0.2)
-            q.put(item, timeout=2.0)
-        except Exception:
-            # peer down/restarting: outside a consistent region streams are
-            # best-effort; within one, replay-from-checkpoint repairs this
-            pass
+    # ------------------------------------------------- batched emission
+
+    def _refresh_routes(self) -> list:
+        """Pub/sub route queues (Import/Export, §6.4), cached against the
+        broker epoch (route set changes) and the fabric epoch (an importer
+        PE restarted, so its resolved queue reference moved).  Called at
+        flush/batch granularity — the per-tuple path only reads the
+        ``_routes_exist`` flag this maintains."""
+        key = (self.rest.routes_epoch(), self.fabric.epoch)
+        if key != self._route_key:
+            op0 = self.meta["operators"][0]
+            self._route_cache = self.rest.get_routes(self.job, op0["name"])
+            self._route_key = key
+            self._routes_exist = bool(self._route_cache)
+        return self._route_cache
 
     def _emit(self, port_id: int, item, partition: int | None = None) -> None:
-        targets = self.out_targets.get(port_id, [])
-        if not targets:
+        """Buffer ``item`` toward its target peer(s); out-tuple accounting
+        happens per copy at flush time, on successful handoff to the peer
+        queue (a broadcast to N peers counts N)."""
+        targets = self.out_targets.get(port_id, ())
+        if targets:
+            if partition is not None:  # split into a parallel region
+                self._buffer(targets[partition % len(targets)], item)
+            else:
+                for t in targets:
+                    self._buffer(t, item)
+        elif not self._routes_exist:
+            # export-only emitter with no matched routes: no flush ever
+            # runs, so probing per emit is the only way to notice the
+            # first match (and this PE does no other transport work)
+            self._refresh_routes()
+        if self._routes_exist:
+            self._route_buf.append(item)
+            if self._buf_since is None:
+                self._buf_since = time.monotonic()
+            if len(self._route_buf) >= self.emit_batch:
+                self._flush_routes()
+                self._reset_linger_if_empty()
+
+    def _buffer(self, peer: tuple, item) -> None:
+        buf = self._out_buf.get(peer)
+        if buf is None:
+            buf = self._out_buf[peer] = []
+        buf.append(item)
+        if self._buf_since is None:
+            self._buf_since = time.monotonic()
+        if len(buf) >= self.emit_batch:
+            self._flush_peer(peer, buf)
+            # refresh here too: under sustained load size flushes pre-empt
+            # the linger flush, and this must still notice new routes
+            self._refresh_routes()
+            self._reset_linger_if_empty()
+
+    def _reset_linger_if_empty(self) -> None:
+        """After a size-triggered flush the linger clock must not keep the
+        drained batch's start time: the next lone tuple would inherit it and
+        flush almost immediately, defeating the batching."""
+        if not self._route_buf and all(not b for b in self._out_buf.values()):
+            self._buf_since = None
+
+    def _flush_peer(self, peer: tuple, buf: list) -> None:
+        if not buf:
             return
-        if partition is not None:  # split into a parallel region
-            self._send(targets[partition % len(targets)], item)
-        else:
-            for t in targets:
-                self._send(t, item)
-        self.counts["out"] += 1
-        # pub/sub routes (Import/Export, §6.4) — read fresh every send so
-        # route updates from the subscription broker apply without restart
-        op0 = self.meta["operators"][0]
-        for q in self.rest.get_routes(self.job, op0["name"]):
+        items = buf[:]
+        del buf[:]
+        try:
+            q = self.endpoints.get(self.job, peer[0], peer[1], timeout=0.2)
+            q.put_many(items,
+                       timeout=0.2 if self.stop_event.is_set() else 2.0)
+            # counted on successful handoff so the metrics plane's
+            # throughput rollup (what the autoscaler scales on) tracks
+            # delivery, not buffering toward a possibly-dead peer
+            self.counts["out"] += len(items)
+        except ShutDown:
+            # peer retired mid-put: any admitted prefix sits in a closed
+            # queue no consumer will drain — that is not delivery
+            pass
+        except Exception as e:
+            # peer down/restarting: outside a consistent region streams are
+            # best-effort; within one, replay-from-checkpoint repairs this.
+            # A timed-out put to a live peer still admitted a prefix that
+            # is genuinely in flight — count it.
+            self.counts["out"] += getattr(e, "admitted", 0)
+
+    def _flush_routes(self) -> None:
+        if not self._route_buf:
+            return
+        items = self._route_buf
+        self._route_buf = []
+        for q in self._refresh_routes():
             try:
-                q.put(item, timeout=1.0)
-            except Exception:
-                pass
+                q.put_many(items, timeout=1.0)
+                self.counts["routed"] += len(items)
+            except ShutDown:
+                pass  # importer retired: its queue is closed, not slow
+            except Exception as e:
+                self.counts["routed"] += getattr(e, "admitted", 0)
+
+    def _flush_all(self) -> None:
+        self._refresh_routes()  # flush moments also notice new routes
+        for peer, buf in self._out_buf.items():
+            self._flush_peer(peer, buf)
+        self._flush_routes()
+        self._buf_since = None
+
+    def _maybe_flush(self, now: float | None = None) -> None:
+        """Linger deadline: flush everything once the oldest buffered tuple
+        has waited ``emit_linger`` seconds."""
+        if self._buf_since is None:
+            return
+        now = time.monotonic() if now is None else now
+        if now - self._buf_since >= self.emit_linger:
+            self._flush_all()
+
+    def _pull_timeout(self, idle: float = 0.1) -> float:
+        """Input-pull block time, capped by the linger deadline so buffered
+        output is flushed on time even when no input arrives."""
+        if self._buf_since is None:
+            return idle
+        remaining = self._buf_since + self.emit_linger - time.monotonic()
+        return min(idle, max(remaining, 0.0))
 
     # ------------------------------------------------------------- metrics
 
@@ -106,14 +227,21 @@ class PERuntime(threading.Thread):
         depth = sum(s["depth"] for s in stats)
         cap = sum(s["capacity"] for s in stats)
         blocked = sum(s["blockedPuts"] for s in stats)
+        batches = sum(s["getBatches"] for s in stats)
+        dequeued = sum(s["dequeued"] for s in stats)
+        cache = self.endpoints.stats()
         sample = {
             "operator": op["name"], "kind": op["kind"],
             "region": op.get("region"), "channel": op.get("channel", -1),
             "tuplesIn": self.counts["in"], "tuplesOut": self.counts["out"],
+            "tuplesRouted": self.counts["routed"],
             "queueDepth": depth, "queueCapacity": cap,
             "backpressure": depth / cap if cap else 0.0,
             "blockedPuts": blocked,
             "queueHighWatermark": sum(s["highWatermark"] for s in stats),
+            "avgPullBatch": dequeued / batches if batches else 0.0,
+            "resolveHits": cache["hits"], "resolveMisses": cache["misses"],
+            "resolveInvalidations": cache["invalidations"],
             "monotonic": time.monotonic(),
         }
         if extra:
@@ -152,6 +280,10 @@ class PERuntime(threading.Thread):
                 self.crashed = True
                 traceback.print_exc()
         finally:
+            try:
+                self._flush_all()  # drain buffered output before retiring
+            except Exception:  # noqa: BLE001
+                pass
             self.fabric.unpublish_pe(self.job, self.pe_id)
             if self.on_exit:
                 self.on_exit(self)
@@ -188,8 +320,12 @@ class PERuntime(threading.Thread):
             item = {"seq": offset, "data": offset % 97}
             self._emit(0, item, partition=offset)
             offset += 1
+            self._maybe_flush()
             self._report_load()
             if interval and offset % interval == 0:
+                # checkpoint barrier: everything the checkpoint covers must
+                # be on the wire before the offset is declared durable
+                self._flush_all()
                 self.rest.ckpt.save_shard(self.job, region, offset,
                                           f"pe{self.pe_id}",
                                           meta={"offset": offset})
@@ -197,11 +333,12 @@ class PERuntime(threading.Thread):
                                             self.pe_id, offset)
             if cfg.get("rate_sleep"):
                 time.sleep(cfg["rate_sleep"])
+        self._flush_all()
         # mark completion for finite sources
         self.rest.notify_source_done(self.job, self.pe_id)
 
     def _run_chain(self) -> None:
-        """pipe/sink/router/server: pull, transform, push."""
+        """pipe/sink/router/server: batch pull, transform, batch push."""
         op = self.meta["operators"][0]
         is_sink = op["kind"] == "sink"
         work_sleep = op.get("config", {}).get("work_sleep", 0)
@@ -212,22 +349,30 @@ class PERuntime(threading.Thread):
             if q is None:
                 time.sleep(0.01)
                 continue
-            item = q.get(timeout=0.1)
+            items = q.get_many(self.emit_batch, timeout=self._pull_timeout())
             self._report_load()
-            if item is None:
+            if not items:
+                self._maybe_flush()
                 continue
-            self.counts["in"] += 1
-            if work_sleep:  # synthetic per-tuple cost (load tests/benchmarks)
-                time.sleep(work_sleep)
-            if is_sink:
-                seen += 1
-                maxseq = max(maxseq, item.get("seq", -1))
-                if seen % 50 == 0 or item.get("flush"):
-                    self.rest.report_sink(self.job, self.pe_id, seen, maxseq)
-            else:
-                item = dict(item)
-                item["hops"] = item.get("hops", 0) + 1
-                self._emit(0, item, partition=item.get("seq"))
+            self.counts["in"] += len(items)
+            for item in items:
+                if work_sleep:  # synthetic per-tuple cost (load/bench knob)
+                    time.sleep(work_sleep)
+                if is_sink:
+                    seen += 1
+                    maxseq = max(maxseq, item.get("seq", -1))
+                    if seen % 50 == 0 or item.get("flush"):
+                        self.rest.report_sink(self.job, self.pe_id, seen, maxseq)
+                else:
+                    item = dict(item)
+                    item["hops"] = item.get("hops", 0) + 1
+                    self._emit(0, item, partition=item.get("seq"))
+                    if work_sleep:
+                        # slow per-tuple work: honour the linger bound
+                        # inside the batch too, not only between batches
+                        self._maybe_flush()
+            self._maybe_flush()
+        self._flush_all()
         if is_sink:
             self.rest.report_sink(self.job, self.pe_id, seen, maxseq)
 
@@ -240,19 +385,23 @@ class PERuntime(threading.Thread):
             if q is None:
                 time.sleep(0.01)
                 continue
-            item = q.get(timeout=0.1)
-            if item is None:
+            items = q.get_many(self.emit_batch, timeout=self._pull_timeout())
+            if not items:
                 self._report_load()
+                self._maybe_flush()
                 continue
-            self.counts["in"] += 1
-            step = item["step"]
-            pending.setdefault(step, []).append(item["loss"])
-            if len(pending[step]) == width:
-                mean = float(np.mean(pending.pop(step)))
-                self._emit(0, {"seq": step, "step": step, "loss": mean})
-                self.rest.report_metrics(
-                    self.job, self.pe_id,
-                    self.load_metrics({"step": step, "loss": mean}))
+            self.counts["in"] += len(items)
+            for item in items:
+                step = item["step"]
+                pending.setdefault(step, []).append(item["loss"])
+                if len(pending[step]) == width:
+                    mean = float(np.mean(pending.pop(step)))
+                    self._emit(0, {"seq": step, "step": step, "loss": mean})
+                    self.rest.report_metrics(
+                        self.job, self.pe_id,
+                        self.load_metrics({"step": step, "loss": mean}))
+            self._maybe_flush()
+        self._flush_all()
 
     # -------------------------------------------------------------- trainer
 
@@ -329,6 +478,7 @@ class PERuntime(threading.Thread):
                                        np.int32(step))
             step += 1
             self._emit(0, {"seq": step, "step": step, "loss": mean_loss})
+            self._flush_all()  # one tuple per step: nothing to amortize
             if cr and step % interval == 0:
                 if channel == 0:  # replicas identical post-allreduce
                     self.rest.ckpt.save_shard(self.job, region, step, "params",

@@ -1,0 +1,455 @@
+"""The batched zero-re-resolve data plane (PR 2).
+
+Three layers:
+- TupleQueue ring: batch FIFO, capacity accounting in tuples, per-batch
+  backpressure stats, timeout/close semantics;
+- Fabric epoch + EndpointCache: event-driven resolve, cache hits while the
+  epoch stands still, invalidation when a peer restarts (a stale cached
+  queue must not swallow tuples);
+- PERuntime buffered emission: per-delivery out-tuple accounting, pub/sub
+  route caching against the broker epoch, and linger-flush on shutdown
+  delivering every buffered tuple.
+"""
+
+import queue as pyqueue
+import threading
+import time
+
+import pytest
+
+from repro.core import wait_for
+from repro.platform.fabric import (
+    EndpointCache,
+    Fabric,
+    ShutDown,
+    TupleQueue,
+)
+from repro.platform.runtime import PERuntime
+
+
+# -------------------------------------------------------------- TupleQueue
+
+
+def test_batch_fifo_interleaved_with_singles():
+    q = TupleQueue(maxsize=16)
+    q.put(0)
+    q.put_many([1, 2, 3])
+    q.put(4)
+    q.put_many((5, 6))
+    assert q.get() == 0
+    assert q.get_many(100) == [1, 2, 3, 4, 5, 6]
+    assert q.enqueued == q.dequeued == 7
+    assert q.put_batches == 4 and q.get_batches == 2
+
+
+def test_get_many_respects_max_items():
+    q = TupleQueue(maxsize=16)
+    q.put_many(range(10))
+    assert q.get_many(3) == [0, 1, 2]
+    assert q.get_many(3) == [3, 4, 5]
+    assert q.get_many(100) == [6, 7, 8, 9]
+    assert q.get_many(3, timeout=0.01) == []
+
+
+def test_batch_larger_than_capacity_chunks_through():
+    """Capacity is accounted in tuples; an oversized batch is admitted in
+    chunks as the consumer drains, preserving order."""
+    q = TupleQueue(maxsize=4)
+    got = []
+
+    def consume():
+        while len(got) < 10:
+            got.extend(q.get_many(4, timeout=2.0))
+
+    th = threading.Thread(target=consume)
+    th.start()
+    q.put_many(list(range(10)), timeout=5.0)
+    th.join(timeout=5.0)
+    assert got == list(range(10))
+    assert q.high_watermark <= 4
+    assert q.blocked_puts == 1  # backpressure counted once per batch
+
+
+def test_put_backpressure_stats_and_timeout():
+    q = TupleQueue(maxsize=2)
+    q.put_many([1, 2])
+    assert q.blocked_puts == 0  # exactly filled, never blocked
+    with pytest.raises(pyqueue.Full):
+        q.put(3, timeout=0.02)
+    assert q.blocked_puts == 1
+    with pytest.raises(pyqueue.Full):
+        q.put_many([3, 4], timeout=0.02)
+    assert q.blocked_puts == 2
+    assert q.stats()["depth"] == 2 and q.stats()["fill"] == 1.0
+
+
+def test_put_many_timeout_reports_admitted_prefix():
+    """A timed-out batch put annotates the exception with how much of the
+    batch is already in flight (senders count delivery per tuple)."""
+    q = TupleQueue(maxsize=4)
+    q.put_many([0, 1])
+    with pytest.raises(pyqueue.Full) as exc:
+        q.put_many([2, 3, 4, 5], timeout=0.05)
+    assert exc.value.admitted == 2  # two fit before the ring filled
+    assert q.get_many(10) == [0, 1, 2, 3]
+
+
+def test_closed_queue_fails_fast():
+    q = TupleQueue(maxsize=4)
+    q.put_many([1, 2])
+    q.close()
+    with pytest.raises(ShutDown):
+        q.put(3)
+    with pytest.raises(ShutDown):
+        q.put_many([3, 4])
+    # the consumer may still drain what was enqueued, then gets nothing
+    assert q.get_many(10, timeout=0.0) == [1, 2]
+    assert q.get(timeout=0.01) is None
+
+
+def test_maxsize_zero_means_unbounded():
+    """stdlib ``queue.Queue`` semantics the seed inherited: maxsize=0 is an
+    unbounded queue, not a zero-capacity one."""
+    q = TupleQueue(maxsize=0)
+    q.put_many(range(5000), timeout=0.1)
+    q.put(5000, timeout=0.1)
+    assert len(q) == 5001 and q.blocked_puts == 0
+    assert q.get_many(10000, timeout=0.1) == list(range(5001))
+    assert q.stats()["fill"] == 0.0
+
+
+def test_close_wakes_blocked_putter():
+    q = TupleQueue(maxsize=1)
+    q.put(0)
+    err = []
+
+    def blocked_put():
+        try:
+            q.put(1, timeout=10.0)
+        except ShutDown as e:
+            err.append(e)
+
+    th = threading.Thread(target=blocked_put)
+    th.start()
+    time.sleep(0.05)
+    q.close()
+    th.join(timeout=2.0)
+    assert not th.is_alive() and err  # raised ShutDown, not a 10 s stall
+
+
+# ------------------------------------------------- Fabric + EndpointCache
+
+
+def test_resolve_wakes_on_publish_not_poll():
+    fab = Fabric()
+
+    def publish_later():
+        time.sleep(0.05)
+        fab.publish("j", 1, 0, TupleQueue())
+
+    threading.Thread(target=publish_later).start()
+    t0 = time.monotonic()
+    fab.resolve("j", 1, 0, timeout=5.0)
+    assert time.monotonic() - t0 < 1.0  # woken by the publish signal
+
+
+def test_resolve_honours_dns_delay():
+    fab = Fabric(dns_delay=0.05)
+    fab.publish("j", 1, 0, TupleQueue())
+    t0 = time.monotonic()
+    fab.resolve("j", 1, 0)
+    assert time.monotonic() - t0 >= 0.04
+
+
+def test_endpoint_cache_hits_while_epoch_stands_still():
+    fab = Fabric()
+    q = TupleQueue()
+    fab.publish("j", 1, 0, q)
+    cache = EndpointCache(fab)
+    assert cache.get("j", 1, 0) is q
+    for _ in range(5):
+        assert cache.get("j", 1, 0) is q
+    assert cache.misses == 1 and cache.hits == 5
+
+
+def test_endpoint_cache_invalidated_by_peer_restart():
+    """After a peer restart the stale cached queue must not swallow tuples:
+    the epoch moved, so the next send re-resolves the fresh endpoint — and
+    the retired queue is closed, so even a racing put fails fast."""
+    fab = Fabric()
+    old = TupleQueue()
+    fab.publish("j", 1, 0, old)
+    cache = EndpointCache(fab)
+    assert cache.get("j", 1, 0) is old
+    # peer restarts: unpublish (pod exit) then publish fresh (new runtime)
+    fab.unpublish_pe("j", 1)
+    fresh = TupleQueue()
+    fab.publish("j", 1, 0, fresh)
+    assert cache.get("j", 1, 0) is fresh
+    assert cache.invalidations >= 1
+    assert old.closed
+    with pytest.raises(ShutDown):
+        old.put({"seq": 0})
+    fresh.put({"seq": 0})
+    assert len(fresh) == 1
+
+
+def test_routes_for_waits_out_dns_propagation():
+    """A matched route whose importer endpoint is still inside the DNS
+    propagation window must not be dropped: senders cache the route set
+    against the broker/fabric epochs and the window elapsing bumps neither,
+    so a drop here would pin the route missing."""
+    from repro.core import ResourceStore
+    from repro.platform.operator import SubscriptionBroker
+
+    fab = Fabric(dns_delay=0.05)
+    broker = SubscriptionBroker(ResourceStore(), "default", fab)
+    q = TupleQueue()
+    fab.publish("imp", 3, 0, q)
+    broker._routes = {("exp", "src"): [("imp", 3)]}
+    assert broker.routes_for("exp", "src") == [q]
+
+
+# ------------------------------------------------ PERuntime buffered emit
+
+
+class FakeRest:
+    """Minimal REST surface for a PERuntime under test."""
+
+    def __init__(self, routes=None):
+        self.ckpt = None
+        self.routes = routes or []
+        self.route_epoch = 0
+        self.route_reads = 0
+        self.sinks = []
+
+    def notify_connected(self, job, pe_id):
+        pass
+
+    def notify_source_done(self, job, pe_id):
+        pass
+
+    def report_metrics(self, job, pe_id, metrics):
+        pass
+
+    def report_sink(self, job, pe_id, seen, maxseq):
+        self.sinks.append((seen, maxseq))
+
+    def get_cr_state(self, job, region):
+        return None
+
+    def get_routes(self, job, op_name):
+        self.route_reads += 1
+        return list(self.routes)
+
+    def routes_epoch(self):
+        return self.route_epoch
+
+
+def _pipe_meta(to=((2, 0),), config=None):
+    return {
+        "peId": 1,
+        "operators": [{"id": 0, "name": "op", "kind": "pipe", "channel": -1,
+                       "region": None, "config": dict(config or {}),
+                       "inCR": False}],
+        "inputs": [{"portId": 0, "operator": "op", "from": []}],
+        "outputs": [{"portId": 0, "operator": "op",
+                     "to": [list(t) for t in to]}],
+    }
+
+
+def _make_runtime(fabric, rest, meta):
+    return PERuntime(job="j", pe_id=1, metadata=meta, fabric=fabric,
+                     rest=rest, launch_count=1,
+                     stop_event=threading.Event())
+
+
+def test_emit_counts_per_delivered_tuple():
+    """Broadcast to N targets counts N out-tuples, on successful flush
+    (metrics-plane rollups sum what was actually delivered, not what was
+    logically emitted or buffered toward a dead peer)."""
+    fab = Fabric()
+    qa, qb = TupleQueue(), TupleQueue()
+    fab.publish("j", 2, 0, qa)
+    fab.publish("j", 3, 0, qb)
+    rt = _make_runtime(fab, FakeRest(), _pipe_meta(to=((2, 0), (3, 0))))
+    rt.out_targets[0] = [(2, 0), (3, 0)]
+    rt._emit(0, {"seq": 0})  # broadcast
+    rt._emit(0, {"seq": 1}, partition=1)  # split: one target
+    assert rt.counts["out"] == 0  # buffered, nothing delivered yet
+    rt._flush_all()
+    assert rt.counts["out"] == 3  # 2 broadcast copies + 1 partitioned
+    assert len(qa) == 1 and len(qb) == 2
+    # delivery failure is not counted: retire qa's PE and emit again
+    fab.unpublish_pe("j", 2)
+    rt._emit(0, {"seq": 2})
+    rt._flush_all()
+    assert rt.counts["out"] == 4  # only the qb copy landed
+
+
+def test_emit_flushes_on_batch_size():
+    fab = Fabric()
+    q = TupleQueue()
+    fab.publish("j", 2, 0, q)
+    rt = _make_runtime(fab, FakeRest(),
+                       _pipe_meta(config={"emit_batch": 4,
+                                          "emit_linger": 999.0}))
+    rt.out_targets[0] = [(2, 0)]
+    for i in range(3):
+        rt._emit(0, {"seq": i}, partition=0)
+    assert len(q) == 0  # below batch size, linger far away: still buffered
+    rt._emit(0, {"seq": 3}, partition=0)
+    assert len(q) == 4  # size trigger: one put_many for the whole batch
+    assert q.put_batches == 1
+
+
+def test_emit_batch_config_clamped_to_at_least_one():
+    rt = _make_runtime(Fabric(), FakeRest(),
+                       _pipe_meta(config={"emit_batch": 0}))
+    assert rt.emit_batch == 1  # 0 would livelock the get_many pull loops
+
+
+def test_size_flush_resets_linger_clock():
+    """A size-triggered flush must not leave the drained batch's start time
+    on the linger clock — the next lone tuple starts a fresh window."""
+    fab = Fabric()
+    q = TupleQueue()
+    fab.publish("j", 2, 0, q)
+    rt = _make_runtime(fab, FakeRest(),
+                       _pipe_meta(config={"emit_batch": 2,
+                                          "emit_linger": 999.0}))
+    rt.out_targets[0] = [(2, 0)]
+    rt._emit(0, {"seq": 0}, partition=0)
+    rt._emit(0, {"seq": 1}, partition=0)  # size flush drains everything
+    assert rt._buf_since is None
+    rt._emit(0, {"seq": 2}, partition=0)
+    rt._maybe_flush()  # fresh window, linger far away: must stay buffered
+    assert len(q) == 2
+
+
+def test_route_cache_rereads_only_on_epoch_move():
+    fab = Fabric()
+    route_q = TupleQueue()
+    rest = FakeRest(routes=[route_q])
+    rt = _make_runtime(fab, rest, _pipe_meta(config={"emit_batch": 2}))
+    rt.out_targets[0] = []
+    rt._refresh_routes()  # the batch-boundary probe discovers the route
+    assert rest.route_reads == 1
+    for i in range(10):
+        rt._emit(0, {"seq": i})  # tuple path: flag only, no facade reads
+    rt._maybe_flush()
+    assert rest.route_reads == 1  # cached against (broker, fabric) epoch
+    rest.route_epoch += 1
+    rt._emit(0, {"seq": 10})
+    rt._flush_all()
+    assert rest.route_reads == 2  # re-read once the broker epoch moved
+    assert route_q.dequeued == 0 and len(route_q) == 11
+
+
+def test_routes_discovered_under_sustained_size_flushes():
+    """When size-triggered flushes keep pre-empting the linger flush, a
+    subscription matched mid-run (broker epoch bump) must still be noticed
+    at a flush boundary — the seed read routes on every send."""
+    fab = Fabric()
+    q = TupleQueue(maxsize=4096)
+    fab.publish("j", 2, 0, q)
+    rest = FakeRest()  # no routes yet
+    rt = _make_runtime(fab, rest,
+                       _pipe_meta(config={"emit_batch": 4,
+                                          "emit_linger": 999.0}))
+    rt.out_targets[0] = [(2, 0)]
+    rt._refresh_routes()
+    for i in range(8):  # two size flushes, linger never reached
+        rt._emit(0, {"seq": i}, partition=0)
+    route_q = TupleQueue()
+    rest.routes = [route_q]
+    rest.route_epoch += 1  # importer subscribed mid-run
+    for i in range(8, 16):
+        rt._emit(0, {"seq": i}, partition=0)
+    assert len(route_q) > 0
+
+
+def test_export_only_emitter_discovers_late_route():
+    """A PE with no static out-targets (export-only) never size/linger
+    flushes, so _emit itself must notice a route matched after startup."""
+    rest = FakeRest()
+    rt = _make_runtime(Fabric(), rest, _pipe_meta(to=()))
+    rt.out_targets[0] = []
+    rt._refresh_routes()  # startup probe: nothing matched yet
+    rt._emit(0, {"seq": 0})
+    route_q = TupleQueue()
+    rest.routes = [route_q]
+    rest.route_epoch += 1  # importer subscribes later
+    rt._emit(0, {"seq": 1})
+    rt._flush_all()
+    assert [t["seq"] for t in route_q.get_many(10, timeout=0.1)] == [1]
+
+
+def test_linger_flush_on_shutdown_delivers_buffered_tuples():
+    """With an effectively infinite linger and a large batch, tuples sit in
+    the output buffer — shutdown must still deliver every one of them."""
+    fab = Fabric()
+    downstream = TupleQueue()
+    fab.publish("j", 2, 0, downstream)
+    rest = FakeRest()
+    rt = _make_runtime(fab, rest,
+                       _pipe_meta(config={"emit_batch": 1024,
+                                          "emit_linger": 999.0}))
+    rt.start()
+    assert wait_for(lambda: 0 in rt.in_queues, 10)
+    rt.in_queues[0].put_many([{"seq": i} for i in range(10)])
+    assert wait_for(lambda: rt.counts["in"] == 10, 10)
+    time.sleep(0.05)
+    assert len(downstream) == 0  # buffered: linger not reached, batch not full
+    rt.stop_event.set()
+    rt.join(timeout=5.0)
+    got = downstream.get_many(100, timeout=0.1)
+    assert [t["seq"] for t in got] == list(range(10))
+    assert all(t["hops"] == 1 for t in got)
+
+
+def test_linger_deadline_flushes_without_shutdown():
+    fab = Fabric()
+    downstream = TupleQueue()
+    fab.publish("j", 2, 0, downstream)
+    rt = _make_runtime(fab, FakeRest(),
+                       _pipe_meta(config={"emit_batch": 1024,
+                                          "emit_linger": 0.05}))
+    rt.start()
+    try:
+        assert wait_for(lambda: 0 in rt.in_queues, 10)
+        rt.in_queues[0].put({"seq": 0})
+        # delivered close to the linger deadline (the pull timeout is
+        # capped by it — an idle input must not stretch the flush)
+        t0 = time.monotonic()
+        assert wait_for(lambda: len(downstream) == 1, 5)
+        assert time.monotonic() - t0 < 1.0
+    finally:
+        rt.stop_event.set()
+        rt.join(timeout=5.0)
+
+
+def test_runtime_reresolves_after_peer_restart():
+    """End-to-end stale-queue check at the runtime level: tuples emitted
+    after a peer restart land in the fresh queue, not the cached one."""
+    fab = Fabric()
+    old = TupleQueue()
+    fab.publish("j", 2, 0, old)
+    rt = _make_runtime(fab, FakeRest(),
+                       _pipe_meta(config={"emit_batch": 1,
+                                          "emit_linger": 0.0}))
+    rt.start()
+    try:
+        assert wait_for(lambda: 0 in rt.in_queues, 10)
+        rt.in_queues[0].put({"seq": 0})
+        assert wait_for(lambda: old.enqueued == 1, 5)
+        # peer restart
+        fab.unpublish_pe("j", 2)
+        fresh = TupleQueue()
+        fab.publish("j", 2, 0, fresh)
+        rt.in_queues[0].put({"seq": 1})
+        assert wait_for(lambda: fresh.enqueued == 1, 5)
+        assert old.enqueued == 1  # nothing swallowed by the stale queue
+    finally:
+        rt.stop_event.set()
+        rt.join(timeout=5.0)
