@@ -12,9 +12,12 @@
              (paper-Fig.9-style, but the platform reacts on its own)
   transport  data-plane micro-bench: batch × payload sweep + resolve-cache
              costs vs the seed per-tuple path -> results/BENCH_transport.json
+  scale_down graceful scale-down: tuples lost + drain latency with the drain
+             phase on vs the seed drop-on-retire behaviour
+             -> results/BENCH_scaledown.json
 
 ``--smoke`` runs only the cheap benchmarks (CI regression guard); it fails
-if the transport bench does not produce ``BENCH_transport.json``.
+if the transport or scale-down bench does not produce its JSON artifact.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Scales are reduced for the
 single-core CPU container; the *shape* of each comparison (scaling with
@@ -299,6 +302,83 @@ def bench_transport(out_path: str | None = None) -> dict:
     return report
 
 
+# ------------------------------------------------------------- scale_down
+
+
+def bench_scaledown(out_path: str | None = None, n_tuples: int = 600) -> dict:
+    """Graceful scale-down vs the seed drop behaviour.
+
+    A loaded streams job (finite source, channels slower than the source so
+    the region's rings hold a backlog) is scaled 2 -> 1 mid-stream.  With
+    ``drain`` enabled the retiring channels pull their rings dry and the
+    sink sees every tuple; with ``drain: false`` (the seed behaviour) the
+    in-flight backlog of the retired channels is dropped.  Records tuples
+    lost and the drain latency (width edit -> retired pods gone) for both
+    modes into ``results/BENCH_scaledown.json``.
+    """
+    modes = {}
+    for label, drain in (("drain", {"timeout": 15.0, "grace": 0.3}),
+                         ("drop", False)):
+        # emit_batch_max bounded so the pull batch a stopping PE has in hand
+        # stays small: the loss measured is the *ring* backlog, not an
+        # artifact of how much work was mid-flight; report_every=10 keeps
+        # the sink count quantization well under the losses measured
+        spec = {"app": {"type": "streams", "width": 2, "pipeline_depth": 2,
+                        "source": {"tuples": n_tuples, "rate_sleep": 0.0002},
+                        "channel": {"work_sleep": 0.002,
+                                    "emit_batch": 16, "emit_batch_max": 32},
+                        "sink": {"report_every": 10}},
+                "drain": drain}
+        p = Platform(num_nodes=4)
+        try:
+            p.submit("j", spec)
+            assert p.wait_full_health("j", 120)
+
+            def sink_seen():
+                for pod in p.pods("j"):
+                    if pod.status.get("sink"):
+                        return pod.status["sink"]["seen"]
+                return 0
+
+            assert wait_for(lambda: sink_seen() > 50, 60)
+            n0 = len(p.pods("j"))
+            t0 = time.monotonic()
+            p.set_width("j", "par", 1)
+            assert wait_for(lambda: len(p.pods("j")) == n0 - 2, 60)
+            retired_s = time.monotonic() - t0
+            # quiesce: the sink count stops moving (source finite)
+            last = [-1, time.monotonic()]
+
+            def quiesced():
+                seen = sink_seen()
+                if seen != last[0]:
+                    last[0] = seen
+                    last[1] = time.monotonic()
+                return seen >= n_tuples or time.monotonic() - last[1] > 2.0
+            wait_for(quiesced, 90)
+            seen = sink_seen()
+            dropped = p.job_metrics("j").get("tuplesDropped", 0)
+            modes[label] = {"emitted": n_tuples, "delivered": seen,
+                            "lost": n_tuples - seen,
+                            "metricsDropped": dropped,
+                            "drain_latency_s": retired_s}
+            emit(f"scaledown.{label}.lost", 0.0,
+                 f"{n_tuples - seen} of {n_tuples}")
+            emit(f"scaledown.{label}.retire_latency", retired_s)
+        finally:
+            p.shutdown()
+    report = {"benchmark": "scale_down", "modes": modes,
+              "zero_loss_with_drain": modes["drain"]["lost"] == 0}
+    out = out_path or os.path.join(os.path.dirname(__file__), "..", "results",
+                                   "BENCH_scaledown.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("scaledown.zero_loss_with_drain", 0.0,
+         str(report["zero_loss_with_drain"]))
+    return report
+
+
 # ----------------------------------------------------------------- fig 9
 
 
@@ -489,10 +569,13 @@ BENCHES = {
     "roofline": bench_roofline,
     "autoscale": bench_autoscale_rampup,
     "transport": bench_transport,
+    "scale_down": bench_scaledown,
 }
 
-# cheap subset for CI (`--smoke`): no Platform spin-up, seconds not minutes
-SMOKE = ("fig7c", "table1", "transport")
+# cheap subset for CI (`--smoke`): seconds not minutes (scale_down is the
+# one Platform spin-up — a few seconds per mode — because zero-loss
+# scale-down is an acceptance criterion, not just a trajectory)
+SMOKE = ("fig7c", "table1", "transport", "scale_down")
 
 
 def main() -> None:
@@ -518,12 +601,12 @@ def main() -> None:
         for name, us, derived in ROWS:
             f.write(f"{name},{us:.1f},{derived}\n")
     if smoke:  # the CI guard must actually guard
-        bench_json = os.path.join(os.path.dirname(__file__), "..", "results",
-                                  "BENCH_transport.json")
-        if not os.path.exists(bench_json):
-            print("SMOKE FAIL: results/BENCH_transport.json not produced",
-                  flush=True)
-            errors += 1
+        results_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+        for artifact in ("BENCH_transport.json", "BENCH_scaledown.json"):
+            if not os.path.exists(os.path.join(results_dir, artifact)):
+                print(f"SMOKE FAIL: results/{artifact} not produced",
+                      flush=True)
+                errors += 1
         if errors:
             sys.exit(1)
 

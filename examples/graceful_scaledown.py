@@ -1,0 +1,74 @@
+"""Graceful scale-down: shrink a loaded parallel region without tuple loss.
+
+Submits the paper's test app (source -> 2-wide parallel region -> sink) with
+a finite source and channels slower than the source, so the region's input
+rings hold a real backlog.  Then shrinks the region 2 -> 1 mid-stream: the
+retiring channel PEs enter the ``Draining`` state, pull their rings dry
+(delivering through the surviving generation), and only then are their pods
+deleted.  The sink ends at exactly the emitted tuple count — zero loss —
+and the causal trace shows the drain links.
+
+Run:  PYTHONPATH=src python examples/graceful_scaledown.py
+"""
+
+import time
+
+from repro.core import wait_for
+from repro.platform import Platform
+
+N_TUPLES = 600
+
+
+def sink_seen(platform, job):
+    for pod in platform.pods(job):
+        if pod.status.get("sink"):
+            return pod.status["sink"]["seen"]
+    return 0
+
+
+def main() -> None:
+    platform = Platform(num_nodes=4)
+    try:
+        print("== submit: finite source, channels slower than the source")
+        platform.submit("demo", {
+            "app": {"type": "streams", "width": 2, "pipeline_depth": 2,
+                    "source": {"tuples": N_TUPLES, "rate_sleep": 0.0005},
+                    "channel": {"work_sleep": 0.001},
+                    "sink": {"report_every": 10}},
+            # the drain block (defaults shown): crds.drain_config
+            "drain": {"enabled": True, "timeout": 15.0, "grace": 0.3},
+        })
+        assert platform.wait_full_health("demo", 60)
+        n0 = len(platform.pods("demo"))
+        print(f"   full health with {n0} pods")
+
+        wait_for(lambda: sink_seen(platform, "demo") > 50, 30)
+        print(f"== scale down 2 -> 1 with {sink_seen(platform, 'demo')} "
+              f"of {N_TUPLES} tuples delivered (the rest in flight)")
+        t0 = time.monotonic()
+        platform.set_width("demo", "par", 1)
+        wait_for(lambda: len(platform.pods("demo")) == n0 - 2, 60)
+        print(f"   retiring pods drained + deleted in "
+              f"{time.monotonic() - t0:.2f}s")
+
+        assert wait_for(lambda: sink_seen(platform, "demo") >= N_TUPLES, 90)
+        seen = sink_seen(platform, "demo")
+        print(f"== sink saw {seen}/{N_TUPLES} tuples "
+              f"({'ZERO LOSS' if seen == N_TUPLES else 'LOSS!'})")
+        dropped = platform.job_metrics("demo").get("tuplesDropped", 0)
+        print(f"   metrics plane tuplesDropped = {dropped}")
+
+        print("== drain links in the causal trace:")
+        for line in platform.trace.chain():
+            if ":drain:" in line or ":retire:" in line:
+                print("  ", line)
+
+        platform.delete_job("demo")
+        assert platform.wait_terminated("demo", 30)
+        print("== terminated")
+    finally:
+        platform.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Docs checks (CI `docs` job).
+
+Two guarantees, so the documentation cannot silently rot:
+
+1. every backtick code reference in ``README.md`` / ``docs/ARCHITECTURE.md``
+   that looks like a repo path resolves to a real file, and every
+   ``python -m repro...`` invocation resolves to a real module under
+   ``src/``;
+2. every script in ``examples/`` at least imports cleanly (side-effect-free
+   top level; their ``main()`` guards keep this cheap).
+
+Run from anywhere:  python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ("README.md", os.path.join("docs", "ARCHITECTURE.md"))
+
+PATH_RE = re.compile(
+    r"`([A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|md|sh|json|yml|csv|txt))"
+    r"(?::[0-9]+)?`")
+MODULE_RE = re.compile(r"python[3]? -m (repro[A-Za-z0-9_.]*)")
+
+
+def check_references() -> list:
+    errors = []
+    for doc in DOCS:
+        full = os.path.join(ROOT, doc)
+        if not os.path.exists(full):
+            errors.append(f"{doc}: required document is missing")
+            continue
+        with open(full) as f:
+            text = f.read()
+        for match in PATH_RE.finditer(text):
+            ref = match.group(1)
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                errors.append(f"{doc}: referenced path `{ref}` does not exist")
+        for match in MODULE_RE.finditer(text):
+            mod = match.group(1)
+            rel = mod.replace(".", os.sep)
+            if not (os.path.exists(os.path.join(ROOT, "src", rel + ".py"))
+                    or os.path.isdir(os.path.join(ROOT, "src", rel))):
+                errors.append(f"{doc}: `python -m {mod}` does not resolve "
+                              f"under src/")
+    return errors
+
+
+def check_examples_import() -> list:
+    examples = sorted(
+        f for f in os.listdir(os.path.join(ROOT, "examples"))
+        if f.endswith(".py"))
+    loader = "\n".join(
+        "import importlib.util\n"
+        f"spec = importlib.util.spec_from_file_location("
+        f"'example_{i}', {os.path.join(ROOT, 'examples', name)!r})\n"
+        "mod = importlib.util.module_from_spec(spec)\n"
+        "spec.loader.exec_module(mod)\n"
+        f"print('imported examples/{name}')"
+        for i, name in enumerate(examples))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run([sys.executable, "-c", loader], env=env,
+                          capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        return [f"examples import check failed:\n{proc.stdout}\n{proc.stderr}"]
+    print(proc.stdout, end="")
+    return []
+
+
+def main() -> int:
+    errors = check_references()
+    errors += check_examples_import()
+    for err in errors:
+        print(f"DOCS CHECK FAIL: {err}", file=sys.stderr)
+    if not errors:
+        print("docs checks OK "
+              f"({', '.join(DOCS)} references resolve; examples import)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

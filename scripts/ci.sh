@@ -8,9 +8,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests"
 python -m pytest -x -q
 
-echo "== benchmark smoke (fig7c, table1, transport)"
-# drop any stale artifact so run.py's --smoke BENCH_transport.json gate is real
-rm -f results/BENCH_transport.json
+echo "== benchmark smoke (fig7c, table1, transport, scale_down)"
+# drop stale artifacts so run.py's --smoke artifact gates are real
+rm -f results/BENCH_transport.json results/BENCH_scaledown.json
 python benchmarks/run.py --smoke
+
+echo "== docs checks (README/ARCHITECTURE references, examples import)"
+python scripts/check_docs.py
 
 echo "CI OK"

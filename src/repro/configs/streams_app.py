@@ -17,6 +17,31 @@ class StreamsAppConfig:
     post_ops: int = 1        # operators after the parallel region
     consistent_region: bool = False
     checkpoint_interval: int = 10  # tuples between checkpoints (when CR on)
+    # adaptive emit batching (per-operator transport knobs; see PERuntime):
+    # the controller sizes the output batch from observed load between the
+    # min/max bounds, starting at emit_batch
+    emit_batch: int = 64
+    emit_batch_min: int = 1
+    emit_batch_max: int = 512
+    emit_adaptive: bool = True
+    emit_linger: float = 0.002  # max seconds a buffered tuple may wait
+    # graceful scale-down (job-level drain block; see crds.drain_config)
+    drain_enabled: bool = True
+    drain_timeout: float = 5.0   # seconds a retiring PE may drain
+    drain_grace: float = 0.3     # input-silence window that counts as dry
+
+    def drain_spec(self) -> dict:
+        """The job-spec ``drain`` block this config corresponds to."""
+        return {"enabled": self.drain_enabled, "timeout": self.drain_timeout,
+                "grace": self.drain_grace}
+
+    def emit_config(self) -> dict:
+        """The per-operator transport config block (for channel/source ops)."""
+        return {"emit_batch": self.emit_batch,
+                "emit_batch_min": self.emit_batch_min,
+                "emit_batch_max": self.emit_batch_max,
+                "emit_adaptive": self.emit_adaptive,
+                "emit_linger": self.emit_linger}
 
     @property
     def num_operators(self) -> int:

@@ -68,7 +68,8 @@ class Platform:
         self.rest = RestFacade(self.store, coords["pod"], self.ckpt, namespace)
 
         # --- instance operator actors
-        self.job_controller = JobController(self.store, namespace, coords, self.trace)
+        self.job_controller = JobController(self.store, namespace, coords,
+                                            self.trace, fabric=self.fabric)
         self.pe_controller = PEController(self.store, namespace, coords, self.trace)
         self.pod_controller = PodController(self.store, namespace, coords, self.trace)
         self.pr_controller = ParallelRegionController(self.store, namespace,

@@ -15,6 +15,18 @@ unchanged:
 The conductor owns no resources and keeps no essential state: policies and
 cooldown stamps live in ScalingPolicy CRDs, current widths in ParallelRegion
 CRDs, load in Metrics CRDs — a restart recomputes everything by replay.
+
+Scale-down is *graceful*: a width decrease sends the retiring channels
+through the drain phase (PE status ``Draining`` -> fabric drain-only ->
+runtime pulls its input dry / hands off -> pod deleted), so elasticity
+decisions do not cost in-flight tuples.  Two gates keep the conductor from
+fighting that machinery:
+
+- the existing health gate (restart churn must not read as low load), and
+- a drain gate: while any pod of the job is still draining, no further
+  scale decision is taken for it — a second generation change mid-drain
+  would re-plan under the drainers and double the churn the drain exists
+  to absorb.
 """
 
 from __future__ import annotations
@@ -87,6 +99,10 @@ class AutoscaleConductor(Conductor):
 
     def _evaluate(self, job: str, now: float | None) -> list:
         now = self.clock() if now is None else now
+        if self._draining(job):
+            # let the in-flight drain finish before the next generation
+            # change; the metrics burst that follows re-triggers evaluation
+            return []
         metrics = self.store.try_get(crds.METRICS, crds.metrics_name(job),
                                      self.namespace)
         changes = []
@@ -114,6 +130,15 @@ class AutoscaleConductor(Conductor):
             self._scale(job, region, pol, current, want, now)
             changes.append((region, current, want))
         return changes
+
+    def _draining(self, job: str) -> bool:
+        """True while a previous scale-down's drain phase is still running
+        (a pod carries a drain request but no drained report yet)."""
+        for pod in self.store.list(crds.POD, self.namespace,
+                                   crds.job_labels(job)):
+            if pod.status.get("draining") and not pod.status.get("drained"):
+                return True
+        return False
 
     def _unhealthy(self, job: str) -> bool:
         """True only when the job conductor has *observed* lost health

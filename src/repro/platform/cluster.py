@@ -107,10 +107,31 @@ class KubeletController(Controller):
         self._maybe_start(res)
 
     def on_modification(self, old, new) -> None:
+        if new.status.get("draining") and not (
+                old is not None and old.status.get("draining")):
+            self._begin_drain(new)
         self._maybe_start(new)
 
     def on_deletion(self, res: Resource) -> None:
         self.stop_pod(res.name)
+
+    def _begin_drain(self, pod: Resource) -> None:
+        """Forward a scale-down drain request to the PE runtime: mark the
+        fabric endpoints drain-only (no new producers resolve to them; all
+        sender caches invalidate on the epoch bump) and hand the runtime
+        the drain parameters + handoff targets."""
+        with self._hlock:
+            handle = self.handles.get(pod.name)
+        if handle is None or not handle.runtime.is_alive():
+            # nothing running here (already exited): report an empty drain
+            # so the pod conductor finalizes the retirement
+            self.pod_coord.submit_status(
+                pod.name, {"drained": {"tuplesDropped": 0, "handedOff": 0,
+                                       "drainMs": 0.0, "clean": True}},
+                requester=self.name)
+            return
+        self.fabric.set_draining(pod.spec["job"], pod.spec["peId"])
+        handle.runtime.begin_drain(pod.status["draining"])
 
     def _maybe_start(self, pod: Resource) -> None:
         if not pod.spec.get("nodeName") or pod.status.get("phase") != "Pending":
@@ -141,6 +162,12 @@ class KubeletController(Controller):
         if runtime.crashed:
             self.pod_coord.submit_status(pod_name, {"phase": "Failed"},
                                          requester=self.name)
+        elif runtime.drain_stats is not None:
+            # drained: the pod conductor finalizes the retirement on this
+            self.pod_coord.submit_status(
+                pod_name, {"phase": "Succeeded",
+                           "drained": runtime.drain_stats},
+                requester=self.name)
         elif not runtime.stop_event.is_set():
             self.pod_coord.submit_status(pod_name, {"phase": "Succeeded"},
                                          requester=self.name)

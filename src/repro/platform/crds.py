@@ -5,6 +5,36 @@ and recomputable.  Naming is hierarchical and deterministic (paper §7.5):
 PE ids are local to the job, port ids local to the PE, pod/configmap/service
 names are pure functions of (job, pe id) — nothing is stored that can be
 computed.
+
+Every constructor below documents its public ``spec``/``status`` fields;
+``docs/ARCHITECTURE.md`` maps them back to the paper's sections.  Two
+cross-cutting field families live in *operator config dicts* (carried
+through ConfigMaps into the PE runtimes) rather than in their own CRD:
+
+Emit-batching knobs (per-operator ``config``, see ``PERuntime``):
+
+- ``emit_batch``      initial output batch size (tuples per flush); the
+                      adaptive controller starts here.  Default 64.
+- ``emit_batch_min``  lower bound the controller may shrink to under light
+                      load (1 = per-tuple emission).  Default 1.
+- ``emit_batch_max``  upper bound under backpressure.  Default 512.
+- ``emit_adaptive``   enable the metrics-driven controller (default True);
+                      False pins ``emit_batch`` statically (the pre-drain
+                      behaviour).
+- ``emit_linger``     max seconds a buffered tuple may wait before a flush;
+                      the effective linger scales down with the current
+                      batch size (per-tuple emission ≈ zero linger).
+                      Default 0.002.
+
+Drain knobs (job ``spec["drain"]``, consumed by ``JobController`` on a
+width decrease and enforced by the PE runtime — see ``drain_config``):
+
+- ``enabled``   drain retiring PEs before deleting their pods (default
+                True); False restores the seed drop-on-retire behaviour.
+- ``timeout``   seconds a retiring PE may spend pulling its input dry
+                before falling back to handoff/drop (default 5.0).
+- ``grace``     seconds of continuous input silence (after retiring
+                upstreams unpublished) that count as "dry" (default 0.3).
 """
 
 from __future__ import annotations
@@ -70,15 +100,55 @@ def job_labels(job: str) -> dict:
     return {"repro.ibm.com/job": job}
 
 
+def drain_config(spec: dict) -> dict:
+    """Normalize a job spec's ``drain`` block (see the module docstring).
+
+    Accepts ``drain: False`` / ``drain: True`` shorthands as well as the
+    full dict form; always returns ``{"enabled", "timeout", "grace"}``.
+    """
+    raw = spec.get("drain", {})
+    if raw is False or raw is True:
+        raw = {"enabled": raw}
+    return {"enabled": bool(raw.get("enabled", True)),
+            "timeout": float(raw.get("timeout", 5.0)),
+            "grace": float(raw.get("grace", 0.3))}
+
+
 # ----------------------------------------------------------- constructors
 
 
 def make_job(name: str, spec: dict, namespace: str = "default") -> Resource:
+    """Job CRD — the user's submission (paper §6.1).
+
+    spec:   ``app`` (application block: type streams|train|serve + its
+            knobs), ``consistentRegion`` ({name, interval, operators?},
+            §6.5), ``widths`` (region -> width, written by the
+            ParallelRegionController on width edits; a spec change here is
+            what bumps the generation, §6.3), ``fusion``
+            ("one-per-op"|"per-channel"), ``drain`` (see ``drain_config``),
+            ``stragglerTimeout`` (seconds of heartbeat silence before a pod
+            is treated as failed), ``gcMode`` ("manual" bulk label deletion
+            vs owner-reference GC, §8).
+    status: ``state`` (Submitting|Submitted), ``jobId``,
+            ``appliedGeneration``, ``expectedPEs``, ``fullHealth`` /
+            ``fullHealthAt`` / ``submittedAt``, ``sourcesDone``.
+    """
     return Resource(kind=JOB, name=name, namespace=namespace, spec=spec,
                     labels=job_labels(name))
 
 
 def make_pe(job: str, pe_id: int, spec: dict, namespace: str = "default") -> Resource:
+    """ProcessingElement CRD — one schedulable PE (paper §5.1).
+
+    spec:   ``job``, ``peId`` (job-local, width-stable), ``operators``
+            (fused operator names), ``podSpec`` (placement constraints from
+            §6.2).
+    status: ``launchCount`` (the pod causal chain's trigger: every bump
+            makes the pod conductor converge a pod to it), ``state``
+            ("Draining" while a retiring PE pulls its input dry on
+            scale-down; the drained pod's finalizer only retires PEs in
+            this state).
+    """
     return Resource(
         kind=PE, name=pe_name(job, pe_id), namespace=namespace,
         spec={"job": job, "peId": pe_id, **spec},
@@ -90,6 +160,14 @@ def make_pe(job: str, pe_id: int, spec: dict, namespace: str = "default") -> Res
 
 def make_config_map(job: str, pe_id: int, data: dict, generation: int,
                     namespace: str = "default") -> Resource:
+    """ConfigMap — a PE's graph metadata, the §6.3 restart discriminator.
+
+    spec: ``job``, ``peId``, ``jobGeneration``, and ``data`` (the pipeline's
+    per-PE ``graph_metadata``: operators with their config dicts — including
+    the emit-batching knobs documented in the module docstring — input/output
+    ports, widths for trainer/reducer PEs, consistentRegion).  The pod
+    conductor restarts a pod iff ``data`` changed across generations.
+    """
     return Resource(
         kind=CONFIG_MAP, name=cm_name(job, pe_id), namespace=namespace,
         spec={"job": job, "peId": pe_id, "data": data,
@@ -101,6 +179,11 @@ def make_config_map(job: str, pe_id: int, data: dict, generation: int,
 
 def make_service(job: str, pe_id: int, ports: list,
                  namespace: str = "default") -> Resource:
+    """Service — the PE's stable network name (§5.2 computed names).
+
+    spec: ``job``, ``peId``, ``ports`` (input port ids the fabric publishes
+    under the (job, peId, portId) computed name).
+    """
     return Resource(
         kind=SERVICE, name=service_name(job, pe_id), namespace=namespace,
         spec={"job": job, "peId": pe_id, "ports": ports},
@@ -111,6 +194,21 @@ def make_service(job: str, pe_id: int, ports: list,
 
 def make_pod(job: str, pe_id: int, pod_spec: dict, launch_count: int,
              generation: int, namespace: str = "default") -> Resource:
+    """Pod — the PE's running incarnation (created ONLY by the pod conductor).
+
+    spec:   ``job``, ``peId``, ``launchCount`` (which launch this pod
+            serves), ``jobGeneration``, ``nodeName`` (bound by the
+            scheduler), ``pod_spec`` (labels/affinity from §6.2).
+    status: ``phase`` (Pending|Running|Succeeded|Failed|Unschedulable),
+            ``connected``, ``sourceDone``, ``heartbeat``, ``metrics`` (the
+            PE's latest load sample, scraped by the metrics plane),
+            ``sink`` ({seen, maxseq} progress), ``draining`` (the drain
+            request written on scale-down: {requestedAt, timeout, grace,
+            siblings, upstream} — the kubelet forwards it to the runtime),
+            ``drained`` (the runtime's drain report: {tuplesDropped,
+            handedOff, drainMs, clean} — the pod conductor's retire
+            trigger).
+    """
     return Resource(
         kind=POD, name=pod_name(job, pe_id), namespace=namespace,
         spec={"job": job, "peId": pe_id, "launchCount": launch_count,
@@ -123,6 +221,13 @@ def make_pod(job: str, pe_id: int, pod_spec: dict, launch_count: int,
 
 def make_parallel_region(job: str, region: str, width: int,
                          namespace: str = "default") -> Resource:
+    """ParallelRegion CRD — the elastic unit (§6.3).
+
+    spec: ``job``, ``region``, ``width``.  Editing ``width`` (kubectl or
+    the autoscale conductor) fires the generation-change causal chain; a
+    decrease additionally sends the removed channels through the drain
+    phase before their pods are deleted.
+    """
     return Resource(
         kind=PARALLEL_REGION, name=pr_name(job, region), namespace=namespace,
         spec={"job": job, "region": region, "width": width},
@@ -133,6 +238,11 @@ def make_parallel_region(job: str, region: str, width: int,
 
 def make_hostpool(job: str, name: str, tags: list,
                   namespace: str = "default") -> Resource:
+    """HostPool CRD — named node-tag set for placement (§6.2).
+
+    spec: ``job``, ``name``, ``tags`` (node labels operators may pin to via
+    ``placement.hostpool_tags``).
+    """
     return Resource(
         kind=HOSTPOOL, name=f"{job}-hp-{name}", namespace=namespace,
         spec={"job": job, "name": name, "tags": tags},
@@ -143,6 +253,12 @@ def make_hostpool(job: str, name: str, tags: list,
 
 def make_export(job: str, op_name: str, stream: str, properties: dict,
                 namespace: str = "default") -> Resource:
+    """Export CRD — a published stream (§6.4 pub/sub).
+
+    spec: ``job``, ``operator``, ``stream`` (name importers may subscribe
+    to), ``properties`` (key/value set for property-based subscription),
+    ``peId`` (the exporting PE, filled by the job controller).
+    """
     return Resource(
         kind=EXPORT, name=f"{job}-export-{op_name}", namespace=namespace,
         spec={"job": job, "operator": op_name, "stream": stream,
@@ -154,6 +270,13 @@ def make_export(job: str, op_name: str, stream: str, properties: dict,
 
 def make_import(job: str, op_name: str, subscription: dict,
                 namespace: str = "default") -> Resource:
+    """Import CRD — a subscription (§6.4 pub/sub).
+
+    spec: ``job``, ``operator``, ``subscription`` ({stream: name} exact
+    match or {properties: {...}} predicate), ``peId`` (the importing PE).
+    The subscription broker matches Imports against Exports and excludes
+    draining importers from fresh routes.
+    """
     return Resource(
         kind=IMPORT, name=f"{job}-import-{op_name}", namespace=namespace,
         spec={"job": job, "operator": op_name, "subscription": subscription},
@@ -164,6 +287,13 @@ def make_import(job: str, op_name: str, subscription: dict,
 
 def make_consistent_region(job: str, region: str, spec: dict,
                            namespace: str = "default") -> Resource:
+    """ConsistentRegion CRD — at-least-once region state (§6.5).
+
+    spec:   ``job``, ``region``, ``interval`` (tuples/steps between
+            checkpoints), ``members`` (stateful participant PE ids).
+    status: ``state`` (Idle|Processing|Recovering), ``lastCommitted``
+            (checkpoint id every member reported — the replay point).
+    """
     return Resource(
         kind=CONSISTENT_REGION, name=cr_name(job, region), namespace=namespace,
         spec={"job": job, "region": region, **spec},
@@ -177,7 +307,14 @@ def make_metrics(job: str, namespace: str = "default") -> Resource:
     """One Metrics resource per job: the metrics plane's published rollups.
 
     spec is empty (there is no desired state — metrics are pure observation);
-    all content lives in status, written only by the metrics coordinator.
+    all content lives in status, written only by the metrics coordinator:
+
+    status: ``operators`` (op name -> latest sample + ``rate``/``peId``),
+            ``regions`` (region -> {channels, backpressure, throughput,
+            queueDepth, blockedPuts, stepTime, tuplesDropped, emitBatch}),
+            ``updatedAt``.  ``tuplesDropped`` counts drain-timeout drops on
+            scale-down; ``emitBatch`` is the mean adaptive output batch the
+            region's channels currently run at.
     """
     return Resource(
         kind=METRICS, name=metrics_name(job), namespace=namespace,
@@ -196,9 +333,15 @@ def make_scaling_policy(job: str, region: str, *, min_width: int = 1,
                         namespace: str = "default") -> Resource:
     """ScalingPolicy CRD: bounds + thresholds the autoscale conductor obeys.
 
-    ``metric`` selects the region aggregate to scale on: "backpressure"
-    (mean input-queue fill, thresholded) or "throughput" (tuples/s divided
-    by ``target_per_channel`` gives the wanted width directly).
+    spec:   ``job``, ``region``, ``minWidth``/``maxWidth`` (clamp),
+            ``metric`` — the region aggregate to scale on: "backpressure"
+            (mean input-queue fill, thresholded by ``scaleUpAt`` /
+            ``scaleDownAt``, stepping by ``step``) or "throughput"
+            (tuples/s divided by ``targetPerChannel`` gives the wanted
+            width directly) — and ``cooldown`` (seconds between scale
+            actions).
+    status: ``lastScaleAt`` (cooldown stamp, written BEFORE the width edit
+            so a conductor restart cannot double-scale), ``lastWidth``.
     """
     return Resource(
         kind=SCALING_POLICY, name=policy_name(job, region), namespace=namespace,
@@ -214,5 +357,7 @@ def make_scaling_policy(job: str, region: str, *, min_width: int = 1,
 
 
 def make_node(name: str, cores: int = 16, labels: dict | None = None) -> Resource:
+    """Node — cluster substrate capacity (spec: ``cores``; labels are the
+    tags hostpool/node affinity match against)."""
     return Resource(kind=NODE, name=name, spec={"cores": cores},
                     labels=labels or {})

@@ -28,6 +28,34 @@ resolve) is slow and rare; the data path must never pay for it per tuple.
 operator initiates rollback-and-recovery, in-flight barriers abort with
 ``EpochAborted`` so surviving shards rewind to the committed checkpoint
 instead of deadlocking on a dead peer.
+
+Scale-down draining (the §6.3 teardown gap): two fabric mechanisms keep
+in-flight tuples alive across generation changes outside consistent
+regions —
+
+- **drain-only endpoints**: ``set_draining`` marks a retiring PE's
+  endpoints.  Fresh resolution (``resolve`` with the default
+  ``include_draining=False`` — new-generation producers, pub/sub route
+  matching) no longer finds them, while *established* senders re-resolving
+  through their ``EndpointCache`` still do, so a retiring PE can receive
+  the tail of its upstreams' buffers while it pulls its input dry.  The
+  mark bumps the epoch, so every sender cache invalidates at the moment
+  the drain begins.
+- **residual carryover**: ``unpublish_pe`` stashes whatever tuples were
+  still sitting in the retired queues; the next ``publish`` of the same
+  computed name (a *restarting* PE of the surviving generation) preloads
+  them into the fresh ring, in order, ahead of new traffic.  A PE restart
+  for a metadata change therefore loses nothing that had already been
+  delivered to it.  Residuals for names that never republish (truly
+  retired PEs — the drain phase empties those rings first) expire after
+  ``residual_ttl`` seconds.
+
+Drain endpoint state machine::
+
+    published --set_draining--> draining --unpublish_pe--> closed
+        ^                                                    |
+        +------------- publish (same name, restart; ---------+
+                        residuals preloaded)
 """
 
 from __future__ import annotations
@@ -207,6 +235,31 @@ class TupleQueue:
             self.dequeued += n
             self._not_full.notify_all()
 
+    def take_all(self) -> list:
+        """Atomically remove and return everything in the ring (the drain /
+        handoff primitive: residual tuples leave as data, not as a drop)."""
+        with self._lock:
+            items = list(self._items)
+            self._items.clear()
+            self.dequeued += len(items)
+            self._not_full.notify_all()
+            return items
+
+    def preload(self, items) -> None:
+        """Prepend carried-over residuals ahead of new traffic, ignoring
+        capacity (bounded by the producer's ring size, so at worst one ring
+        of transient oversubscription).  Used by ``Fabric.publish`` when a
+        restarted PE reclaims its predecessor's undelivered input."""
+        if not items:
+            return
+        with self._lock:
+            self._items.extendleft(reversed(items))
+            self.enqueued += len(items)
+            depth = len(self._items)
+            if depth > self.high_watermark:
+                self.high_watermark = depth
+            self._not_empty.notify_all()
+
     def close(self) -> None:
         """Mark the endpoint dead: pending and future puts raise ``ShutDown``
         (a stale cached sender fails fast instead of feeding a dead ring)."""
@@ -295,44 +348,113 @@ class Fabric:
     tuple hot path while the epoch stands still.
     """
 
-    def __init__(self, dns_delay: float = 0.0):
+    def __init__(self, dns_delay: float = 0.0, residual_ttl: float = 30.0):
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._endpoints: dict = {}  # (job, pe_id, port_id) -> TupleQueue
         self._published_at: dict = {}
+        self._draining: set = set()  # (job, pe_id, port_id) drain-only keys
+        self._residuals: dict = {}  # key -> (stashed_at, [tuples])
+        self._publish_counts: dict = {}  # (job, pe_id) -> cumulative publishes
         self._collectives: dict = {}  # (job, region) -> CollectiveGroup
         self.dns_delay = dns_delay
+        self.residual_ttl = residual_ttl
         self.epoch = 0
 
     def publish(self, job: str, pe_id: int, port_id: int, q: TupleQueue) -> None:
+        key = (job, pe_id, port_id)
         with self._cond:
-            self._endpoints[(job, pe_id, port_id)] = q
-            self._published_at[(job, pe_id, port_id)] = time.monotonic()
+            self._sweep_residuals()
+            residual = self._residuals.pop(key, None)
+            if residual is not None:
+                # a restarted PE reclaims its predecessor's undelivered
+                # input: carryover rides ahead of new traffic, in order
+                q.preload(residual[1])
+            self._endpoints[key] = q
+            self._published_at[key] = time.monotonic()
+            self._draining.discard(key)
+            self._publish_counts[(job, pe_id)] = \
+                self._publish_counts.get((job, pe_id), 0) + 1
             self.epoch += 1
             self._cond.notify_all()
 
     def unpublish_pe(self, job: str, pe_id: int) -> None:
         with self._cond:
             removed = [key for key in self._endpoints if key[:2] == (job, pe_id)]
+            now = time.monotonic()
             for key in removed:
-                self._endpoints.pop(key).close()
+                q = self._endpoints.pop(key)
+                leftovers = q.take_all()
+                q.close()
+                if leftovers:
+                    self._residuals[key] = (now, leftovers)
                 self._published_at.pop(key, None)
+                self._draining.discard(key)
+            self._sweep_residuals(now)
             if removed:
                 self.epoch += 1
                 self._cond.notify_all()
 
+    def set_draining(self, job: str, pe_id: int) -> int:
+        """Mark a retiring PE's endpoints drain-only and bump the epoch.
+
+        Fresh resolution no longer finds them (no *new* producers attach);
+        established senders — whose ``EndpointCache`` just invalidated on
+        the epoch move — re-resolve with ``include_draining=True`` and can
+        still deliver their buffered tail while the PE pulls its ring dry."""
+        marked = 0
+        with self._cond:
+            for key in self._endpoints:
+                if key[:2] == (job, pe_id):
+                    self._draining.add(key)
+                    marked += 1
+            if marked:
+                self.epoch += 1
+                self._cond.notify_all()
+        return marked
+
+    def pe_published(self, job: str, pe_id: int) -> bool:
+        """True while any endpoint of the PE is still bound (a draining PE
+        waits for its retiring *upstreams* to unpublish before declaring
+        its input dry — their final flush happens before they unpublish)."""
+        with self._lock:
+            return any(key[:2] == (job, pe_id) for key in self._endpoints)
+
+    def publish_count(self, job: str, pe_id: int) -> int:
+        """Cumulative publishes by a PE — the restart detector.  A draining
+        PE whose surviving upstream is restarting into the new generation
+        waits for this to move past the value captured at drain time: the
+        fresh incarnation publishes only after the old one exited, and the
+        old one flushes its buffered tail before exiting."""
+        with self._lock:
+            return self._publish_counts.get((job, pe_id), 0)
+
+    def _sweep_residuals(self, now: float | None = None) -> None:
+        """Caller holds the lock.  Residuals whose name never republished
+        (retired for good, or the job tore down) expire after the TTL."""
+        now = time.monotonic() if now is None else now
+        for key in [k for k, (t, _) in self._residuals.items()
+                    if now - t > self.residual_ttl]:
+            del self._residuals[key]
+
     def resolve(self, job: str, pe_id: int, port_id: int,
-                timeout: float = 30.0):
+                timeout: float = 30.0, include_draining: bool = False):
         """Name resolution with propagation delay (paper §8: DNS latency).
 
         Event-driven: waits on the registry condition (signalled by
         ``publish``) rather than polling, waking early only to honour the
-        configured DNS propagation delay."""
+        configured DNS propagation delay.  Endpoints marked drain-only are
+        invisible unless ``include_draining`` — fresh producers and pub/sub
+        route matching must not attach to a retiring PE, but established
+        senders (``EndpointCache``) may still deliver their buffered tail."""
         key = (job, pe_id, port_id)
         deadline = time.monotonic() + timeout
         with self._cond:
             while True:
                 q = self._endpoints.get(key)
+                if q is not None and not include_draining and \
+                        key in self._draining:
+                    q = None  # drain-only: invisible to fresh resolution
                 now = time.monotonic()
                 if q is not None:
                     ready_at = self._published_at.get(key, 0.0) + self.dns_delay
@@ -394,7 +516,10 @@ class EndpointCache:
             self.hits += 1
             return q
         self.misses += 1
-        q = self.fabric.resolve(job, pe_id, port_id, timeout=timeout)
+        # an established sender may still reach a drain-only endpoint: the
+        # retiring PE is pulling its ring dry and wants our buffered tail
+        q = self.fabric.resolve(job, pe_id, port_id, timeout=timeout,
+                                include_draining=True)
         if self.fabric.epoch == self._epoch:
             # only cache if no binding moved while we resolved
             self._queues[key] = q

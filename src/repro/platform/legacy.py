@@ -216,11 +216,19 @@ class LegacyPlatform:
 
     # ------------------------------------------------------- width change
 
-    def change_width(self, job: str, region: str, width: int) -> None:
+    def change_width(self, job: str, region: str, width: int,
+                     drain: bool = False) -> None:
         """Legacy semantics: sequential stop-affected, then start-new.
 
         PE ids are instance-global, so changed PEs get NEW ids; the whole
-        affected subgraph stops before anything restarts (paper §6.3/§8)."""
+        affected subgraph stops before anything restarts (paper §6.3/§8).
+        By default removed PEs drop their in-flight input — the baseline
+        the cloud-native drain phase is measured against.  ``drain=True``
+        is the manager-in-the-loop variant: the monolith synchronously
+        drives the same runtime drain state machine (pull dry -> handoff to
+        the surviving sibling) before stopping, showing the mechanism is
+        platform-independent even if the legacy manager must block on it.
+        """
         plan = self.plans[job]
         new_plan = plan_job(job, {**_spec_with(plan), "fusion": "one-per-op"},
                             {**plan.widths, region: width})
@@ -228,6 +236,26 @@ class LegacyPlatform:
         affected = [pe for pe in new_plan.pes
                     if old_meta.get(pe.pe_id) != pe.graph_metadata]
         removed = [pe for pe in plan.pes if pe.pe_id >= len(new_plan.pes)]
+        if drain:
+            from .pipeline import drain_handoff
+            removed_ids = {pe.pe_id for pe in removed}
+            drainers = []
+            for pe in removed:
+                entry = self.pes.get((job, pe.pe_id))
+                if entry is None:
+                    continue
+                rt, _stop, _pe = entry
+                meta = pe.graph_metadata
+                upstream = sorted({src[0] for port in meta["inputs"]
+                                   for src in port["from"]
+                                   if src[0] in removed_ids})
+                self.fabric.set_draining(job, pe.pe_id)
+                rt.begin_drain({"timeout": 5.0, "grace": 0.3,
+                                "upstream": upstream,
+                                **drain_handoff(new_plan, meta)})
+                drainers.append(rt)
+            for rt in drainers:  # synchronous: the monolith blocks
+                rt.join(timeout=10)
         # sequential: stop all affected first...
         for pe in affected + removed:
             entry = self.pes.pop((job, pe.pe_id), None)

@@ -12,7 +12,12 @@ Aggregates per region:
   the primary elasticity signal;
 - ``throughput``:   sum of per-channel tuple rates (d tuplesIn / dt over the
   window; tuplesOut for sources);
-- ``queueDepth``:   summed depths; ``stepTime``: mean trainer step time.
+- ``queueDepth``:   summed depths; ``stepTime``: mean trainer step time;
+- ``emitBatch``:    mean adaptive output batch the channels run at;
+- ``tuplesDropped``: cumulative drain-fallback drops, *including* PEs whose
+  pods are already retired — a retiring PE's final (forced) sample is folded
+  into a per-job ledger when its pod deletes, so scale-down losses stay
+  visible in the Metrics CRD after the evidence pod is gone.
 
 Like every conductor, its state is recomputable: windows rebuild from the
 live stream after a restart, and the published resource is just a cache of
@@ -44,6 +49,7 @@ class MetricsPlane(Conductor):
         self.publish_interval = publish_interval
         self.clock = clock
         self._samples: dict = {}  # (job, peId) -> deque[(t, sample)]
+        self._retired_drops: dict = {}  # job -> {region|None: dropped}
         self._last_publish: dict = {}  # job -> t
 
     # ------------------------------------------------------------ ingestion
@@ -55,7 +61,16 @@ class MetricsPlane(Conductor):
         if job is None or pe_id is None:
             return
         if event.type == EventType.DELETED:
-            self._samples.pop((job, pe_id), None)
+            win = self._samples.pop((job, pe_id), None)
+            if win:
+                # fold a retired PE's terminal drop count into the ledger
+                # so scale-down losses outlive the pod that reported them
+                _, last = win[-1]
+                dropped = last.get("tuplesDropped", 0)
+                if dropped:
+                    per_region = self._retired_drops.setdefault(job, {})
+                    region = last.get("region")
+                    per_region[region] = per_region.get(region, 0) + dropped
             return
         sample = pod.status.get("metrics")
         if not isinstance(sample, dict) or "operator" not in sample:
@@ -89,10 +104,20 @@ class MetricsPlane(Conductor):
         d = s1.get(key, 0) - s0.get(key, 0)
         return max(d, 0) / (t1 - t0)
 
+    @staticmethod
+    def _region_zero(dropped: int = 0) -> dict:
+        """Empty region aggregate (also the shape published for regions
+        whose every channel already retired but whose drops remain)."""
+        return {"channels": 0, "backpressure": 0.0, "throughput": 0.0,
+                "queueDepth": 0, "blockedPuts": 0, "stepTime": 0.0,
+                "emitBatch": 0.0, "tuplesDropped": dropped}
+
     def aggregate(self, job: str) -> dict:
         """Pure rollup of the current windows for one job."""
         operators: dict = {}
         regions: dict = {}
+        retired = self._retired_drops.get(job, {})
+        dropped_total = sum(retired.values())
         for (j, pe_id), win in self._samples.items():
             if j != job or not win:
                 continue
@@ -100,27 +125,35 @@ class MetricsPlane(Conductor):
             rate = self._rate(win)
             op_entry = {**latest, "rate": rate, "peId": pe_id}
             operators[latest["operator"]] = op_entry
+            dropped_total += latest.get("tuplesDropped", 0)
             region = latest.get("region")
             if not region:
                 continue
             agg = regions.setdefault(region, {
-                "channels": 0, "backpressure": 0.0, "throughput": 0.0,
-                "queueDepth": 0, "blockedPuts": 0, "stepTime": 0.0,
+                **self._region_zero(retired.get(region, 0)),
                 "stepTimeSamples": 0})
             agg["channels"] += 1
             agg["backpressure"] += latest.get("backpressure", 0.0)
             agg["throughput"] += rate
             agg["queueDepth"] += latest.get("queueDepth", 0)
             agg["blockedPuts"] += latest.get("blockedPuts", 0)
+            agg["emitBatch"] += latest.get("emitBatch", 0)
+            agg["tuplesDropped"] += latest.get("tuplesDropped", 0)
             if latest.get("stepTime"):
                 agg["stepTime"] += latest["stepTime"]
                 agg["stepTimeSamples"] += 1
-        for agg in regions.values():
+        for region, agg in regions.items():
             agg["backpressure"] /= max(agg["channels"], 1)
+            agg["emitBatch"] /= max(agg["channels"], 1)
             if agg["stepTimeSamples"]:
                 agg["stepTime"] /= agg["stepTimeSamples"]
             del agg["stepTimeSamples"]
-        return {"operators": operators, "regions": regions}
+        # regions whose every channel already retired still report drops
+        for region, n in retired.items():
+            if region and region not in regions:
+                regions[region] = self._region_zero(n)
+        return {"operators": operators, "regions": regions,
+                "tuplesDropped": dropped_total}
 
     # ------------------------------------------------------------ publishing
 

@@ -10,6 +10,13 @@ rest.  The causal chains from §4.4:
   3. pod failure/delete -> pod controller bumps launchCount (PE coordinator)
   4. generation change  -> job controller rewrites ConfigMaps; pod conductor
                            restarts only PEs whose metadata changed
+  5. width decrease     -> retiring PEs enter Draining (PE status) and their
+                           pods get a drain request (pod status); the
+                           kubelet forwards it to the runtime + marks the
+                           fabric endpoints drain-only; the pod conductor
+                           deletes pod+pe+cm+svc only on the runtime's
+                           ``drained`` report (or immediately when draining
+                           is disabled / no pod is running)
   *  pod conductor is the only actor that creates pods, and only in
      reaction to launchCount changes with all dependencies present.
 """
@@ -32,7 +39,7 @@ from ..core import (
 )
 from . import crds
 from .fabric import Fabric
-from .pipeline import JobPlan, plan_job
+from .pipeline import JobPlan, drain_handoff, plan_job
 
 
 # ----------------------------------------------------------- REST facade
@@ -64,9 +71,13 @@ class RestFacade:
                                      {"sourceDone": True}, requester="pe-rest")
 
     def report_metrics(self, job: str, pe_id: int, metrics: dict) -> None:
+        """Throttled load-sample ingestion; a sample marked ``final`` (a
+        draining PE's last drop accounting) bypasses the throttle — it must
+        not be swallowed."""
         key = (job, pe_id)
         now = time.monotonic()
-        if now - self._last_metric.get(key, 0.0) < 0.2:
+        if not metrics.get("final") and \
+                now - self._last_metric.get(key, 0.0) < 0.2:
             return
         self._last_metric[key] = now
         self.pod_coord.submit_status(
@@ -102,12 +113,28 @@ class RestFacade:
 # ------------------------------------------------------------ controllers
 
 
+def retire_pe(store, ns: str, job: str, pe_id: int) -> None:
+    """Remove a retired PE's resource set (pe + pod + cm + svc).
+
+    The PE resource goes FIRST so the pod deletion that follows does not
+    look voluntary: with the PE gone, the pod controller has no owner to
+    bump a launchCount on and nothing is recreated.
+    """
+    store.try_delete(crds.PE, crds.pe_name(job, pe_id), ns)
+    store.try_delete(crds.POD, crds.pod_name(job, pe_id), ns)
+    store.try_delete(crds.CONFIG_MAP, crds.cm_name(job, pe_id), ns)
+    store.try_delete(crds.SERVICE, crds.service_name(job, pe_id), ns)
+
+
 class JobController(Controller):
     """Runs the submission pipeline; owns Job + all derived resources."""
 
-    def __init__(self, store, namespace, coords, trace=None):
+    def __init__(self, store, namespace, coords, trace=None, fabric=None):
         super().__init__(store, crds.JOB, namespace, "job-controller", trace)
         self.coords = coords
+        # control-plane metadata only (publish counts for drain requests);
+        # the controller never touches tuple data
+        self.fabric = fabric
         self._ids = itertools.count(1)
         # local, ephemeral context (paper §6.1): lost on restart, recomputed
         self.ctx: dict = {}
@@ -149,17 +176,32 @@ class JobController(Controller):
     def _apply_plan(self, job: Resource, plan: JobPlan) -> None:
         ns = job.namespace
         store = self.store
-        # ConfigMaps FIRST (pod dependencies — the pod conductor gates on them)
+        # widths go only into PEs whose runtime *uses* them (trainer
+        # collective width, reducer fan-in): putting them everywhere
+        # would change every CM on a width edit and restart every pod,
+        # defeating §6.3's only-restart-what-changed property.
+        new_data: dict = {}
+        restarting: set = set()  # surviving PEs whose metadata will change
         for pe in plan.pes:
-            # widths go only into PEs whose runtime *uses* them (trainer
-            # collective width, reducer fan-in): putting them everywhere
-            # would change every CM on a width edit and restart every pod,
-            # defeating §6.3's only-restart-what-changed property.
             needs_widths = any(o.kind in ("trainer", "reducer")
                                for o in pe.operators)
             data = {**pe.graph_metadata,
                     "widths": plan.widths if needs_widths else {},
                     "consistentRegion": plan.consistent_region}
+            new_data[pe.pe_id] = data
+            cm = store.try_get(crds.CONFIG_MAP, crds.cm_name(job.name, pe.pe_id),
+                               ns)
+            if cm is not None and cm.spec["data"] != data:
+                restarting.add(pe.pe_id)
+        # Drain marks BEFORE the ConfigMap rewrites: the retiring PEs'
+        # publish-count baselines must be captured before the pod conductor
+        # starts restarting their surviving upstreams, or a drain could
+        # wait on a restart that already happened.
+        self._retire_beyond_plan(job, plan, restarting)
+        # ConfigMaps FIRST among the creations (pod dependencies — the pod
+        # conductor gates on them)
+        for pe in plan.pes:
+            data = new_data[pe.pe_id]
             name = crds.cm_name(job.name, pe.pe_id)
             existing = store.try_get(crds.CONFIG_MAP, name, ns)
             if existing is None:
@@ -234,14 +276,64 @@ class JobController(Controller):
                 def upd_pe(res, want=want):
                     res.spec.update(want)
                 store.update(crds.PE, name, upd_pe, namespace=ns)
-        # width decrease: retire PEs beyond the plan (delete pod+cm+svc+pe)
-        for pe_res in store.list(crds.PE, ns, crds.job_labels(job.name)):
-            pe_id = pe_res.spec["peId"]
-            if pe_id >= len(plan.pes):
-                store.try_delete(crds.POD, crds.pod_name(job.name, pe_id), ns)
-                store.try_delete(crds.PE, pe_res.name, ns)
-                store.try_delete(crds.CONFIG_MAP, crds.cm_name(job.name, pe_id), ns)
-                store.try_delete(crds.SERVICE, crds.service_name(job.name, pe_id), ns)
+
+    def _retire_beyond_plan(self, job: Resource, plan: JobPlan,
+                            restarting: set) -> None:
+        """Width decrease: retire PEs beyond the plan.  A retiring PE with a
+        live pod is not deleted — it enters the Draining state: the pod
+        gets a drain request (handoff targets computed from the NEW
+        generation's plan) and the pod conductor finalizes the deletion
+        only once the runtime reports ``drained``.  Without a live pod
+        (deterministic mode, or draining disabled) retirement is
+        immediate, the seed drop behaviour."""
+        ns = job.namespace
+        store = self.store
+        drain_cfg = crds.drain_config(job.spec)
+        retiring = {pe_res.spec["peId"]: pe_res
+                    for pe_res in store.list(crds.PE, ns,
+                                             crds.job_labels(job.name))
+                    if pe_res.spec["peId"] >= len(plan.pes)}
+        for pe_id, pe_res in retiring.items():
+            pod = store.try_get(crds.POD, crds.pod_name(job.name, pe_id), ns)
+            drainable = (drain_cfg["enabled"] and pod is not None
+                         and pod.status.get("phase") == "Running")
+            if not drainable:
+                if pod is not None and pod.status.get("draining"):
+                    continue  # a previous generation's drain is in flight
+                retire_pe(store, ns, job.name, pe_id)
+                continue
+            if pod.status.get("draining"):
+                continue  # already draining; the finalizer completes it
+            cm = store.try_get(crds.CONFIG_MAP, crds.cm_name(job.name, pe_id),
+                               ns)
+            meta = cm.spec.get("data", {}) if cm is not None else {}
+            handoff = drain_handoff(plan, meta)
+            # upstreams of this PE gate its "input dry" condition: retiring
+            # ones must unpublish (their final flush precedes unpublish),
+            # restarting survivors must publish their NEW incarnation
+            # (which happens strictly after the old one's final flush) —
+            # baseline publish counts are captured here, before any restart
+            upstream_pes = {src[0] for port in meta.get("inputs", ())
+                            for src in port.get("from", ())}
+            upstream = sorted(p for p in upstream_pes if p in retiring)
+            upstream_restarting = sorted(
+                [p, self.fabric.publish_count(job.name, p)]
+                for p in upstream_pes
+                if p in restarting) if self.fabric is not None else []
+            self.coords["pe"].submit_status(pe_res.name,
+                                            {"state": "Draining"},
+                                            requester=self.name)
+            self.coords["pod"].submit_status(
+                crds.pod_name(job.name, pe_id),
+                {"draining": {"requestedAt": time.time(),
+                              "timeout": drain_cfg["timeout"],
+                              "grace": drain_cfg["grace"],
+                              "upstream": upstream,
+                              "upstreamRestarting": upstream_restarting,
+                              **handoff}},
+                requester=self.name)
+            self._record("drain", pe_res.key,
+                         f"siblings={handoff['siblings']}")
 
     # -- teardown: bulk deletion by label (paper §8 GC mitigation)
     def on_deletion(self, job: Resource) -> None:
@@ -303,6 +395,14 @@ class PodController(Controller):
 
     def _bump(self, pod: Resource) -> None:
         pe_name = crds.pe_name(pod.spec["job"], pod.spec["peId"])
+        pe = self.store.try_get(crds.PE, pe_name, pod.namespace)
+        if pe is not None and pe.status.get("state") == "Draining":
+            # a draining PE that fails/vanishes is not restarted — it was
+            # leaving anyway; finish the retirement instead of resurrecting
+            retire_pe(self.store, pod.namespace, pod.spec["job"],
+                      pod.spec["peId"])
+            self._record("retire-failed-drain", pod.key)
+            return
         self.coords["pe"].submit(
             pe_name, lambda r: r.status.update(
                 launchCount=r.status.get("launchCount", 0) + 1),
@@ -364,6 +464,10 @@ class PodConductor(Conductor):
 
     def on_event(self, event: Event) -> None:
         res = event.resource
+        if res.kind == crds.POD and event.type == EventType.MODIFIED and \
+                res.status.get("drained") is not None:
+            self._finalize_drained(res)
+            return
         if res.kind == crds.PE and event.type != EventType.DELETED:
             self._reconcile_pe(res)
         elif res.kind == crds.SERVICE and event.type == EventType.ADDED:
@@ -374,8 +478,25 @@ class PodConductor(Conductor):
         elif res.kind == crds.CONFIG_MAP:
             self._reconcile_cm(event, res)
 
+    def _finalize_drained(self, pod: Resource) -> None:
+        """Drain complete: ONLY NOW is the retiring PE's pod deleted (the
+        §6.3 chain's new last link).  Gated on the PE being in the Draining
+        state so a stray ``drained`` status cannot delete a live PE."""
+        job, pe_id = pod.spec["job"], pod.spec["peId"]
+        pe = self.store.try_get(crds.PE, crds.pe_name(job, pe_id),
+                                self.namespace)
+        if pe is None or pe.status.get("state") != "Draining":
+            return
+        retire_pe(self.store, self.namespace, job, pe_id)
+        stats = pod.status.get("drained") or {}
+        self._record("retire", pod.key,
+                     f"dropped={stats.get('tuplesDropped', 0)};"
+                     f"handedOff={stats.get('handedOff', 0)}")
+
     def _reconcile_pe(self, pe: Resource) -> None:
         job, pe_id = pe.spec["job"], pe.spec["peId"]
+        if pe.status.get("state") == "Draining":
+            return  # a retiring PE never gets a fresh pod
         want = pe.status.get("launchCount", 0)
         if want < 1:
             return

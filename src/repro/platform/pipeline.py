@@ -347,6 +347,36 @@ class JobPlan:
     logical: LogicalModel
 
 
+def drain_handoff(plan: JobPlan, meta: dict) -> dict:
+    """Handoff targets for a retiring PE, computed from the *new* generation.
+
+    Pure function of (new plan, retiring PE's graph metadata) — the pr
+    coordinator's width edit re-ran the pipeline, and the surviving sibling
+    of a retired channel is fully determined by it: the same logical
+    operator at channel ``c % new_width``.  Returns ``{"siblings": [[pe,
+    port], ...]}`` — the surviving input endpoints a draining PE hands
+    residual tuples to when its ``drain_timeout`` expires before it can
+    process them itself.  Empty when the retiring operator is outside any
+    region (nothing to hand off to) or the region collapsed to width 0.
+    """
+    op0 = (meta.get("operators") or [{}])[0]
+    region = op0.get("region")
+    name = op0.get("name", "")
+    if not region or "[" not in name:
+        return {"siblings": []}
+    logical = name.split("[", 1)[0]
+    channel = op0.get("channel", 0)
+    width = plan.widths.get(region, 0)
+    if width <= 0:
+        return {"siblings": []}
+    sibling = f"{logical}[{channel % width}]"
+    for pe in plan.pes:
+        for port in pe.input_ports:
+            if port["operator"] == sibling:
+                return {"siblings": [[pe.pe_id, port["portId"]]]}
+    return {"siblings": []}
+
+
 def plan_job(job: str, spec: dict, widths: dict | None = None,
              generation: int = 1) -> JobPlan:
     """The full pipeline: spec -> PE plans + metadata.  Pure & deterministic."""

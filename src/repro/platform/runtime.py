@@ -21,6 +21,31 @@ routes (§6.4) are cached against the subscription broker's epoch instead
 of being re-read from the REST facade per send.  The pull loops mirror
 this: ``get_many`` moves a batch per lock crossing.
 
+Emission batch size is *adaptive*: ``AdaptiveBatcher`` resizes
+``emit_batch`` between per-operator ``emit_batch_min``/``emit_batch_max``
+bounds from the PE's own load signals (input-ring fill, full pulls,
+size-triggered flushes, blocked puts), and the linger deadline scales with
+it — per-tuple emission with ~zero linger when idle, full batches with the
+configured linger bound under backpressure.
+
+Scale-down draining (the generation-change teardown gap): when the job
+controller retires this PE on a width decrease, the kubelet forwards a
+drain request and the runtime walks this state machine instead of dropping
+its input rings::
+
+    RUNNING --begin_drain--> DRAINING: keep pulling + processing
+        DRAINING -> DRY    when every retiring upstream unpublished, all
+                           input rings are empty, and they stayed empty
+                           for the grace window  -> flush, exit clean
+        DRAINING -> EXPIRED at drain_timeout -> flush what the deadline
+                           allows, hand residual input tuples to the
+                           surviving sibling channel (new generation,
+                           computed by the job controller), count anything
+                           undeliverable in ``tuplesDropped``, exit
+
+Only after the runtime exits (and its final flush reached the fabric) does
+the pod conductor delete the pod — §6.3's chain gains a drain phase.
+
 Operator kinds:
 - source / pipe / sink: the paper's streaming operators (tuple dataflow);
 - trainer / reducer: a data-parallel JAX training shard + metric combine —
@@ -44,6 +69,105 @@ from ..data.stream import StreamSource
 from .fabric import EndpointCache, EpochAborted, Fabric, ShutDown, TupleQueue
 
 
+class AdaptiveBatcher:
+    """Metrics-driven ``emit_batch`` controller (replaces the static knob).
+
+    Evaluated every ``interval`` seconds from the PE's *own* load signals —
+    no control-plane round trip, per the resource-feedback-loop argument:
+    the runtime already observes exactly the signals the metrics plane
+    aggregates, one window earlier.
+
+    Decision state machine::
+
+        GROW   (batch *= 2, up to emit_batch_max) when the input ring is
+               filling (fill >= grow_at), pulls keep coming back full, a
+               flush blocked on a backpressured peer, or size-triggered
+               flushes dominate the window (sustained emission rate);
+        SHRINK (batch //= 2, down to emit_batch_min) when the ring is
+               near-empty (fill <= shrink_at) and the window saw no full
+               pull and no size flush — idle decays toward per-tuple
+               emission for latency;
+        HOLD   otherwise.
+
+    ``linger`` scales the flush deadline with the current batch so a
+    shrunken batch also stops waiting: ~zero linger at ``emit_batch_min``
+    (latency mode), the configured bound at ``emit_batch_max``.
+    """
+
+    def __init__(self, cfg: dict, clock=time.monotonic):
+        self.lo = max(1, int(cfg.get("emit_batch_min", 1)))
+        self.hi = max(self.lo, int(cfg.get("emit_batch_max", 512)))
+        self.enabled = bool(cfg.get("emit_adaptive", True))
+        self.interval = float(cfg.get("emit_adapt_interval", 0.25))
+        self.grow_at = float(cfg.get("emit_grow_at", 0.25))
+        self.shrink_at = float(cfg.get("emit_shrink_at", 0.02))
+        self.batch = min(self.hi, max(self.lo, int(cfg.get("emit_batch", 64))))
+        self.clock = clock
+        self._last = clock()
+        self._pulls = 0
+        self._full_pulls = 0
+        self._size_flushes = 0
+        self._blocked_flushes = 0
+        self.adaptations = 0
+
+    # ------------------------------------------------------ window signals
+
+    def observe_pull(self, n: int) -> None:
+        """One input pull returned ``n`` tuples (0 = empty/timeout)."""
+        self._pulls += 1
+        if n >= self.batch:
+            self._full_pulls += 1
+
+    def observe_flush(self, size_triggered: bool) -> None:
+        if size_triggered:
+            self._size_flushes += 1
+
+    def observe_blocked_flush(self) -> None:
+        self._blocked_flushes += 1
+
+    # ---------------------------------------------------------- decisions
+
+    def linger(self, bound: float) -> float:
+        """Effective linger deadline for the current batch size."""
+        if self.hi <= self.lo:
+            return bound
+        return bound * (self.batch - self.lo) / (self.hi - self.lo)
+
+    def maybe_adapt(self, fill: float, now: float | None = None) -> bool:
+        """Re-decide at most once per ``interval``; True iff batch changed."""
+        if not self.enabled:
+            return False
+        now = self.clock() if now is None else now
+        if now - self._last < self.interval:
+            return False
+        new = self.decide(self.batch, fill, self._pulls, self._full_pulls,
+                          self._size_flushes, self._blocked_flushes,
+                          self.lo, self.hi, self.grow_at, self.shrink_at)
+        self._last = now
+        self._pulls = self._full_pulls = 0
+        self._size_flushes = self._blocked_flushes = 0
+        if new != self.batch:
+            self.batch = new
+            self.adaptations += 1
+            return True
+        return False
+
+    @staticmethod
+    def decide(batch: int, fill: float, pulls: int, full_pulls: int,
+               size_flushes: int, blocked_flushes: int, lo: int, hi: int,
+               grow_at: float = 0.25, shrink_at: float = 0.02) -> int:
+        """Pure decision: one window's signals -> next batch size."""
+        pressured = (fill >= grow_at
+                     or blocked_flushes > 0
+                     or (pulls > 0 and full_pulls / pulls >= 0.5)
+                     or size_flushes >= 4)
+        if pressured:
+            return min(batch * 2, hi)
+        if fill <= shrink_at and full_pulls == 0 and size_flushes == 0:
+            return max(batch // 2, lo)
+        return batch
+
+
 class PERuntime(threading.Thread):
     def __init__(self, *, job: str, pe_id: int, metadata: dict, fabric: Fabric,
                  rest, launch_count: int, stop_event: threading.Event,
@@ -60,14 +184,30 @@ class PERuntime(threading.Thread):
         self.in_queues: dict = {}
         self.out_targets: dict = {}  # portId -> list[(peer pe, peer port)]
         self.crashed = False
-        self.counts = {"in": 0, "out": 0, "routed": 0}
+        self.counts = {"in": 0, "out": 0, "routed": 0, "dropped": 0}
         self._last_load_report = 0.0
-        # batched emission state (flush policy: size + linger + barriers)
+        # batched emission state (flush policy: size + linger + barriers);
+        # the batcher owns emit_batch between the per-operator min/max
         cfg0 = (self.meta.get("operators") or [{}])[0].get("config", {})
-        self.emit_batch = max(1, int(cfg0.get("emit_batch", 64)))
-        self.emit_linger = float(cfg0.get("emit_linger", 0.002))
+        self.batcher = AdaptiveBatcher(cfg0)
+        self.emit_batch = self.batcher.batch
+        self.emit_linger_max = float(cfg0.get("emit_linger", 0.002))
+        self.emit_linger = (self.batcher.linger(self.emit_linger_max)
+                            if self.batcher.enabled else self.emit_linger_max)
         self.endpoints = EndpointCache(fabric)
+        # tuples pulled but not yet processed: still backlog *at this PE* —
+        # without this, a large adaptive pull batch would make queue-fill
+        # (the autoscaler's signal) read near-zero on a saturated channel
+        self._pending_in = 0
+        # drain state (scale-down): set by begin_drain from the kubelet
+        self._drain: dict | None = None
+        self._drain_deadline: float = 0.0
+        self._drain_quiet_since: float | None = None
+        self.drain_stats: dict | None = None
         self._out_buf: dict = {}  # (peer pe, peer port) -> list[tuple]
+        # a flush that fails against a restarting peer re-buffers instead of
+        # dropping; the cap bounds memory while the peer is away
+        self._buffer_cap = max(8192, 4 * self.batcher.hi)
         self._route_buf: list = []
         self._buf_since: float | None = None  # oldest unflushed append
         self._route_cache: list = []
@@ -130,6 +270,7 @@ class PERuntime(threading.Thread):
             if self._buf_since is None:
                 self._buf_since = time.monotonic()
             if len(self._route_buf) >= self.emit_batch:
+                self.batcher.observe_flush(size_triggered=True)
                 self._flush_routes()
                 self._reset_linger_if_empty()
 
@@ -141,6 +282,7 @@ class PERuntime(threading.Thread):
         if self._buf_since is None:
             self._buf_since = time.monotonic()
         if len(buf) >= self.emit_batch:
+            self.batcher.observe_flush(size_triggered=True)
             self._flush_peer(peer, buf)
             # refresh here too: under sustained load size flushes pre-empt
             # the linger flush, and this must still notice new routes
@@ -159,24 +301,57 @@ class PERuntime(threading.Thread):
             return
         items = buf[:]
         del buf[:]
+        give_up = self.stop_event.is_set() or self._drain_expired()
+        # a stopping PE (voluntary restart) still gets a real chance to
+        # land its tail on a live-but-full peer — only an expired drain is
+        # in a hurry; an unbounded wait would stall pod teardown
+        put_timeout = 0.2 if self._drain_expired() else \
+            (1.0 if self.stop_event.is_set() else 2.0)
         try:
             q = self.endpoints.get(self.job, peer[0], peer[1], timeout=0.2)
-            q.put_many(items,
-                       timeout=0.2 if self.stop_event.is_set() else 2.0)
+            # timed from after resolution: a slow re-resolve (cache miss +
+            # DNS delay) must not read as downstream backpressure
+            t0 = time.monotonic()
+            q.put_many(items, timeout=put_timeout)
             # counted on successful handoff so the metrics plane's
             # throughput rollup (what the autoscaler scales on) tracks
             # delivery, not buffering toward a possibly-dead peer
             self.counts["out"] += len(items)
-        except ShutDown:
-            # peer retired mid-put: any admitted prefix sits in a closed
-            # queue no consumer will drain — that is not delivery
-            pass
+            if time.monotonic() - t0 > max(self.emit_linger_max, 0.002):
+                # the put had to wait for room: downstream backpressure —
+                # the batcher's grow signal for PEs with no input ring
+                self.batcher.observe_blocked_flush()
+        except ShutDown as e:
+            # peer retired mid-put: the admitted prefix sits in a closed
+            # ring — the fabric's residual carryover re-delivers it if the
+            # peer restarts, but it is not counted as delivered here
+            self._requeue(peer, buf, items[getattr(e, "admitted", 0):],
+                          give_up)
         except Exception as e:
-            # peer down/restarting: outside a consistent region streams are
-            # best-effort; within one, replay-from-checkpoint repairs this.
-            # A timed-out put to a live peer still admitted a prefix that
-            # is genuinely in flight — count it.
-            self.counts["out"] += getattr(e, "admitted", 0)
+            # peer down/restarting: a timed-out put to a live peer still
+            # admitted a prefix that is genuinely in flight — count it;
+            # the remainder re-buffers for the retry after the peer's
+            # fresh endpoint publishes (epoch movement re-resolves it)
+            admitted = getattr(e, "admitted", 0)
+            self.counts["out"] += admitted
+            self._requeue(peer, buf, items[admitted:], give_up)
+
+    def _requeue(self, peer: tuple, buf: list, leftover: list,
+                 give_up: bool) -> None:
+        """Re-buffer undelivered tuples for a later flush (bounded), unless
+        the runtime is stopping/expired — then they are accounted drops, not
+        silently lost.  Outside a consistent region this turns the restart
+        window of a surviving peer from tuple loss into added latency."""
+        if not leftover:
+            return
+        if give_up:
+            self.counts["dropped"] += len(leftover)
+            return
+        buf[:0] = leftover
+        excess = len(buf) - self._buffer_cap
+        if excess > 0:  # peer gone too long: shed oldest, keep bounded
+            del buf[:excess]
+            self.counts["dropped"] += excess
 
     def _flush_routes(self) -> None:
         if not self._route_buf:
@@ -192,11 +367,20 @@ class PERuntime(threading.Thread):
             except Exception as e:
                 self.counts["routed"] += getattr(e, "admitted", 0)
 
-    def _flush_all(self) -> None:
+    def _flush_all(self, retry_until: float | None = None) -> None:
         self._refresh_routes()  # flush moments also notice new routes
         for peer, buf in self._out_buf.items():
             self._flush_peer(peer, buf)
         self._flush_routes()
+        while retry_until is not None and \
+                any(self._out_buf.values()) and \
+                time.monotonic() < retry_until and \
+                not self.stop_event.is_set():
+            # draining: a peer mid-restart republishes within the window —
+            # keep retrying until the deadline rather than dropping
+            time.sleep(0.05)
+            for peer, buf in self._out_buf.items():
+                self._flush_peer(peer, buf)
         self._buf_since = None
 
     def _maybe_flush(self, now: float | None = None) -> None:
@@ -206,15 +390,142 @@ class PERuntime(threading.Thread):
             return
         now = time.monotonic() if now is None else now
         if now - self._buf_since >= self.emit_linger:
+            self.batcher.observe_flush(size_triggered=False)
             self._flush_all()
 
     def _pull_timeout(self, idle: float = 0.1) -> float:
         """Input-pull block time, capped by the linger deadline so buffered
-        output is flushed on time even when no input arrives."""
+        output is flushed on time even when no input arrives (and kept short
+        while draining so the dry/grace check stays responsive)."""
+        if self._drain is not None:
+            idle = min(idle, max(self._drain["grace"] / 4, 0.01))
         if self._buf_since is None:
             return idle
         remaining = self._buf_since + self.emit_linger - time.monotonic()
         return min(idle, max(remaining, 0.0))
+
+    # ----------------------------------------------- adaptive batch control
+
+    def _adapt(self, now: float | None = None) -> None:
+        """Re-evaluate the emit batch from the input-ring fill + the window
+        signals the batcher collected; cheap (throttled inside)."""
+        if not self.batcher.enabled:
+            return
+        depth, cap = self._pending_in, 0
+        for q in self.in_queues.values():
+            depth += len(q)
+            cap += q.capacity
+        if self.batcher.maybe_adapt(depth / cap if cap else 0.0, now):
+            self.emit_batch = self.batcher.batch
+            self.emit_linger = self.batcher.linger(self.emit_linger_max)
+
+    # ------------------------------------------------------ drain (§6.3+)
+
+    def begin_drain(self, req: dict) -> None:
+        """Enter the Draining state (called from the kubelet thread when the
+        job controller retires this PE on a width decrease).  ``req`` is the
+        pod-status drain request: {timeout, grace, siblings, upstream}."""
+        now = time.monotonic()
+        self._drain_deadline = now + float(req.get("timeout", 5.0))
+        self._drain_quiet_since = None
+        # assignment last: the run loop keys off _drain being non-None
+        self._drain = {
+            "siblings": [tuple(s) for s in req.get("siblings", ())],
+            "upstream": list(req.get("upstream", ())),
+            "upstreamRestarting": [tuple(e) for e in
+                                   req.get("upstreamRestarting", ())],
+            "grace": float(req.get("grace", 0.3)),
+            "started": now,
+            # drops recorded mid-drain (e.g. a give-up _requeue in the
+            # loop's trailing flush) must show in the drained report too
+            "dropped0": self.counts["dropped"],
+        }
+
+    @property
+    def draining(self) -> bool:
+        return self._drain is not None
+
+    def _drain_expired(self) -> bool:
+        return self._drain is not None and \
+            time.monotonic() >= self._drain_deadline
+
+    def _drain_done(self) -> bool:
+        """DRAINING -> DRY | EXPIRED.  Dry means: every retiring upstream
+        unpublished (their final flush precedes unpublish, so nothing more
+        can arrive from them), all input rings empty, and they stayed empty
+        for the grace window (covering surviving upstreams mid-restart)."""
+        d = self._drain
+        if d is None:
+            return False
+        now = time.monotonic()
+        if now >= self._drain_deadline:
+            return True
+        if any(len(q) for q in self.in_queues.values()):
+            self._drain_quiet_since = None
+            return False
+        for up_pe in d["upstream"]:
+            if self.fabric.pe_published(self.job, up_pe):
+                self._drain_quiet_since = None
+                return False
+        for up_pe, baseline in d["upstreamRestarting"]:
+            # a surviving upstream mid-restart: its NEW incarnation's
+            # publish (strictly after the old one's final flush) is the
+            # proof that nothing more from the old generation is coming
+            if self.fabric.publish_count(self.job, up_pe) <= baseline:
+                self._drain_quiet_since = None
+                return False
+        if self._drain_quiet_since is None:
+            self._drain_quiet_since = now
+            return False
+        return now - self._drain_quiet_since >= d["grace"]
+
+    def _finish_drain(self) -> None:
+        """Exit path of a draining PE: flush (retrying while the deadline
+        allows), hand residual input tuples to the surviving sibling, and
+        account anything undeliverable as ``tuplesDropped``."""
+        d = self._drain
+        self._flush_all(retry_until=self._drain_deadline)
+        dropped = handed = 0
+        residual: list = []
+        for q in self.in_queues.values():
+            residual.extend(q.take_all())
+        if residual:
+            handed = self._handoff(residual, d["siblings"])
+            dropped += len(residual) - handed
+        for buf in self._out_buf.values():  # undeliverable after retries
+            dropped += len(buf)
+            del buf[:]
+        dropped += len(self._route_buf)
+        self._route_buf = []
+        self.counts["dropped"] += dropped
+        # report every drop since the drain began (a give-up _requeue in
+        # the loop's trailing flush included): a clean report must mean
+        # genuinely zero loss, not zero *residual* loss
+        dropped = self.counts["dropped"] - d["dropped0"]
+        self.drain_stats = {
+            "tuplesDropped": dropped, "handedOff": handed,
+            "residualInput": len(residual),
+            "drainMs": (time.monotonic() - d["started"]) * 1000.0,
+            "clean": dropped == 0,
+        }
+        self._report_load(force=True)  # final sample carries the drops
+
+    def _handoff(self, items: list, siblings: list) -> int:
+        """Reroute residual input tuples to a surviving sibling channel's
+        input (the pr coordinator's new generation); returns how many were
+        delivered — the rest fall back to the seed drop behaviour."""
+        for pe_id, port_id in siblings:
+            try:
+                q = self.fabric.resolve(self.job, pe_id, port_id, timeout=1.0)
+                q.put_many(items, timeout=2.0)
+                return len(items)
+            except ShutDown:
+                continue
+            except Exception as e:  # noqa: BLE001 — try the next sibling
+                admitted = getattr(e, "admitted", 0)
+                if admitted:
+                    return admitted  # prefix landed; remainder timed out
+        return 0
 
     # ------------------------------------------------------------- metrics
 
@@ -224,7 +535,7 @@ class PERuntime(threading.Thread):
         autoscale conductor scales on)."""
         op = self.meta["operators"][0]
         stats = [q.stats() for q in self.in_queues.values()]
-        depth = sum(s["depth"] for s in stats)
+        depth = sum(s["depth"] for s in stats) + self._pending_in
         cap = sum(s["capacity"] for s in stats)
         blocked = sum(s["blockedPuts"] for s in stats)
         batches = sum(s["getBatches"] for s in stats)
@@ -235,6 +546,9 @@ class PERuntime(threading.Thread):
             "region": op.get("region"), "channel": op.get("channel", -1),
             "tuplesIn": self.counts["in"], "tuplesOut": self.counts["out"],
             "tuplesRouted": self.counts["routed"],
+            "tuplesDropped": self.counts["dropped"],
+            "emitBatch": self.emit_batch,
+            "draining": self._drain is not None,
             "queueDepth": depth, "queueCapacity": cap,
             "backpressure": depth / cap if cap else 0.0,
             "blockedPuts": blocked,
@@ -249,13 +563,15 @@ class PERuntime(threading.Thread):
         return sample
 
     def _report_load(self, extra: dict | None = None,
-                     interval: float = 0.2) -> None:
+                     interval: float = 0.2, force: bool = False) -> None:
         now = time.monotonic()
-        if now - self._last_load_report < interval:
+        if not force and now - self._last_load_report < interval:
             return
         self._last_load_report = now
-        self.rest.report_metrics(self.job, self.pe_id,
-                                 self.load_metrics(extra))
+        sample = self.load_metrics(extra)
+        if force:
+            sample["final"] = True  # facades bypass their throttle on this
+        self.rest.report_metrics(self.job, self.pe_id, sample)
 
     # ---------------------------------------------------------------- body
 
@@ -281,7 +597,27 @@ class PERuntime(threading.Thread):
                 traceback.print_exc()
         finally:
             try:
-                self._flush_all()  # drain buffered output before retiring
+                if self._drain is not None and not self.crashed and \
+                        not self.stop_event.is_set():
+                    # Draining exit: flush + handoff + drop accounting;
+                    # only after this does unpublish close the rings
+                    self._finish_drain()
+                else:
+                    # voluntary completion (finite source) gets a bounded
+                    # window to land its tail on a slow peer; a stop or a
+                    # crash flushes once and goes
+                    voluntary = not self.crashed and \
+                        not self.stop_event.is_set()
+                    self._flush_all(retry_until=time.monotonic() + 5.0
+                                    if voluntary else None)
+                    leftover = sum(len(b) for b in self._out_buf.values())
+                    leftover += len(self._route_buf)
+                    if leftover:  # undelivered output is an accounted drop
+                        self.counts["dropped"] += leftover
+                        for b in self._out_buf.values():
+                            del b[:]
+                        self._route_buf = []
+                        self._report_load(force=True)
             except Exception:  # noqa: BLE001
                 pass
             self.fabric.unpublish_pe(self.job, self.pe_id)
@@ -315,12 +651,15 @@ class PERuntime(threading.Thread):
                 if meta:
                     offset = meta["offset"]
         while not self.stop_event.is_set():
+            if self._drain is not None:
+                break  # a retiring source just stops emitting and flushes
             if limit and offset >= limit:
                 break
             item = {"seq": offset, "data": offset % 97}
             self._emit(0, item, partition=offset)
             offset += 1
             self._maybe_flush()
+            self._adapt()
             self._report_load()
             if interval and offset % interval == 0:
                 # checkpoint barrier: everything the checkpoint covers must
@@ -342,35 +681,44 @@ class PERuntime(threading.Thread):
         op = self.meta["operators"][0]
         is_sink = op["kind"] == "sink"
         work_sleep = op.get("config", {}).get("work_sleep", 0)
+        report_every = max(1, int(op.get("config", {}).get("report_every", 50)))
         seen = 0
         maxseq = -1
         while not self.stop_event.is_set():
+            if self._drain_done():
+                break  # Draining -> dry (or expired): exit via _finish_drain
             q = self.in_queues.get(0)
             if q is None:
                 time.sleep(0.01)
                 continue
             items = q.get_many(self.emit_batch, timeout=self._pull_timeout())
+            self.batcher.observe_pull(len(items))
+            self._adapt()
             self._report_load()
             if not items:
                 self._maybe_flush()
                 continue
             self.counts["in"] += len(items)
+            self._pending_in = len(items)
             for item in items:
                 if work_sleep:  # synthetic per-tuple cost (load/bench knob)
                     time.sleep(work_sleep)
                 if is_sink:
                     seen += 1
                     maxseq = max(maxseq, item.get("seq", -1))
-                    if seen % 50 == 0 or item.get("flush"):
+                    if seen % report_every == 0 or item.get("flush"):
                         self.rest.report_sink(self.job, self.pe_id, seen, maxseq)
                 else:
                     item = dict(item)
                     item["hops"] = item.get("hops", 0) + 1
                     self._emit(0, item, partition=item.get("seq"))
                     if work_sleep:
-                        # slow per-tuple work: honour the linger bound
-                        # inside the batch too, not only between batches
+                        # slow per-tuple work: honour the linger bound and
+                        # keep heartbeats fresh inside the batch too, not
+                        # only between batches
                         self._maybe_flush()
+                        self._report_load()
+                self._pending_in -= 1
             self._maybe_flush()
         self._flush_all()
         if is_sink:
@@ -381,16 +729,21 @@ class PERuntime(threading.Thread):
         width = self.meta.get("widths", {}).get("dp", 1)
         pending: dict = {}
         while not self.stop_event.is_set():
+            if self._drain_done():
+                break
             q = self.in_queues.get(0)
             if q is None:
                 time.sleep(0.01)
                 continue
             items = q.get_many(self.emit_batch, timeout=self._pull_timeout())
+            self.batcher.observe_pull(len(items))
+            self._adapt()
             if not items:
                 self._report_load()
                 self._maybe_flush()
                 continue
             self.counts["in"] += len(items)
+            self._pending_in = len(items)
             for item in items:
                 step = item["step"]
                 pending.setdefault(step, []).append(item["loss"])
@@ -400,6 +753,7 @@ class PERuntime(threading.Thread):
                     self.rest.report_metrics(
                         self.job, self.pe_id,
                         self.load_metrics({"step": step, "loss": mean}))
+                self._pending_in -= 1
             self._maybe_flush()
         self._flush_all()
 
@@ -457,6 +811,10 @@ class PERuntime(threading.Thread):
         epoch = group.epoch
 
         while not self.stop_event.is_set() and step < max_steps:
+            if self._drain is not None:
+                # a retiring trainer stops at a step boundary; the region's
+                # consistent-region replay covers anything uncommitted
+                break
             step_t0 = time.monotonic()
             # deterministic shard: global batch at offset=step, this channel's
             # slice — recomputable from (seed, step, channel): no data state

@@ -275,8 +275,12 @@ def test_autoscale_e2e_scales_up_under_load():
     try:
         p.submit("app", {"app": {
             "type": "streams", "width": 1, "pipeline_depth": 2,
-            "source": {"rate_sleep": 0.0005},
-            "channel": {"work_sleep": 0.004},  # consumers slower than source
+            # unthrottled source: consumers are slower than the source by
+            # construction, regardless of how coarse time.sleep is on the
+            # host (a throttled source can degrade to channel speed and
+            # leave backpressure hovering under the threshold)
+            "source": {"rate_sleep": 0.0},
+            "channel": {"work_sleep": 0.004},
         }})
         assert p.wait_full_health("app", 60)
         before = {x.name: x.spec.get("launchCount") for x in p.pods("app")}

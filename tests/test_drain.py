@@ -1,0 +1,479 @@
+"""Graceful scale-down draining + adaptive emit batching (PR 3).
+
+Four layers:
+- pure units: ``AdaptiveBatcher.decide`` / convergence / linger scaling,
+  ``crds.drain_config`` normalization, ``pipeline.drain_handoff`` sibling
+  computation from the new generation's plan;
+- fabric: drain-only endpoints (invisible to fresh resolution, reachable
+  through an established sender's ``EndpointCache``), residual carryover
+  across a republish, publish-count restart detection;
+- runtime: the drain state machine driven directly — dry-exit gating on
+  retiring/restarting upstreams, timeout handoff landing on the surviving
+  sibling, drop accounting when no sibling is reachable;
+- threaded e2e: a loaded non-consistent region scaled down mid-stream loses
+  ZERO tuples with draining enabled, retiring pods pass through the
+  Draining state, and the metrics plane keeps the ``tuplesDropped`` ledger
+  after the evidence pods are gone.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import Coordinator, Event, EventType, ResourceStore, wait_for
+from repro.platform import Platform, crds
+from repro.platform.autoscale import AutoscaleConductor
+from repro.platform.fabric import Fabric, TupleQueue
+from repro.platform.metrics import MetricsPlane
+from repro.platform.pipeline import drain_handoff, plan_job
+from repro.platform.runtime import AdaptiveBatcher, PERuntime
+
+STREAMS = {"app": {"type": "streams", "width": 2, "pipeline_depth": 2,
+                   "source": {"rate_sleep": 0.001}}}
+
+
+# --------------------------------------------------------- AdaptiveBatcher
+
+
+def test_decide_grows_on_each_pressure_signal():
+    for signal in ({"fill": 0.5}, {"blocked_flushes": 1},
+                   {"pulls": 4, "full_pulls": 2}, {"size_flushes": 4}):
+        kw = {"fill": 0.1, "pulls": 0, "full_pulls": 0, "size_flushes": 0,
+              "blocked_flushes": 0, **signal}
+        assert AdaptiveBatcher.decide(batch=8, lo=1, hi=64, **kw) == 16
+
+
+def test_decide_shrinks_only_when_idle_and_clamps():
+    idle = {"fill": 0.0, "pulls": 10, "full_pulls": 0, "size_flushes": 0,
+            "blocked_flushes": 0}
+    assert AdaptiveBatcher.decide(batch=8, lo=2, hi=64, **idle) == 4
+    assert AdaptiveBatcher.decide(batch=2, lo=2, hi=64, **idle) == 2  # lo
+    assert AdaptiveBatcher.decide(batch=64, lo=1, hi=64, fill=0.9, pulls=0,
+                                  full_pulls=0, size_flushes=0,
+                                  blocked_flushes=0) == 64  # hi clamp
+    # in-band load holds: neither pressured nor idle
+    assert AdaptiveBatcher.decide(batch=8, lo=1, hi=64, fill=0.1, pulls=10,
+                                  full_pulls=1, size_flushes=1,
+                                  blocked_flushes=0) == 8
+
+
+def test_batcher_converges_up_under_backpressure_down_when_idle():
+    now = [0.0]
+    b = AdaptiveBatcher({"emit_batch": 8, "emit_batch_min": 1,
+                         "emit_batch_max": 256}, clock=lambda: now[0])
+    for _ in range(12):  # sustained backpressure -> grows to the max bound
+        now[0] += b.interval
+        b.observe_pull(b.batch)
+        b.observe_pull(b.batch)
+        b.maybe_adapt(fill=0.8)
+    assert b.batch == 256
+    for _ in range(12):  # idle -> decays to per-tuple emission
+        now[0] += b.interval
+        b.maybe_adapt(fill=0.0)
+    assert b.batch == 1
+    assert b.adaptations >= 2
+
+
+def test_batcher_interval_throttles_and_disabled_is_static():
+    now = [0.0]
+    b = AdaptiveBatcher({"emit_batch": 8}, clock=lambda: now[0])
+    assert not b.maybe_adapt(fill=0.9)  # same instant: throttled
+    off = AdaptiveBatcher({"emit_batch": 8, "emit_adaptive": False},
+                          clock=lambda: now[0])
+    now[0] += 10.0
+    assert not off.maybe_adapt(fill=0.9)
+    assert off.batch == 8
+
+
+def test_linger_scales_with_batch():
+    b = AdaptiveBatcher({"emit_batch": 1, "emit_batch_min": 1,
+                         "emit_batch_max": 512})
+    assert b.linger(0.002) == 0.0  # per-tuple emission: no waiting
+    b.batch = 512
+    assert b.linger(0.002) == pytest.approx(0.002)
+    b.batch = 256
+    assert 0.0 < b.linger(0.002) < 0.002
+
+
+# ------------------------------------------------------------ drain config
+
+
+def test_drain_config_defaults_and_shorthands():
+    assert crds.drain_config({}) == {"enabled": True, "timeout": 5.0,
+                                     "grace": 0.3}
+    assert crds.drain_config({"drain": False})["enabled"] is False
+    assert crds.drain_config({"drain": True})["enabled"] is True
+    cfg = crds.drain_config({"drain": {"timeout": 1.5, "grace": 0.1}})
+    assert cfg == {"enabled": True, "timeout": 1.5, "grace": 0.1}
+
+
+def test_drain_handoff_maps_to_surviving_sibling():
+    spec = {"app": {"type": "streams", "width": 3, "pipeline_depth": 2}}
+    old = plan_job("j", spec, {"par": 3})
+    new = plan_job("j", spec, {"par": 2})
+    retiring = next(pe for pe in old.pes
+                    if pe.operators[0].name == "ch0[2]")
+    handoff = drain_handoff(new, retiring.graph_metadata)
+    sibling = next(pe for pe in new.pes
+                   if pe.operators[0].name == "ch0[0]")  # 2 % 2 == 0
+    assert handoff["siblings"] == [[sibling.pe_id, 0]]
+
+
+def test_drain_handoff_outside_region_is_empty():
+    plan = plan_job("j", STREAMS, {"par": 1})
+    post = next(pe for pe in plan.pes if pe.operators[0].name == "post0")
+    assert drain_handoff(plan, post.graph_metadata) == {"siblings": []}
+
+
+# ----------------------------------------------------------------- fabric
+
+
+def test_set_draining_hides_endpoint_from_fresh_resolution():
+    fab = Fabric()
+    q = TupleQueue()
+    fab.publish("j", 1, 0, q)
+    epoch = fab.epoch
+    assert fab.set_draining("j", 1) == 1
+    assert fab.epoch == epoch + 1  # sender caches invalidate at drain start
+    with pytest.raises(TimeoutError):  # no NEW producer resolves to it
+        fab.resolve("j", 1, 0, timeout=0.05)
+    # an established sender's cache path still reaches the draining ring
+    assert fab.resolve("j", 1, 0, timeout=0.05, include_draining=True) is q
+    from repro.platform.fabric import EndpointCache
+    assert EndpointCache(fab).get("j", 1, 0) is q
+
+
+def test_residual_carryover_rides_ahead_of_new_traffic():
+    fab = Fabric()
+    q1 = TupleQueue()
+    fab.publish("j", 1, 0, q1)
+    q1.put_many([1, 2, 3])
+    fab.unpublish_pe("j", 1)  # leftovers stashed, ring closed
+    q2 = TupleQueue()
+    q2.put(99)  # traffic racing the restart
+    fab.publish("j", 1, 0, q2)  # restarted PE reclaims its predecessor's input
+    assert q2.get_many(100) == [1, 2, 3, 99]
+    fab.unpublish_pe("j", 1)  # nothing left: no stash
+    fab.publish("j", 1, 0, TupleQueue())
+    assert len(fab.resolve("j", 1, 0)) == 0
+
+
+def test_residual_carryover_expires_after_ttl():
+    fab = Fabric(residual_ttl=0.0)
+    q1 = TupleQueue()
+    fab.publish("j", 1, 0, q1)
+    q1.put(1)
+    fab.unpublish_pe("j", 1)
+    time.sleep(0.01)
+    q2 = TupleQueue()
+    fab.publish("j", 1, 0, q2)
+    assert len(q2) == 0
+
+
+def test_publish_count_tracks_restarts():
+    fab = Fabric()
+    assert fab.publish_count("j", 1) == 0
+    fab.publish("j", 1, 0, TupleQueue())
+    base = fab.publish_count("j", 1)
+    fab.unpublish_pe("j", 1)
+    assert fab.publish_count("j", 1) == base  # unpublish is not a restart
+    fab.publish("j", 1, 0, TupleQueue())
+    assert fab.publish_count("j", 1) == base + 1
+
+
+# ------------------------------------------------- runtime drain machinery
+
+
+class FakeRest:
+    def __init__(self):
+        self.ckpt = None
+        self.metrics = []
+        self.sinks = []
+
+    def notify_connected(self, job, pe_id):
+        pass
+
+    def notify_source_done(self, job, pe_id):
+        pass
+
+    def report_metrics(self, job, pe_id, metrics):
+        self.metrics.append(metrics)
+
+    def report_sink(self, job, pe_id, seen, maxseq):
+        self.sinks.append((seen, maxseq))
+
+    def get_cr_state(self, job, region):
+        return None
+
+    def get_routes(self, job, op_name):
+        return []
+
+    def routes_epoch(self):
+        return 0
+
+
+def _pipe_meta(to=((2, 0),), config=None, region="par", channel=1):
+    name = f"ch0[{channel}]" if region else "op"
+    return {
+        "peId": 1,
+        "operators": [{"id": 0, "name": name, "kind": "pipe",
+                       "channel": channel if region else -1, "region": region,
+                       "config": dict(config or {}), "inCR": False}],
+        "inputs": [{"portId": 0, "operator": name, "from": [[0, 0]]}],
+        "outputs": [{"portId": 0, "operator": name,
+                     "to": [list(t) for t in to]}],
+    }
+
+
+def _make_runtime(fabric, rest, meta):
+    return PERuntime(job="j", pe_id=1, metadata=meta, fabric=fabric,
+                     rest=rest, launch_count=1,
+                     stop_event=threading.Event())
+
+
+def test_drain_dry_exit_processes_backlog_then_unpublishes():
+    """A draining pipe pulls its ring dry, delivers downstream, exits clean
+    (no drops), and only then unpublishes its endpoints."""
+    fab = Fabric()
+    downstream = TupleQueue(maxsize=0)
+    fab.publish("j", 2, 0, downstream)
+    rt = _make_runtime(fab, FakeRest(), _pipe_meta())
+    rt.start()
+    assert wait_for(lambda: fab.pe_published("j", 1), 5)
+    inq = fab.resolve("j", 1, 0, include_draining=True)
+    inq.put_many([{"seq": i} for i in range(300)])
+    rt.begin_drain({"timeout": 10.0, "grace": 0.1})
+    rt.join(timeout=10)
+    assert not rt.is_alive() and not rt.crashed
+    assert rt.drain_stats is not None and rt.drain_stats["clean"]
+    assert rt.drain_stats["tuplesDropped"] == 0
+    assert downstream.get_many(1000, timeout=0.5) != []
+    assert downstream.dequeued + len(downstream) == 300 or \
+        rt.counts["out"] == 300
+    assert not fab.pe_published("j", 1)  # unpublished after the final flush
+
+
+def test_drain_waits_for_retiring_upstream_to_unpublish():
+    fab = Fabric()
+    fab.publish("j", 2, 0, TupleQueue())
+    fab.publish("j", 7, 0, TupleQueue())  # retiring upstream, still alive
+    rt = _make_runtime(fab, FakeRest(), _pipe_meta())
+    rt._connect()
+    rt.begin_drain({"timeout": 10.0, "grace": 0.0, "upstream": [7]})
+    assert not rt._drain_done()
+    fab.unpublish_pe("j", 7)
+    assert not rt._drain_done()  # first quiet observation arms the window
+    assert rt._drain_done()      # grace 0 -> dry on the next check
+    rt.stop_event.set()
+
+
+def test_drain_waits_for_restarting_upstream_to_republish():
+    fab = Fabric()
+    fab.publish("j", 2, 0, TupleQueue())
+    fab.publish("j", 8, 0, TupleQueue())  # surviving upstream, old incarnation
+    base = fab.publish_count("j", 8)
+    rt = _make_runtime(fab, FakeRest(), _pipe_meta())
+    rt._connect()
+    rt.begin_drain({"timeout": 10.0, "grace": 0.0,
+                    "upstreamRestarting": [[8, base]]})
+    assert not rt._drain_done()
+    fab.unpublish_pe("j", 8)
+    assert not rt._drain_done()  # old incarnation gone is not enough
+    fab.publish("j", 8, 0, TupleQueue())  # new incarnation published
+    assert not rt._drain_done()  # arms the quiet window
+    assert rt._drain_done()
+    rt.stop_event.set()
+
+
+def test_drain_timeout_hands_residual_to_sibling():
+    fab = Fabric()
+    fab.publish("j", 2, 0, TupleQueue())
+    sibling = TupleQueue(maxsize=0)
+    fab.publish("j", 9, 0, sibling)
+    rt = _make_runtime(fab, FakeRest(), _pipe_meta())
+    rt._connect()
+    items = [{"seq": i} for i in range(40)]
+    rt.in_queues[0].put_many(items)
+    rt.begin_drain({"timeout": 0.0, "grace": 0.0, "siblings": [[9, 0]]})
+    assert rt._drain_done()  # deadline already passed
+    rt._finish_drain()
+    assert sibling.get_many(100) == items  # landed on the surviving sibling
+    assert rt.drain_stats["handedOff"] == 40
+    assert rt.drain_stats["tuplesDropped"] == 0 and rt.drain_stats["clean"]
+
+
+def test_drain_timeout_without_sibling_counts_drops():
+    fab = Fabric()
+    fab.publish("j", 2, 0, TupleQueue())
+    rt = _make_runtime(fab, FakeRest(), _pipe_meta())
+    rt._connect()
+    rt.in_queues[0].put_many([{"seq": i} for i in range(25)])
+    rt.begin_drain({"timeout": 0.0, "grace": 0.0, "siblings": []})
+    rt._finish_drain()
+    assert rt.drain_stats["tuplesDropped"] == 25
+    assert not rt.drain_stats["clean"]
+    assert rt.counts["dropped"] == 25
+    assert rt.load_metrics()["tuplesDropped"] == 25
+    # the terminal sample bypassed the throttle and carries the drops
+    assert rt.rest.metrics and rt.rest.metrics[-1]["final"]
+    assert rt.rest.metrics[-1]["tuplesDropped"] == 25
+
+
+# ----------------------------------------------- metrics plane drop ledger
+
+
+def test_metrics_plane_keeps_drop_ledger_after_pod_retires():
+    store = ResourceStore()
+    store.create(crds.make_job("j", {}))
+    coords = {"metrics": Coordinator(store, crds.METRICS)}
+    plane = MetricsPlane(store, "default", coords)
+    sample = {"operator": "ch0[1]", "kind": "pipe", "region": "par",
+              "channel": 1, "tuplesIn": 100, "tuplesDropped": 7,
+              "queueDepth": 0, "queueCapacity": 1024, "backpressure": 0.0,
+              "blockedPuts": 0, "emitBatch": 32}
+    plane.ingest("j", 5, sample)
+    assert plane.aggregate("j")["tuplesDropped"] == 7
+    pod = crds.make_pod("j", 5, {"pod_spec": {}}, 1, 1)
+    plane.on_event(Event(seq=0, type=EventType.DELETED, resource=pod))
+    agg = plane.aggregate("j")  # evidence pod gone, ledger remains
+    assert agg["tuplesDropped"] == 7
+    assert agg["regions"]["par"]["tuplesDropped"] == 7
+
+
+# ------------------------------------------------------ autoscale drain gate
+
+
+def test_autoscaler_holds_while_drain_in_flight():
+    store = ResourceStore()
+    coords = {"pr": Coordinator(store, crds.PARALLEL_REGION),
+              "policy": Coordinator(store, crds.SCALING_POLICY)}
+    cond = AutoscaleConductor(store, "default", coords)
+    store.create(crds.make_parallel_region("j", "par", 1))
+    store.create(crds.make_scaling_policy("j", "par", max_width=8,
+                                          cooldown=0.0))
+    metrics = crds.make_metrics("j")
+    metrics.status["regions"] = {"par": {"backpressure": 0.9, "channels": 1}}
+    store.create(metrics)
+    pod = crds.make_pod("j", 9, {"pod_spec": {}}, 1, 1)
+    pod.status["draining"] = {"requestedAt": 0.0}
+    store.create(pod)
+    assert cond.evaluate("j") == []  # gate: drain in flight
+    store.update(crds.POD, pod.name,
+                 lambda r: r.status.update(drained={"tuplesDropped": 0}))
+    assert cond.evaluate("j") == [("par", 1, 2)]  # drain done: free to act
+
+
+# ------------------------------------------------------------ threaded e2e
+
+
+def _sink_seen(p, job):
+    for pod in p.pods(job):
+        if pod.status.get("sink"):
+            return pod.status["sink"]["seen"]
+    return 0
+
+
+@pytest.mark.slow
+def test_scaledown_drain_loses_zero_tuples_under_load():
+    """Acceptance: a loaded non-consistent region scaled 2 -> 1 mid-stream
+    delivers every emitted tuple to the sink; retiring PEs pass through
+    Draining and their retirement is finalized by the pod conductor."""
+    n_tuples = 800
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("app", {
+            "app": {"type": "streams", "width": 2, "pipeline_depth": 2,
+                    "source": {"tuples": n_tuples, "rate_sleep": 0.0005},
+                    "channel": {"work_sleep": 0.001}},
+            "drain": {"timeout": 15.0, "grace": 0.3},
+        })
+        assert p.wait_full_health("app", 60)
+        assert wait_for(lambda: _sink_seen(p, "app") > 50, 30)
+        n0 = len(p.pods("app"))
+        p.set_width("app", "par", 1)
+        assert wait_for(lambda: len(p.pods("app")) == n0 - 2, 60)
+        assert wait_for(lambda: _sink_seen(p, "app") >= n_tuples, 90), \
+            f"tuples lost on scale-down: {_sink_seen(p, 'app')}/{n_tuples}"
+        assert _sink_seen(p, "app") == n_tuples  # zero loss, zero dupes
+        chain = p.trace.chain()
+        assert any(e.startswith("job-controller:drain:") for e in chain)
+        assert any(e.startswith("pod-conductor:retire:") for e in chain)
+        assert p.job_metrics("app").get("tuplesDropped", 0) == 0
+        # no pod of the retired channels remains, and no PE is stuck Draining
+        assert not [x for x in p.store.list(crds.PE, "default",
+                                            crds.job_labels("app"))
+                    if x.status.get("state") == "Draining"]
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.slow
+def test_scaledown_drain_disabled_restores_drop_behaviour():
+    """``drain: false`` retires immediately (the seed behaviour): pods of
+    removed channels go away without a Draining phase."""
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("app", {**STREAMS, "drain": False})
+        assert p.wait_full_health("app", 60)
+        n0 = len(p.pods("app"))
+        p.set_width("app", "par", 1)
+        assert wait_for(lambda: len(p.pods("app")) == n0 - 2, 60)
+        assert not any(e.startswith("job-controller:drain:")
+                       for e in p.trace.chain())
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.slow
+def test_adaptive_batching_grows_under_load_and_shrinks_idle():
+    """The region channels' emit batch grows under sustained backpressure
+    (visible in the metrics rollup) and decays once the source finishes."""
+    n_tuples = 1500  # small enough that the tail drains well inside the
+    # waits even when time.sleep granularity inflates work_sleep tenfold
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("app", {"app": {
+            "type": "streams", "width": 1, "pipeline_depth": 1,
+            "source": {"tuples": n_tuples, "rate_sleep": 0.0},
+            "channel": {"work_sleep": 0.0005, "emit_batch": 8,
+                        "emit_batch_max": 256}}})
+        assert p.wait_full_health("app", 60)
+
+        def region_batch():
+            return p.job_metrics("app").get("regions", {}).get(
+                "par", {}).get("emitBatch", 0)
+
+        assert wait_for(lambda: region_batch() > 8, 60), \
+            f"emit batch never grew: {p.job_metrics('app')}"
+        # source exhausts; idle decay brings the batch back toward the min
+        assert wait_for(lambda: _sink_seen(p, "app") >= n_tuples, 120)
+        assert wait_for(lambda: 0 < region_batch() <= 8, 60), \
+            f"emit batch never shrank: {region_batch()}"
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.slow
+def test_legacy_change_width_drain_parity():
+    """The monolith can drive the same drain machinery synchronously:
+    a legacy width decrease with drain=True delivers every tuple."""
+    from repro.platform.legacy import LegacyPlatform
+
+    n_tuples = 300
+    lp = LegacyPlatform(num_nodes=4, zk_op_cost=0.0)
+    try:
+        lp.submit("l1", {"app": {"type": "streams", "width": 2,
+                                 "pipeline_depth": 1,
+                                 "source": {"tuples": n_tuples,
+                                            "rate_sleep": 0.001}}})
+        assert wait_for(lambda: lp.full_health("l1"), 30)
+        assert wait_for(lambda: any(s["seen"] > 30 for s in lp.sinks.values()),
+                        30)
+        lp.change_width("l1", "par", 1, drain=True)
+        assert wait_for(lambda: any(s["seen"] >= n_tuples
+                                    for s in lp.sinks.values()), 60), \
+            f"legacy drain lost tuples: {lp.sinks}"
+    finally:
+        lp.cancel("l1")
+        lp.shutdown()
