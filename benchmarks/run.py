@@ -15,9 +15,13 @@
   scale_down graceful scale-down: tuples lost + drain latency with the drain
              phase on vs the seed drop-on-retire behaviour
              -> results/BENCH_scaledown.json
+  teardown   job teardown: foreground cascade (owner-ref finalizers) vs
+             gc_collect fixed point vs bulk label deletion (paper §8,
+             Fig. 7c) -> results/BENCH_teardown.json
 
 ``--smoke`` runs only the cheap benchmarks (CI regression guard); it fails
-if the transport or scale-down bench does not produce its JSON artifact.
+if the transport, scale-down or teardown bench does not produce its JSON
+artifact.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Scales are reduced for the
 single-core CPU container; the *shape* of each comparison (scaling with
@@ -68,7 +72,7 @@ def bench_fig7_job_lifecycle(widths=(1, 2, 3)) -> None:
             emit(f"fig7.cloudnative.submit.w{width}", t_sub)
             emit(f"fig7.cloudnative.fullhealth.w{width}", t_health)
             emit(f"fig7.cloudnative.terminate.w{width}", t_term,
-                 "bulk label deletion")
+                 "foreground cascade")
         finally:
             p.shutdown()
         # legacy (synchronous submit includes schedule+start)
@@ -110,6 +114,85 @@ def bench_fig7c_gc_vs_bulk(n_resources=120) -> None:
             s.delete_collection(label_selector={"j": "1"})
         emit(f"fig7c.delete.{mode}", time.monotonic() - t0,
              f"n={2 * n_resources + 1}")
+
+
+# -------------------------------------------------------------- teardown
+
+
+def bench_teardown(out_path: str | None = None,
+                   sizes=(30, 120, 480)) -> dict:
+    """Job teardown (paper §8, Fig. 7c): foreground cascade deletion (the
+    lifecycle API's happy path — owner-ref finalizers, no fixed point) vs
+    the ``gc_collect`` fixed-point walk vs bulk ``delete_collection`` by
+    label, on identical Job -> Pod -> ConfigMap trees.  Writes
+    ``results/BENCH_teardown.json`` (``--smoke`` fails without it)."""
+    from repro.core import OwnerRef, Resource, ResourceStore
+
+    def build_tree(n):
+        # a job's real shape: Job -> n Pods -> n ConfigMaps (depth 3)
+        s = ResourceStore()
+        s.create(Resource(kind="Job", name="j", labels={"j": "1"}))
+        for i in range(n):
+            s.create(Resource(kind="Pod", name=f"p{i}", labels={"j": "1"},
+                              owner_refs=(OwnerRef("Job", "j"),)))
+            s.create(Resource(kind="ConfigMap", name=f"c{i}",
+                              labels={"j": "1"},
+                              owner_refs=(OwnerRef("Pod", f"p{i}"),)))
+        return s
+
+    def build_chain(n):
+        # ownership DEPTH n: each fixed-point gc round frees exactly one
+        # link then rescans — the §8 pathology the cascade does not have
+        s = ResourceStore()
+        s.create(Resource(kind="Job", name="j", labels={"j": "1"}))
+        prev = ("Job", "j")
+        for i in range(n):
+            s.create(Resource(kind="Link", name=f"l{i}", labels={"j": "1"},
+                              owner_refs=(OwnerRef(*prev),)))
+            prev = ("Link", f"l{i}")
+        return s
+
+    results = []
+    for shape, build in (("tree", build_tree), ("chain", build_chain)):
+        for n in sizes:
+            n_objects = (2 * n + 1) if shape == "tree" else (n + 1)
+            row = {"shape": shape, "n_objects": n_objects}
+            for mode in ("cascade", "gc", "bulk"):
+                s = build(n)
+                t0 = time.monotonic()
+                if mode == "cascade":
+                    s.delete("Job", "j", propagation="foreground")
+                elif mode == "gc":
+                    s.delete("Job", "j")
+                    s.gc_collect()
+                else:
+                    s.delete_collection(label_selector={"j": "1"})
+                dt = time.monotonic() - t0
+                leftovers = len(s.list(label_selector={"j": "1"}))
+                assert leftovers == 0, f"{mode} left {leftovers} objects"
+                assert s.gc_runs == (1 if mode == "gc" else 0)
+                row[mode] = {"seconds": dt,
+                             "us_per_object": dt / n_objects * 1e6}
+                emit(f"teardown.{shape}.{mode}.n{n_objects}", dt,
+                     f"{dt / n_objects * 1e6:.1f}us/obj")
+            row["cascade_vs_gc"] = (row["gc"]["seconds"] /
+                                    max(row["cascade"]["seconds"], 1e-9))
+            results.append(row)
+    deep = results[-1]  # largest chain: the fixed point's worst case
+    tree = [r for r in results if r["shape"] == "tree"][-1]
+    report = {"benchmark": "teardown", "results": results,
+              "chain_cascade_vs_gc_speedup": deep["cascade_vs_gc"],
+              "tree_cascade_vs_gc_speedup": tree["cascade_vs_gc"],
+              "tree_cascade_us_per_object": tree["cascade"]["us_per_object"],
+              "tree_bulk_us_per_object": tree["bulk"]["us_per_object"]}
+    out = out_path or os.path.join(os.path.dirname(__file__), "..",
+                                   "results", "BENCH_teardown.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("teardown.chain.cascade_vs_gc", 0.0,
+         f"{report['chain_cascade_vs_gc_speedup']:.1f}x")
+    return report
 
 
 # ----------------------------------------------------------------- fig 8
@@ -570,12 +653,13 @@ BENCHES = {
     "autoscale": bench_autoscale_rampup,
     "transport": bench_transport,
     "scale_down": bench_scaledown,
+    "teardown": bench_teardown,
 }
 
 # cheap subset for CI (`--smoke`): seconds not minutes (scale_down is the
 # one Platform spin-up — a few seconds per mode — because zero-loss
 # scale-down is an acceptance criterion, not just a trajectory)
-SMOKE = ("fig7c", "table1", "transport", "scale_down")
+SMOKE = ("fig7c", "table1", "transport", "scale_down", "teardown")
 
 
 def main() -> None:
@@ -602,7 +686,8 @@ def main() -> None:
             f.write(f"{name},{us:.1f},{derived}\n")
     if smoke:  # the CI guard must actually guard
         results_dir = os.path.join(os.path.dirname(__file__), "..", "results")
-        for artifact in ("BENCH_transport.json", "BENCH_scaledown.json"):
+        for artifact in ("BENCH_transport.json", "BENCH_scaledown.json",
+                         "BENCH_teardown.json"):
             if not os.path.exists(os.path.join(results_dir, artifact)):
                 print(f"SMOKE FAIL: results/{artifact} not produced",
                       flush=True)

@@ -51,7 +51,7 @@ def main() -> None:
 
         platform.delete_job("demo")
         assert platform.wait_terminated("demo", 30)
-        print("== terminated (bulk label deletion)")
+        print("== terminated (foreground cascade deletion)")
     finally:
         platform.shutdown()
 

@@ -8,9 +8,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests"
 python -m pytest -x -q
 
-echo "== benchmark smoke (fig7c, table1, transport, scale_down)"
+echo "== benchmark smoke (fig7c, table1, transport, scale_down, teardown)"
 # drop stale artifacts so run.py's --smoke artifact gates are real
-rm -f results/BENCH_transport.json results/BENCH_scaledown.json
+rm -f results/BENCH_transport.json results/BENCH_scaledown.json \
+      results/BENCH_teardown.json
 python benchmarks/run.py --smoke
 
 echo "== docs checks (README/ARCHITECTURE references, examples import)"

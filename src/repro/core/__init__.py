@@ -17,11 +17,16 @@ from .patterns import (
     Runtime,
 )
 from .resources import (
+    FOREGROUND_FINALIZER,
     AlreadyExistsError,
     ConflictError,
     NotFoundError,
     OwnerRef,
     Subscription,
+    TerminatingError,
+    condition_is,
+    get_condition,
+    set_condition,
     wait_for,
 )
 
@@ -35,11 +40,16 @@ __all__ = [
     "Event",
     "EventListener",
     "EventType",
+    "FOREGROUND_FINALIZER",
     "NotFoundError",
     "OwnerRef",
     "Resource",
     "ResourceStore",
     "Runtime",
     "Subscription",
+    "TerminatingError",
+    "condition_is",
+    "get_condition",
+    "set_condition",
     "wait_for",
 ]

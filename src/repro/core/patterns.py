@@ -189,7 +189,9 @@ class Coordinator:
         self.namespace = namespace
         self.name = name or f"{kind.lower()}-coordinator"
         self.trace = trace
-        self._lock = threading.Lock()
+        # public: the ApiClient serializes creates/deletes of this kind
+        # against the command stream by holding the same writer lock
+        self.lock = threading.Lock()
 
     def submit(self, name: str, command: Callable[[Resource], None],
                requester: str = "?") -> Optional[Resource]:
@@ -199,7 +201,7 @@ class Coordinator:
         against a deleted resource is a no-op, matching controller semantics
         for stale events).
         """
-        with self._lock:
+        with self.lock:
             try:
                 res = self.store.update(self.kind, name, command, namespace=self.namespace)
             except NotFoundError:
@@ -275,7 +277,8 @@ class Runtime:
         canonical total-order schedule)."""
         assert not self.threaded, "step() is for manual runtimes"
         if index is None:
-            heads = [(sub._queue[0].seq, i) for i, sub in enumerate(self._subs) if len(sub)]
+            heads = [(seq, i) for i, sub in enumerate(self._subs)
+                     if (seq := sub.head_seq()) is not None]
             if not heads:
                 return False
             index = min(heads)[1]

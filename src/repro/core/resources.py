@@ -5,13 +5,20 @@ persistent, versioned objects with reliable, totally-ordered change
 notifications (paper §3.3, §7.4).  This module provides that substrate:
 
 - ``Resource``: a named, versioned object with ``spec`` (desired state) and
-  ``status`` (observed state), labels, and owner references.
+  ``status`` (observed state), labels, owner references, ``finalizers`` and
+  a ``deletion_timestamp`` (Kubernetes two-phase deletion), and status
+  ``conditions`` (typed observations with an ``observedGeneration``).
 - ``ResourceStore``: thread-safe CRUD with optimistic concurrency
   (compare-and-swap on ``resource_version``), a total-order event log,
   watch subscriptions with full-history replay (what lets the instance
   operator recover by catching up — paper §5.3), label selectors,
+  declarative mutation verbs (``apply`` create-or-replace with spec merge,
+  ``patch``/``patch_status``), two-phase deletion (a finalized object is
+  only *marked* deleted; it is reaped when the last finalizer goes),
+  foreground cascade deletion driven by owner-reference finalizers,
   owner-reference garbage collection (and the paper's §8 mitigation:
-  bulk deletion by label), and an optional write-ahead log for durability.
+  bulk deletion by label), watch-based condition waits (no spin-polling),
+  and an optional write-ahead log for durability.
 
 Nothing in here knows about streams, jobs, or JAX: it is the generic
 substrate the cloud-native patterns (controller / conductor / coordinator /
@@ -26,6 +33,7 @@ import os
 import threading
 import time
 import uuid
+from collections import deque
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Callable, Iterable, Optional
@@ -39,6 +47,11 @@ class EventType(str, Enum):
 
 class ConflictError(Exception):
     """Optimistic-concurrency failure: resource_version moved underneath us."""
+
+
+class TerminatingError(ConflictError):
+    """Invalid write against a terminating object (e.g. adding a finalizer
+    after deletion was requested) — retrying cannot fix it."""
 
 
 class AlreadyExistsError(Exception):
@@ -55,6 +68,11 @@ class OwnerRef:
     name: str
 
 
+#: Store-managed finalizer implementing foreground cascade deletion: while it
+#: is present the owner waits for every dependent to be reaped first.
+FOREGROUND_FINALIZER = "store/foreground-deletion"
+
+
 @dataclass
 class Resource:
     """A single stored object.  ``spec`` is desired state, ``status`` observed.
@@ -62,6 +80,19 @@ class Resource:
     ``generation`` increments on every spec change (used by the platform's
     generation-aware create-or-replace, paper §6.3); ``resource_version`` is
     the store-global monotonic version of the last write to this object.
+
+    Life cycle (Kubernetes semantics):
+
+    - ``finalizers`` — opaque tokens actors place on an object they need to
+      act on *before* it may disappear (e.g. drain a PE's input rings).
+    - ``deletion_timestamp`` — ``delete`` on a finalized object only stamps
+      this (the object is *terminating*); the store reaps it when the last
+      finalizer is removed.  ``None`` means live.
+    - ``status["conditions"]`` — list of ``{type, status, reason, message,
+      observedGeneration, lastTransitionTime}`` observations (see
+      ``set_condition``/``get_condition``).  ``observedGeneration`` records
+      which spec generation the writer had seen, so readers can tell a stale
+      condition from a current one.
     """
 
     kind: str
@@ -74,10 +105,16 @@ class Resource:
     uid: str = ""
     resource_version: int = 0
     generation: int = 1
+    finalizers: list = field(default_factory=list)
+    deletion_timestamp: Optional[float] = None
 
     @property
     def key(self) -> tuple:
         return (self.kind, self.namespace, self.name)
+
+    @property
+    def terminating(self) -> bool:
+        return self.deletion_timestamp is not None
 
     def clone(self) -> "Resource":
         return copy.deepcopy(self)
@@ -94,6 +131,8 @@ class Resource:
             "uid": self.uid,
             "resource_version": self.resource_version,
             "generation": self.generation,
+            "finalizers": list(self.finalizers),
+            "deletion_timestamp": self.deletion_timestamp,
         }
         return d
 
@@ -110,7 +149,63 @@ class Resource:
             uid=d.get("uid", ""),
             resource_version=d.get("resource_version", 0),
             generation=d.get("generation", 1),
+            finalizers=list(d.get("finalizers", ())),
+            deletion_timestamp=d.get("deletion_timestamp"),
         )
+
+
+# ------------------------------------------------------------- conditions
+
+
+def get_condition(res: Resource, cond_type: str) -> Optional[dict]:
+    """The condition entry of ``cond_type`` on ``res``, or None."""
+    for cond in res.status.get("conditions", ()):
+        if cond.get("type") == cond_type:
+            return cond
+    return None
+
+
+def condition_is(res: Resource, cond_type: str, status: str = "True",
+                 min_generation: Optional[int] = None) -> bool:
+    """True iff the condition exists with the wanted status string (and, when
+    ``min_generation`` is given, was observed at that spec generation or
+    later — the staleness guard)."""
+    cond = get_condition(res, cond_type)
+    if cond is None or cond.get("status") != status:
+        return False
+    if min_generation is not None and \
+            cond.get("observedGeneration", 0) < min_generation:
+        return False
+    return True
+
+
+def set_condition(res: Resource, cond_type: str, status: str,
+                  reason: str = "", message: str = "",
+                  observed_generation: Optional[int] = None,
+                  now: Optional[float] = None) -> bool:
+    """Upsert a condition on ``res`` in place (use inside a coordinator
+    command or ``update`` mutate).  ``lastTransitionTime`` moves only when
+    the status string actually changes (Kubernetes semantics);
+    ``observedGeneration`` defaults to the resource's current generation.
+    Returns True iff anything changed."""
+    conds = res.status.setdefault("conditions", [])
+    gen = res.generation if observed_generation is None else observed_generation
+    entry = {"type": cond_type, "status": status, "reason": reason,
+             "message": message, "observedGeneration": gen}
+    for i, cond in enumerate(conds):
+        if cond.get("type") != cond_type:
+            continue
+        entry["lastTransitionTime"] = (
+            cond.get("lastTransitionTime", 0.0)
+            if cond.get("status") == status
+            else (time.time() if now is None else now))
+        if all(cond.get(k) == v for k, v in entry.items()):
+            return False
+        conds[i] = entry
+        return True
+    entry["lastTransitionTime"] = time.time() if now is None else now
+    conds.append(entry)
+    return True
 
 
 @dataclass(frozen=True)
@@ -137,7 +232,9 @@ class Subscription:
     def __init__(self, kinds: Optional[tuple], namespace: Optional[str]):
         self.kinds = kinds
         self.namespace = namespace
-        self._queue: list[Event] = []
+        # deque: O(1) take from the head on the hot watch path (a plain
+        # list's pop(0) is O(n) and this queue can hold a full replay)
+        self._queue: deque[Event] = deque()
         self._cond = threading.Condition()
         self.closed = False
 
@@ -150,10 +247,16 @@ class Subscription:
             self._queue.append(event)
             self._cond.notify_all()
 
+    def head_seq(self) -> Optional[int]:
+        """Global sequence number of the next event, or None when empty
+        (the manual Runtime's canonical-schedule introspection)."""
+        with self._cond:
+            return self._queue[0].seq if self._queue else None
+
     def poll(self) -> Optional[Event]:
         with self._cond:
             if self._queue:
-                return self._queue.pop(0)
+                return self._queue.popleft()
             return None
 
     def take(self, timeout: Optional[float] = None) -> Optional[Event]:
@@ -161,7 +264,7 @@ class Subscription:
             if not self._queue:
                 self._cond.wait(timeout=timeout)
             if self._queue:
-                return self._queue.pop(0)
+                return self._queue.popleft()
             return None
 
     def __len__(self) -> int:
@@ -175,16 +278,35 @@ class Subscription:
 
 
 class ResourceStore:
-    """Thread-safe versioned object store with a total-order event log."""
+    """Thread-safe versioned object store with a total-order event log.
+
+    Deletion is two-phase (Kubernetes semantics): ``delete`` on an object
+    that carries finalizers only stamps ``deletion_timestamp`` and emits
+    MODIFIED; the object is *reaped* (removed + DELETED emitted) when the
+    last finalizer is removed.  ``delete(..., propagation="foreground")``
+    additionally places the ``FOREGROUND_FINALIZER`` on the object and
+    cascades the delete through its owner-reference dependents, reaping the
+    owner only after the last dependent is gone — the happy-path
+    replacement for the ``gc_collect`` fixed-point walk (paper §8).
+    """
 
     def __init__(self, wal_path: Optional[str] = None):
         self._lock = threading.RLock()
         self._objects: dict[tuple, Resource] = {}
+        # owner key -> {dependent keys}: keeps the foreground cascade's
+        # per-reap dependent checks O(dependents), not O(store)
+        self._deps: dict[tuple, set] = {}
+        # foreground completion worklist (drained iteratively so ownership
+        # chains deeper than the Python stack still cascade)
+        self._fg_pending: deque = deque()
+        self._fg_active = False
         self._log: list[Event] = []
         self._seq = 0
         self._subs: list[Subscription] = []
         self._wal_path = wal_path
         self._wal_file = None
+        self.gc_runs = 0  # gc_collect invocations (tests assert the happy
+        # path never needs the fixed-point walk)
         if wal_path:
             self._wal_file = open(wal_path, "a", encoding="utf-8")
 
@@ -194,14 +316,37 @@ class ResourceStore:
         with self._lock:
             if res.key in self._objects:
                 raise AlreadyExistsError(f"{res.key} already exists")
+            for owner in res.owner_refs:
+                cur = self._objects.get((owner.kind, res.namespace, owner.name))
+                if cur is not None and cur.terminating:
+                    # a dependent created under a terminating owner would
+                    # never be revisited by the cascade — refuse it
+                    raise ConflictError(
+                        f"owner {owner.kind}/{owner.name} is terminating")
             stored = res.clone()
+            stored.deletion_timestamp = None
             self._seq += 1
             stored.resource_version = self._seq
             stored.generation = 1
             stored.uid = stored.uid or uuid.uuid4().hex[:12]
             self._objects[stored.key] = stored
+            self._index_owners(stored)
             self._emit(Event(self._seq, EventType.ADDED, stored.clone()))
             return stored.clone()
+
+    def _index_owners(self, res: Resource) -> None:
+        for owner in res.owner_refs:
+            self._deps.setdefault((owner.kind, res.namespace, owner.name),
+                                  set()).add(res.key)
+
+    def _unindex_owners(self, res: Resource) -> None:
+        for owner in res.owner_refs:
+            key = (owner.kind, res.namespace, owner.name)
+            deps = self._deps.get(key)
+            if deps is not None:
+                deps.discard(res.key)
+                if not deps:
+                    del self._deps[key]
 
     def get(self, kind: str, name: str, namespace: str = "default") -> Resource:
         with self._lock:
@@ -239,7 +384,14 @@ class ResourceStore:
             return sorted(out, key=lambda r: r.key)
 
     def replace(self, res: Resource, expected_version: Optional[int] = None) -> Resource:
-        """Compare-and-swap replace.  Spec changes bump ``generation``."""
+        """Compare-and-swap replace.  Spec changes bump ``generation``.
+
+        Two-phase-deletion bookkeeping: ``deletion_timestamp`` is store-owned
+        (only ``delete`` sets it — a stale writer cannot resurrect a
+        terminating object); adding finalizers to a terminating object is
+        refused (it could postpone the reap forever); and removing the last
+        finalizer from a terminating object reaps it.
+        """
         with self._lock:
             key = res.key
             if key not in self._objects:
@@ -249,15 +401,41 @@ class ResourceStore:
                 raise ConflictError(
                     f"{key}: expected v{expected_version}, store has v{current.resource_version}"
                 )
+            if current.terminating and \
+                    set(res.finalizers) - set(current.finalizers):
+                raise TerminatingError(f"{key} is terminating; finalizers "
+                                       "can only be removed")
+            if (res.spec == current.spec and res.status == current.status
+                    and res.labels == current.labels
+                    and res.owner_refs == current.owner_refs
+                    and res.finalizers == current.finalizers):
+                # no-op write: don't bump the version or wake every watcher
+                # (the idempotent lifecycle verbs — remove_finalizer of an
+                # absent finalizer, re-set of an unchanged condition —
+                # would otherwise re-enter the controllers that issued them)
+                return current.clone()
             old = current.clone()
             stored = res.clone()
             stored.uid = current.uid
+            stored.deletion_timestamp = current.deletion_timestamp
             self._seq += 1
             stored.resource_version = self._seq
             stored.generation = current.generation + (1 if stored.spec != current.spec else 0)
+            if stored.owner_refs != current.owner_refs:
+                self._unindex_owners(current)
+                self._index_owners(stored)
             self._objects[key] = stored
             self._emit(Event(self._seq, EventType.MODIFIED, stored.clone(), old=old))
-            return stored.clone()
+            out = stored.clone()
+            if stored.terminating and not stored.finalizers:
+                self._reap(stored)
+            elif stored.terminating and \
+                    FOREGROUND_FINALIZER in stored.finalizers and \
+                    stored.finalizers != old.finalizers:
+                # another finalizer just cleared: the foreground hold may be
+                # the only thing left — re-run its dependent check
+                self._schedule_foreground_check(stored.key)
+            return out
 
     def update(
         self,
@@ -274,6 +452,8 @@ class ResourceStore:
             mutate(cur)
             try:
                 return self.replace(cur, expected_version=ver)
+            except TerminatingError:
+                raise  # not a CAS race; retrying cannot make it valid
             except ConflictError:
                 continue
         raise ConflictError(f"update of {(kind, namespace, name)} exhausted retries")
@@ -286,21 +466,206 @@ class ResourceStore:
 
         return self.update(kind, name, mutate, namespace=namespace)
 
-    def delete(self, kind: str, name: str, namespace: str = "default") -> Resource:
+    # --------------------------------------------- declarative verbs (apply)
+
+    def apply(self, res: Resource) -> Resource:
+        """Create-or-replace with spec-merge semantics (server-side apply).
+
+        Absent -> create.  Present -> merge ``res.spec`` into the stored
+        spec (labels likewise), leave status and finalizers alone, and bump
+        the generation iff the merged spec actually changed.  The verb every
+        declarative caller uses instead of hand-rolled exists/create/update.
+        """
+        with self._lock:
+            if res.key not in self._objects:
+                return self.create(res)
+
+            def merge(cur: Resource) -> None:
+                cur.spec.update(copy.deepcopy(res.spec))
+                cur.labels.update(copy.deepcopy(res.labels))
+                if res.owner_refs:
+                    cur.owner_refs = res.owner_refs
+
+            return self.update(res.kind, res.name, merge,
+                               namespace=res.namespace)
+
+    def patch(self, kind: str, name: str, spec_patch: dict,
+              namespace: str = "default") -> Resource:
+        """Merge ``spec_patch`` into the object's spec (generation bumps iff
+        it changed something)."""
+        def mutate(res: Resource) -> None:
+            res.spec.update(copy.deepcopy(spec_patch))
+
+        return self.update(kind, name, mutate, namespace=namespace)
+
+    def patch_status(self, kind: str, name: str, patch: dict,
+                     namespace: str = "default") -> Resource:
+        """Merge ``patch`` into the object's status (alias of
+        ``update_status``, named for symmetry with ``patch``)."""
+        return self.update_status(kind, name, patch, namespace=namespace)
+
+    # ------------------------------------------------------------- finalizers
+
+    def add_finalizer(self, kind: str, name: str, finalizer: str,
+                      namespace: str = "default") -> Resource:
+        def mutate(res: Resource) -> None:
+            if finalizer not in res.finalizers:
+                res.finalizers.append(finalizer)
+
+        return self.update(kind, name, mutate, namespace=namespace)
+
+    def remove_finalizer(self, kind: str, name: str, finalizer: str,
+                         namespace: str = "default") -> Optional[Resource]:
+        """Remove a finalizer; reaps the object if it was terminating and
+        this was the last one.  Missing object/finalizer is a no-op."""
+        def mutate(res: Resource) -> None:
+            if finalizer in res.finalizers:
+                res.finalizers.remove(finalizer)
+
+        try:
+            return self.update(kind, name, mutate, namespace=namespace)
+        except NotFoundError:
+            return None
+
+    # -------------------------------------------------------------- deletion
+
+    def delete(self, kind: str, name: str, namespace: str = "default",
+               propagation: str = "orphan") -> Resource:
+        """Delete an object — two-phase when it carries finalizers.
+
+        - no finalizers: removed immediately, DELETED emitted (the seed
+          behaviour, and still the K8s behaviour for unfinalized objects);
+        - finalizers present: ``deletion_timestamp`` stamped, MODIFIED
+          emitted; the object is reaped when the last finalizer goes.
+          A second delete of a terminating object is a no-op.
+        - ``propagation="foreground"``: the object additionally gets the
+          ``FOREGROUND_FINALIZER`` and the delete cascades through its
+          owner-reference dependents; the object reaps only after the last
+          dependent is gone (paper §8's GC, without the fixed-point walk).
+        """
         with self._lock:
             key = (kind, namespace, name)
             if key not in self._objects:
                 raise NotFoundError(f"{key} not found")
-            res = self._objects.pop(key)
-            self._seq += 1
-            snap = res.clone()
-            snap.resource_version = self._seq
-            self._emit(Event(self._seq, EventType.DELETED, snap))
-            return snap
+            if propagation == "foreground":
+                return self._delete_foreground(self._objects[key])
+            return self._delete_one(self._objects[key])
 
-    def try_delete(self, kind: str, name: str, namespace: str = "default") -> bool:
+    def _delete_one(self, res: Resource) -> Resource:
+        """Two-phase-aware single-object delete (lock held)."""
+        if res.finalizers:
+            if not res.terminating:  # stamp once; re-deletes are no-ops
+                old = res.clone()
+                res.deletion_timestamp = time.time()
+                self._seq += 1
+                res.resource_version = self._seq
+                self._emit(Event(self._seq, EventType.MODIFIED, res.clone(),
+                                 old=old))
+            return res.clone()
+        return self._reap(res)
+
+    def _reap(self, res: Resource) -> Resource:
+        """Actually remove an object and emit DELETED (lock held), then let
+        any foreground-terminating owner re-check its dependents."""
+        if self._objects.get(res.key) is None:
+            return res.clone()  # already reaped (cascade re-entry)
+        self._objects.pop(res.key, None)
+        self._unindex_owners(res)
+        self._seq += 1
+        snap = res.clone()
+        snap.resource_version = self._seq
+        self._emit(Event(self._seq, EventType.DELETED, snap))
+        for owner in res.owner_refs:
+            owner_res = self._objects.get(
+                (owner.kind, res.namespace, owner.name))
+            if owner_res is not None and owner_res.terminating and \
+                    FOREGROUND_FINALIZER in owner_res.finalizers:
+                self._schedule_foreground_check(owner_res.key)
+        return snap
+
+    def _dependents(self, res: Resource) -> list[Resource]:
+        keys = self._deps.get(res.key, ())
+        return [self._objects[k] for k in list(keys) if k in self._objects]
+
+    def _delete_foreground(self, res: Resource) -> Resource:
+        """Foreground cascade (lock held, iterative — ownership chains can
+        be deeper than the Python stack): stamp every reachable dependent
+        with the foreground finalizer, then run completion checks until the
+        queue drains.  Dependents that carry their own finalizers (e.g. a
+        draining PE) hold their branch open until those are removed."""
+        snap = None
+        frontier = deque([res.key])
+        seen = set()
+        while frontier:
+            key = frontier.popleft()
+            if key in seen:
+                continue
+            seen.add(key)
+            cur = self._objects.get(key)
+            if cur is None:
+                continue
+            if not cur.terminating:
+                if not cur.finalizers and not self._deps.get(key):
+                    # unfinalized leaf: one DELETED event, not three
+                    reaped = self._reap(cur)
+                    if key == res.key:
+                        snap = reaped
+                    continue
+                old = cur.clone()
+                if FOREGROUND_FINALIZER not in cur.finalizers:
+                    cur.finalizers.append(FOREGROUND_FINALIZER)
+                cur.deletion_timestamp = time.time()
+                self._seq += 1
+                cur.resource_version = self._seq
+                self._emit(Event(self._seq, EventType.MODIFIED, cur.clone(),
+                                 old=old))
+            if key == res.key:
+                snap = cur.clone()
+            frontier.extend(self._deps.get(key, ()))
+            self._schedule_foreground_check(key)
+        return snap if snap is not None else res.clone()
+
+    def _schedule_foreground_check(self, key: tuple) -> None:
+        """Queue a foreground completion check.  The queue is drained by
+        the outermost caller only (re-entrant calls just enqueue), so a
+        reap chain of any depth uses constant stack."""
+        self._fg_pending.append(key)
+        if self._fg_active:
+            return
+        self._fg_active = True
         try:
-            self.delete(kind, name, namespace)
+            while self._fg_pending:
+                obj = self._objects.get(self._fg_pending.popleft())
+                if obj is not None:
+                    self._maybe_finish_foreground(obj)
+        finally:
+            self._fg_active = False
+
+    def _maybe_finish_foreground(self, res: Resource) -> None:
+        """Owner bookkeeping (lock held): when a foreground-terminating
+        object has no dependents left, its foreground finalizer is removed —
+        reaping it if that was the last finalizer, which in turn re-checks
+        *its* owners (the cascade completes bottom-up)."""
+        if self._objects.get(res.key) is not res:
+            return  # already reaped (a dependent's reap finished it first)
+        if self._deps.get(res.key):  # O(1) emptiness check per reap
+            return
+        if not res.terminating:
+            return
+        if FOREGROUND_FINALIZER in res.finalizers:
+            old = res.clone()
+            res.finalizers.remove(FOREGROUND_FINALIZER)
+            self._seq += 1
+            res.resource_version = self._seq
+            self._emit(Event(self._seq, EventType.MODIFIED, res.clone(),
+                             old=old))
+        if not res.finalizers:
+            self._reap(res)
+
+    def try_delete(self, kind: str, name: str, namespace: str = "default",
+                   propagation: str = "orphan") -> bool:
+        try:
+            self.delete(kind, name, namespace, propagation=propagation)
             return True
         except NotFoundError:
             return False
@@ -331,12 +696,15 @@ class ResourceStore:
         number of resources (paper §8, Fig. 7c) — kept faithful so the
         benchmark can reproduce the comparison against bulk deletion.
         """
+        self.gc_runs += 1
         removed = 0
         while True:
             with self._lock:
                 orphans = []
                 for res in self._objects.values():
-                    if not res.owner_refs:
+                    if not res.owner_refs or res.terminating:
+                        # terminating orphans already await their finalizers;
+                        # re-deleting them would spin this loop forever
                         continue
                     owners_alive = any(
                         (o.kind, res.namespace, o.name) in self._objects for o in res.owner_refs
@@ -375,6 +743,58 @@ class ResourceStore:
             if sub in self._subs:
                 self._subs.remove(sub)
             sub.close()
+
+    # ------------------------------------------------------ watch-based waits
+
+    def wait_resource(self, kind: str, name: str,
+                      predicate: Callable[[Optional[Resource]], bool],
+                      namespace: str = "default",
+                      timeout: float = 30.0) -> bool:
+        """Block until ``predicate(resource-or-None)`` holds, watching events
+        instead of spin-polling (sub-interval sleeps cost ~10 ms of timer
+        granularity each; a Condition wait costs nothing until woken).
+
+        The predicate is evaluated on the current object first, then once per
+        event touching the object (None for DELETED).  Returns False on
+        timeout.
+        """
+        sub = self.watch(kinds=(kind,), namespace=namespace, replay=False)
+        try:
+            if predicate(self.try_get(kind, name, namespace)):
+                return True
+            deadline = time.monotonic() + timeout
+            while True:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return predicate(self.try_get(kind, name, namespace))
+                ev = sub.take(timeout=remaining)
+                if ev is None or ev.resource.name != name:
+                    continue
+                res = None if ev.type == EventType.DELETED else ev.resource
+                if predicate(res):
+                    return True
+        finally:
+            self.unwatch(sub)
+
+    def wait_for_condition(self, kind: str, name: str, cond_type: str,
+                           status: str = "True", namespace: str = "default",
+                           timeout: float = 30.0,
+                           min_generation: Optional[int] = None) -> bool:
+        """Watch-based wait until the named object carries
+        ``conditions[type].status == status`` (optionally at/after
+        ``min_generation``).  No spin-polling."""
+        return self.wait_resource(
+            kind, name,
+            lambda res: res is not None and condition_is(
+                res, cond_type, status, min_generation=min_generation),
+            namespace=namespace, timeout=timeout)
+
+    def wait_deleted(self, kind: str, name: str, namespace: str = "default",
+                     timeout: float = 30.0) -> bool:
+        """Watch-based wait until the object is gone (reaped, not merely
+        terminating)."""
+        return self.wait_resource(kind, name, lambda res: res is None,
+                                  namespace=namespace, timeout=timeout)
 
     def _emit(self, event: Event) -> None:
         self._log.append(event)
@@ -434,8 +854,22 @@ class ResourceStore:
                 else:
                     store._objects[res.key] = res
                 store._log.append(Event(rec["seq"], etype, res))
+        for res in store._objects.values():
+            store._index_owners(res)  # rebuild the cascade's dependent index
         store._wal_path = wal_path
         store._wal_file = open(wal_path, "a", encoding="utf-8")
+        # complete deletions the crash interrupted: a terminating object
+        # whose finalizers are already gone reaps now, and every foreground
+        # hold re-checks its dependents (a crash between a dependent's
+        # DELETED record and the owner's finalizer-removal record would
+        # otherwise leave the owner terminating forever — nothing else
+        # re-triggers the check after a restart)
+        for res in list(store._objects.values()):
+            if res.terminating and not res.finalizers:
+                store._reap(res)
+        for res in list(store._objects.values()):
+            if res.terminating and FOREGROUND_FINALIZER in res.finalizers:
+                store._schedule_foreground_check(res.key)
         return store
 
 

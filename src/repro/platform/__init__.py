@@ -13,8 +13,9 @@ import tempfile
 import time
 
 from ..ckpt import CheckpointStore
-from ..core import CausalTrace, Coordinator, ResourceStore, Runtime, wait_for
+from ..core import CausalTrace, ResourceStore, Runtime, wait_for
 from . import crds
+from .api import ApiClient
 from .autoscale import AutoscaleConductor
 from .cluster import KubeletController, SchedulerController
 from .fabric import Fabric
@@ -51,35 +52,30 @@ class Platform:
         self.fabric = Fabric(dns_delay=dns_delay)
         self.ckpt = CheckpointStore(ckpt_root or tempfile.mkdtemp(prefix="repro-ckpt-"))
 
-        coords = {
-            "job": Coordinator(self.store, crds.JOB, namespace, trace=self.trace),
-            "pe": Coordinator(self.store, crds.PE, namespace, trace=self.trace),
-            "pod": Coordinator(self.store, crds.POD, namespace, trace=self.trace),
-            "cr": Coordinator(self.store, crds.CONSISTENT_REGION, namespace,
-                              trace=self.trace),
-            "pr": Coordinator(self.store, crds.PARALLEL_REGION, namespace,
-                              trace=self.trace),
-            "metrics": Coordinator(self.store, crds.METRICS, namespace,
-                                   trace=self.trace),
-            "policy": Coordinator(self.store, crds.SCALING_POLICY, namespace,
-                                  trace=self.trace),
-        }
+        # the typed declarative API: one coordinator per kind, every
+        # spec/status write routed through it (single-writer by construction)
+        self.api = ApiClient(self.store, namespace, trace=self.trace)
+        coords = self.api.coords
         self.coords = coords
         self.rest = RestFacade(self.store, coords["pod"], self.ckpt, namespace)
 
         # --- instance operator actors
         self.job_controller = JobController(self.store, namespace, coords,
-                                            self.trace, fabric=self.fabric)
+                                            self.trace, fabric=self.fabric,
+                                            api=self.api)
         self.pe_controller = PEController(self.store, namespace, coords, self.trace)
-        self.pod_controller = PodController(self.store, namespace, coords, self.trace)
+        self.pod_controller = PodController(self.store, namespace, coords,
+                                            self.trace, api=self.api)
         self.pr_controller = ParallelRegionController(self.store, namespace,
                                                       coords, self.trace)
         self.import_controller = ImportController(self.store, namespace, self.trace)
         self.export_controller = ExportController(self.store, namespace, self.trace)
         self.cr_controller = ConsistentRegionController(self.store, namespace,
                                                         self.trace)
-        self.pod_conductor = PodConductor(self.store, namespace, coords, self.trace)
-        self.job_conductor = JobConductor(self.store, namespace, coords, self.trace)
+        self.pod_conductor = PodConductor(self.store, namespace, coords,
+                                          self.trace, api=self.api)
+        self.job_conductor = JobConductor(self.store, namespace, coords,
+                                          self.trace, api=self.api)
         self.broker = SubscriptionBroker(self.store, namespace, self.fabric,
                                          self.trace)
         self.cr_operator = ConsistentRegionOperator(self.store, namespace, coords,
@@ -91,9 +87,9 @@ class Platform:
                                                   coords["pod"], self.trace)
         # metrics plane + elastic autoscaling (the load -> width control loop)
         self.metrics_plane = MetricsPlane(self.store, namespace, coords,
-                                          self.trace)
+                                          self.trace, api=self.api)
         self.autoscaler = AutoscaleConductor(self.store, namespace, coords,
-                                             self.trace)
+                                             self.trace, api=self.api)
 
         # conductor registration (paper Fig. 4 observation matrix)
         self.pe_controller.add_listener(self.pod_conductor)
@@ -150,7 +146,7 @@ class Platform:
                                              self.trace)
             controllers += [self.scheduler, self.kubelet]
             for i in range(num_nodes):
-                self.store.create(crds.make_node(f"node{i}", cores_per_node))
+                self.api.nodes.create(crds.make_node(f"node{i}", cores_per_node))
 
         self.runtime = Runtime(self.store, threaded=threaded)
         for c in controllers:
@@ -159,39 +155,44 @@ class Platform:
     # ------------------------------------------------------------- actions
 
     def submit(self, name: str, spec: dict):
-        return self.store.create(crds.make_job(name, spec, self.namespace))
+        return self.api.jobs.create(crds.make_job(name, spec, self.namespace))
 
     def delete_job(self, name: str) -> None:
-        self.store.try_delete(crds.JOB, name, self.namespace)
+        """Tear a job down.  The default is foreground cascade deletion
+        driven by owner-reference finalizers (mid-drain PEs hold their
+        branch open until their ``streams/drain`` finalizer clears); a job
+        submitted with ``gcMode: "manual"`` keeps the §8 bulk label sweep."""
+        job = self.api.jobs.try_get(name)
+        gc_mode = (job.spec.get("gcMode", "foreground")
+                   if job is not None else "foreground")
+        self.api.jobs.delete(
+            name,
+            propagation="orphan" if gc_mode == "manual" else "foreground")
 
     def set_width(self, job: str, region: str, width: int) -> None:
-        """kubectl edit parallelregion ... (paper §6.3)."""
+        """kubectl edit parallelregion ... (paper §6.3) — through the pr
+        coordinator: no spec write bypasses the single writer."""
+        from ..core import NotFoundError
 
-        def edit(res):
-            res.spec["width"] = width
-
-        self.store.update(crds.PARALLEL_REGION, crds.pr_name(job, region), edit,
-                          namespace=self.namespace)
+        out = self.api.parallel_regions.patch(crds.pr_name(job, region),
+                                              {"width": width},
+                                              requester="user")
+        if out is None:
+            raise NotFoundError(
+                f"ParallelRegion {crds.pr_name(job, region)} not found")
 
     def kill_pod(self, job: str, pe_id: int) -> bool:
         assert self.kubelet is not None
         return self.kubelet.kill_pod(crds.pod_name(job, pe_id))
 
     def set_scaling_policy(self, job: str, region: str, **kw):
-        """kubectl apply scalingpolicy ... (create-or-replace)."""
+        """kubectl apply scalingpolicy ... (server-side apply)."""
         res = crds.make_scaling_policy(job, region, namespace=self.namespace,
                                        **kw)
-        if self.store.exists(crds.SCALING_POLICY, res.name, self.namespace):
-            def edit(cur, spec=res.spec):
-                cur.spec.update(spec)
-            return self.store.update(crds.SCALING_POLICY, res.name, edit,
-                                     namespace=self.namespace)
-        return self.store.create(res)
+        return self.api.scaling_policies.apply(res, requester="user")
 
     def delete_scaling_policy(self, job: str, region: str) -> bool:
-        return self.store.try_delete(crds.SCALING_POLICY,
-                                     crds.policy_name(job, region),
-                                     self.namespace)
+        return self.api.scaling_policies.delete(crds.policy_name(job, region))
 
     def region_width(self, job: str, region: str) -> int:
         pr = self.store.try_get(crds.PARALLEL_REGION, crds.pr_name(job, region),
@@ -211,18 +212,43 @@ class Platform:
         return dict(res.status) if res else {}
 
     def wait_submitted(self, name: str, timeout: float = 30.0) -> bool:
-        return wait_for(lambda: self.job_status(name).get("state") == "Submitted",
-                        timeout)
+        """Watch-based wait on the Job's ``Submitted`` condition."""
+        return self.api.jobs.wait_for_condition(name, crds.COND_SUBMITTED,
+                                                timeout=timeout)
 
     def wait_full_health(self, name: str, timeout: float = 60.0) -> bool:
-        return wait_for(lambda: self.job_status(name).get("fullHealth"), timeout)
+        """Watch-based wait on the Job's ``FullHealth`` condition."""
+        return self.api.jobs.wait_for_condition(name, crds.COND_FULL_HEALTH,
+                                                timeout=timeout)
 
     def wait_terminated(self, name: str, timeout: float = 60.0) -> bool:
-        def gone():
-            left = self.store.list(namespace=self.namespace,
-                                   label_selector=crds.job_labels(name))
-            return not left
-        return wait_for(gone, timeout)
+        """Watch-based wait until no resource labeled with the job remains
+        (event-driven: re-checks on the job's own deletions instead of
+        spin-polling)."""
+        labels = crds.job_labels(name)
+        sub = self.store.watch(namespace=self.namespace, replay=False)
+        try:
+            def gone():
+                return not self.store.list(namespace=self.namespace,
+                                           label_selector=labels)
+
+            if gone():
+                return True
+            deadline = time.monotonic() + timeout
+            while True:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return gone()
+                ev = sub.take(timeout=remaining)
+                if ev is None or ev.type.value != "DELETED":
+                    continue
+                # only this job's deletions can empty its label set — skip
+                # the O(store) list for unrelated events
+                if all(ev.resource.labels.get(k) == v
+                       for k, v in labels.items()) and gone():
+                    return True
+        finally:
+            self.store.unwatch(sub)
 
     def wait_cr_committed(self, job: str, region: str, step: int,
                           timeout: float = 120.0) -> bool:

@@ -1,0 +1,252 @@
+"""Typed declarative API client — the platform's only mutation surface.
+
+The paper's lesson (§3.3, §5) is that a cloud-native platform should treat
+the cluster manager's API machinery as its own control surface: state lives
+in custom resources, life cycle is tracked by finalizers and conditions,
+and every actor mutates through one declarative API instead of ad-hoc
+store calls.  ``ApiClient`` finishes that move for this repo:
+
+- one typed handle per kind (``api.jobs``, ``api.pes``, ``api.pods``,
+  ``api.parallel_regions``, …) so call sites read like a real client-go;
+- **every** spec/status write routes through the kind's ``Coordinator``
+  (paper §4.3 multiple-reader/single-writer), so single-writer semantics
+  are enforced by construction rather than by discipline — concurrent
+  agents physically cannot race a CAS against each other;
+- declarative verbs: ``apply`` (create-or-replace with spec merge),
+  ``patch``/``patch_status``, ``set_condition`` (stamping
+  ``observedGeneration``), ``add_finalizer``/``remove_finalizer``,
+  ``delete`` with foreground cascade, and watch-based
+  ``wait_for_condition`` (no spin-polling).
+
+Reads go straight to the store (multiple readers are free); creations go
+through the coordinator lock so create-then-modify sequences from two
+actors serialize the same way modifications do.
+"""
+
+from __future__ import annotations
+
+import copy
+from typing import Callable, Optional
+
+from ..core import (
+    CausalTrace,
+    Coordinator,
+    Resource,
+    ResourceStore,
+    condition_is,
+    get_condition,
+    set_condition,
+)
+from . import crds
+
+#: handle attribute -> (resource kind, platform short name for the
+#: coordinator registry — the keys ``Platform.coords`` has always used)
+HANDLES = {
+    "jobs": (crds.JOB, "job"),
+    "pes": (crds.PE, "pe"),
+    "pods": (crds.POD, "pod"),
+    "parallel_regions": (crds.PARALLEL_REGION, "pr"),
+    "consistent_regions": (crds.CONSISTENT_REGION, "cr"),
+    "metrics": (crds.METRICS, "metrics"),
+    "scaling_policies": (crds.SCALING_POLICY, "policy"),
+    "config_maps": (crds.CONFIG_MAP, "cm"),
+    "services": (crds.SERVICE, "svc"),
+    "imports": (crds.IMPORT, "import"),
+    "exports": (crds.EXPORT, "export"),
+    "hostpools": (crds.HOSTPOOL, "hostpool"),
+    "nodes": (crds.NODE, "node"),
+}
+
+
+class KindApi:
+    """Typed handle for one resource kind: reads from the store, writes
+    serialized through the kind's coordinator."""
+
+    def __init__(self, store: ResourceStore, kind: str, namespace: str,
+                 coord: Coordinator):
+        self.store = store
+        self.kind = kind
+        self.namespace = namespace
+        self.coord = coord
+
+    # ---------------------------------------------------------------- reads
+
+    def get(self, name: str) -> Resource:
+        return self.store.get(self.kind, name, self.namespace)
+
+    def try_get(self, name: str) -> Optional[Resource]:
+        return self.store.try_get(self.kind, name, self.namespace)
+
+    def exists(self, name: str) -> bool:
+        return self.store.exists(self.kind, name, self.namespace)
+
+    def list(self, label_selector: Optional[dict] = None) -> list:
+        return self.store.list(kind=self.kind, namespace=self.namespace,
+                               label_selector=label_selector)
+
+    def condition(self, name: str, cond_type: str) -> Optional[dict]:
+        res = self.try_get(name)
+        return get_condition(res, cond_type) if res is not None else None
+
+    def condition_is(self, name: str, cond_type: str, status: str = "True",
+                     min_generation: Optional[int] = None) -> bool:
+        res = self.try_get(name)
+        return res is not None and condition_is(res, cond_type, status,
+                                                min_generation=min_generation)
+
+    # --------------------------------------------------------------- writes
+
+    def create(self, res: Resource) -> Resource:
+        assert res.kind == self.kind, f"{res.kind} through the {self.kind} api"
+        with self.coord.lock:  # serialize with this kind's modifications
+            out = self.store.create(res)
+        if self.coord.trace is not None:
+            self.coord.trace.record(self.coord.name, "create", out.key)
+        return out
+
+    def apply(self, res: Resource, requester: str = "?") -> Resource:
+        """Create-or-replace with spec-merge semantics, serialized through
+        the coordinator (the declarative verb for 'make it look like this').
+        Delegates to ``ResourceStore.apply`` so there is exactly one merge
+        implementation."""
+        assert res.kind == self.kind, f"{res.kind} through the {self.kind} api"
+        with self.coord.lock:
+            out = self.store.apply(res)
+        if self.coord.trace is not None:
+            self.coord.trace.record(self.coord.name, "modify", out.key,
+                                    f"for={requester}")
+        return out
+
+    def edit(self, name: str, command: Callable[[Resource], None],
+             requester: str = "?") -> Optional[Resource]:
+        """Arbitrary serialized read-modify-write (escape hatch; prefer the
+        declarative verbs)."""
+        return self.coord.submit(name, command, requester=requester)
+
+    def patch(self, name: str, spec_patch: dict,
+              requester: str = "?") -> Optional[Resource]:
+        def command(res: Resource) -> None:
+            res.spec.update(copy.deepcopy(spec_patch))
+
+        return self.coord.submit(name, command, requester=requester)
+
+    def patch_status(self, name: str, patch: dict,
+                     requester: str = "?") -> Optional[Resource]:
+        return self.coord.submit_status(name, patch, requester=requester)
+
+    def set_condition(self, name: str, cond_type: str, status: str,
+                      reason: str = "", message: str = "",
+                      requester: str = "?") -> Optional[Resource]:
+        """Upsert a status condition, stamping ``observedGeneration`` with
+        the generation current at write time."""
+        def command(res: Resource) -> None:
+            set_condition(res, cond_type, status, reason=reason,
+                          message=message)
+
+        return self.coord.submit(name, command, requester=requester)
+
+    # ------------------------------------------------------------ life cycle
+
+    def add_finalizer(self, name: str, finalizer: str,
+                      requester: str = "?") -> Optional[Resource]:
+        def command(res: Resource) -> None:
+            if finalizer not in res.finalizers:
+                res.finalizers.append(finalizer)
+
+        return self.coord.submit(name, command, requester=requester)
+
+    def remove_finalizer(self, name: str, finalizer: str,
+                         requester: str = "?") -> Optional[Resource]:
+        """Remove a finalizer (reaping the object if it was terminating and
+        this was the last one)."""
+        def command(res: Resource) -> None:
+            if finalizer in res.finalizers:
+                res.finalizers.remove(finalizer)
+
+        return self.coord.submit(name, command, requester=requester)
+
+    def delete(self, name: str, propagation: str = "orphan") -> bool:
+        """Two-phase-aware delete; ``propagation="foreground"`` cascades
+        through owner-reference dependents (see ``ResourceStore.delete``)."""
+        with self.coord.lock:
+            ok = self.store.try_delete(self.kind, name, self.namespace,
+                                       propagation=propagation)
+        if ok and self.coord.trace is not None:
+            self.coord.trace.record(
+                self.coord.name, "delete",
+                (self.kind, self.namespace, name), propagation)
+        return ok
+
+    # ----------------------------------------------------------------- waits
+
+    def wait_for_condition(self, name: str, cond_type: str,
+                           status: str = "True", timeout: float = 30.0,
+                           min_generation: Optional[int] = None) -> bool:
+        return self.store.wait_for_condition(
+            self.kind, name, cond_type, status=status,
+            namespace=self.namespace, timeout=timeout,
+            min_generation=min_generation)
+
+    def wait_deleted(self, name: str, timeout: float = 30.0) -> bool:
+        return self.store.wait_deleted(self.kind, name,
+                                       namespace=self.namespace,
+                                       timeout=timeout)
+
+
+class ApiClient:
+    """Per-kind typed handles over one namespace, sharing one coordinator
+    per kind.  Pass ``coords`` to reuse a platform's registry: the dict is
+    adopted (and filled) IN PLACE, so every ApiClient built over the same
+    registry shares the same writer lock per kind — two actors can never
+    end up with private coordinators for one kind."""
+
+    jobs: KindApi
+    pes: KindApi
+    pods: KindApi
+    parallel_regions: KindApi
+    consistent_regions: KindApi
+    metrics: KindApi
+    scaling_policies: KindApi
+    config_maps: KindApi
+    services: KindApi
+    imports: KindApi
+    exports: KindApi
+    hostpools: KindApi
+    nodes: KindApi
+
+    def __init__(self, store: ResourceStore, namespace: str = "default",
+                 coords: Optional[dict] = None,
+                 trace: Optional[CausalTrace] = None):
+        self.store = store
+        self.namespace = namespace
+        self.trace = trace
+        self.coords = coords if coords is not None else {}
+        self._by_kind: dict = {}
+        for attr, (kind, short) in HANDLES.items():
+            coord = self.coords.get(short)
+            if coord is None:
+                coord = Coordinator(store, kind, namespace, trace=trace)
+                self.coords[short] = coord
+            handle = KindApi(store, kind, namespace, coord)
+            setattr(self, attr, handle)
+            self._by_kind[kind] = handle
+
+    def for_kind(self, kind: str) -> KindApi:
+        """The handle for a kind string (generic actors; prefer the typed
+        attributes at call sites)."""
+        return self._by_kind[kind]
+
+
+def ensure_api(api: Optional[ApiClient], store: ResourceStore,
+               namespace: Optional[str], coords: Optional[dict],
+               trace: Optional[CausalTrace]) -> ApiClient:
+    """The one fallback used by every actor constructor: reuse the injected
+    client (what ``Platform`` always does) or build one over the shared
+    coords registry (tests constructing actors standalone)."""
+    if api is not None:
+        return api
+    return ApiClient(store, namespace or "default", coords=coords,
+                     trace=trace)
+
+
+__all__ = ["ApiClient", "KindApi", "HANDLES", "ensure_api"]

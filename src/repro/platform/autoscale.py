@@ -35,8 +35,9 @@ import math
 import threading
 import time
 
-from ..core import Conductor, Event, EventType
+from ..core import Conductor, Event, EventType, condition_is, get_condition
 from . import crds
+from .api import ApiClient, ensure_api
 
 
 def decide_width(current: int, region_agg: dict | None, spec: dict) -> int:
@@ -72,11 +73,12 @@ class AutoscaleConductor(Conductor):
 
     kinds = (crds.METRICS, crds.SCALING_POLICY, crds.PARALLEL_REGION)
 
-    def __init__(self, store, namespace, coords, trace=None, *,
+    def __init__(self, store, namespace, coords, trace=None, *, api=None,
                  clock=time.monotonic):
         super().__init__(store, "autoscale-conductor", trace)
         self.namespace = namespace
         self.coords = coords
+        self.api = ensure_api(api, store, namespace, coords, trace)
         self.clock = clock
         # events arrive from several controller threads; decisions must be
         # serialized or two evaluates could double-step inside one cooldown
@@ -133,34 +135,39 @@ class AutoscaleConductor(Conductor):
 
     def _draining(self, job: str) -> bool:
         """True while a previous scale-down's drain phase is still running
-        (a pod carries a drain request but no drained report yet)."""
+        (a pod carries the ``streams/drain`` finalizer — or a drain request
+        — without a drained report yet)."""
         for pod in self.store.list(crds.POD, self.namespace,
                                    crds.job_labels(job)):
-            if pod.status.get("draining") and not pod.status.get("drained"):
+            mid_drain = (crds.DRAIN_FINALIZER in pod.finalizers
+                         or pod.status.get("draining"))
+            if mid_drain and not pod.status.get("drained"):
                 return True
         return False
 
     def _unhealthy(self, job: str) -> bool:
-        """True only when the job conductor has *observed* lost health
-        (fullHealth flipped to False); absent means no cluster is attached
-        (deterministic mode) and health gating does not apply."""
+        """True only when the job conductor has *observed* lost health (the
+        ``FullHealth`` condition standing at "False"); no condition means no
+        cluster is attached (deterministic mode) and health gating does not
+        apply."""
         res = self.store.try_get(crds.JOB, job, self.namespace)
-        return res is not None and res.status.get("fullHealth") is False
+        if res is None:
+            return False
+        if get_condition(res, crds.COND_FULL_HEALTH) is not None:
+            return condition_is(res, crds.COND_FULL_HEALTH, "False")
+        return res.status.get("fullHealth") is False  # pre-condition writers
 
     def _scale(self, job: str, region: str, pol, current: int, want: int,
                now: float) -> None:
         # stamp the cooldown FIRST: if the width edit lands but this actor
         # dies, replay re-evaluates against the already-changed width (no
         # double scale); the reverse order could scale twice on restart.
-        self.coords["policy"].submit_status(
+        self.api.scaling_policies.patch_status(
             pol.name, {"lastScaleAt": now, "lastWidth": want},
             requester=self.name)
-
-        def set_width(res):
-            res.spec["width"] = want  # -> ParallelRegionController -> Job
-
-        self.coords["pr"].submit(crds.pr_name(job, region), set_width,
-                                 requester=self.name)
+        # -> ParallelRegionController -> Job (the §6.3 chain)
+        self.api.parallel_regions.patch(crds.pr_name(job, region),
+                                        {"width": want}, requester=self.name)
         self._record("scale",
                      (crds.PARALLEL_REGION, self.namespace,
                       crds.pr_name(job, region)),

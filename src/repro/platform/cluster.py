@@ -34,7 +34,7 @@ class SchedulerController(Controller):
             self._maybe_schedule(new)
 
     def _maybe_schedule(self, pod: Resource) -> None:
-        if pod.spec.get("nodeName"):
+        if pod.spec.get("nodeName") or pod.terminating:
             return
         nodes = self.store.list(kind=crds.NODE)
         if not nodes:
@@ -114,6 +114,22 @@ class KubeletController(Controller):
 
     def on_deletion(self, res: Resource) -> None:
         self.stop_pod(res.name)
+        # permanent death vs restart: with no live PE left to bump a
+        # launchCount, this pod will never republish — any drain gated on
+        # its restart must stop waiting (its final flush already landed:
+        # stop_pod joined the runtime above).  Restart-deletes keep the
+        # gate: their PE survives and the new incarnation will publish.
+        pe = self.store.try_get(crds.PE,
+                                crds.pe_name(res.spec["job"],
+                                             res.spec["peId"]),
+                                res.namespace)
+        if pe is None or pe.terminating:
+            with self._hlock:
+                handles = list(self.handles.values())
+            for handle in handles:
+                rt = handle.runtime
+                if rt.job == res.spec["job"] and rt.draining:
+                    rt.drain_upstream_gone(res.spec["peId"])
 
     def _begin_drain(self, pod: Resource) -> None:
         """Forward a scale-down drain request to the PE runtime: mark the
@@ -134,7 +150,8 @@ class KubeletController(Controller):
         handle.runtime.begin_drain(pod.status["draining"])
 
     def _maybe_start(self, pod: Resource) -> None:
-        if not pod.spec.get("nodeName") or pod.status.get("phase") != "Pending":
+        if not pod.spec.get("nodeName") or pod.status.get("phase") != "Pending" \
+                or pod.terminating:
             return
         with self._hlock:
             if pod.name in self.handles:

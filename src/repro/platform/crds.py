@@ -61,6 +61,41 @@ CUSTOM_KINDS = (JOB, PE, PARALLEL_REGION, HOSTPOOL, IMPORT, EXPORT,
 K8S_KINDS = (CONFIG_MAP, POD, SERVICE, NODE)
 
 
+# ------------------------------------------------- life cycle (conditions)
+#
+# Status conditions (see ``repro.core.set_condition``) are the platform's
+# canonical life-cycle signals.  Every entry carries ``{type, status
+# ("True"|"False"), reason, message, observedGeneration,
+# lastTransitionTime}``; ``observedGeneration`` is the spec generation the
+# writer had seen, so consumers can tell a fresh condition from one left
+# over from a previous generation (the paper's §5 life-cycle tracking,
+# expressed in Kubernetes API conventions).  The legacy scalar fields
+# (``status.state``, ``status.fullHealth``) are still written for
+# human-readable phase display, but gates read the conditions.
+
+#: Job: the submission pipeline ran and all expected PEs exist.
+COND_SUBMITTED = "Submitted"
+#: Job: every expected pod is Running+connected (flips False on any loss).
+COND_FULL_HEALTH = "FullHealth"
+#: PE / Pod: a scale-down retirement is in flight; the PE is pulling its
+#: input dry behind the ``streams/drain`` finalizer.
+COND_DRAINING = "Draining"
+#: Pod: the runtime's drain report landed (reason carries clean/timeout).
+COND_DRAINED = "Drained"
+
+#: Finalizer a retiring PE/Pod carries while draining: deletion only stamps
+#: ``deletion_timestamp``; the drained report removes the finalizer and the
+#: store reaps the object (two-phase deletion, paper §5 life-cycle offload).
+DRAIN_FINALIZER = "streams/drain"
+#: Finalizer on pods DOWNSTREAM of an in-flight drain (the delivery path
+#: the drained tuples still need).  Tracked by the ``drainHolds`` ledger
+#: (several drains can hold one pod); removed when the ledger empties.
+#: Keeping it separate from ``streams/drain`` lets the store's own
+#: last-finalizer bookkeeping arbitrate a pod that is BOTH draining and
+#: held — no hand-rolled dual-obligation logic.
+PATH_HOLD_FINALIZER = "streams/path-hold"
+
+
 # ------------------------------------------------------------ name helpers
 
 
@@ -127,11 +162,17 @@ def make_job(name: str, spec: dict, namespace: str = "default") -> Resource:
             what bumps the generation, §6.3), ``fusion``
             ("one-per-op"|"per-channel"), ``drain`` (see ``drain_config``),
             ``stragglerTimeout`` (seconds of heartbeat silence before a pod
-            is treated as failed), ``gcMode`` ("manual" bulk label deletion
-            vs owner-reference GC, §8).
+            is treated as failed), ``gcMode`` ("foreground" — the default —
+            tears down by owner-ref cascade driven by finalizers; "manual"
+            keeps the §8 bulk label sweep).
     status: ``state`` (Submitting|Submitted), ``jobId``,
             ``appliedGeneration``, ``expectedPEs``, ``fullHealth`` /
-            ``fullHealthAt`` / ``submittedAt``, ``sourcesDone``.
+            ``fullHealthAt`` / ``submittedAt``, ``sourcesDone``;
+            ``conditions``: ``Submitted`` (pipeline ran, every expected PE
+            exists) and ``FullHealth`` (True/False as pods gain/lose
+            health), each stamped with the ``observedGeneration`` the
+            job-conductor had seen (a width edit bumps the generation, so a
+            stale ``FullHealth=True`` is detectable).
     """
     return Resource(kind=JOB, name=name, namespace=namespace, spec=spec,
                     labels=job_labels(name))
@@ -146,8 +187,10 @@ def make_pe(job: str, pe_id: int, spec: dict, namespace: str = "default") -> Res
     status: ``launchCount`` (the pod causal chain's trigger: every bump
             makes the pod conductor converge a pod to it), ``state``
             ("Draining" while a retiring PE pulls its input dry on
-            scale-down; the drained pod's finalizer only retires PEs in
-            this state).
+            scale-down), and the ``Draining`` condition.  A retiring PE
+            carries the ``streams/drain`` finalizer through a two-phase
+            delete: it lingers terminating until the drained report removes
+            the finalizer and the store reaps it.
     """
     return Resource(
         kind=PE, name=pe_name(job, pe_id), namespace=namespace,
@@ -204,10 +247,15 @@ def make_pod(job: str, pe_id: int, pod_spec: dict, launch_count: int,
             PE's latest load sample, scraped by the metrics plane),
             ``sink`` ({seen, maxseq} progress), ``draining`` (the drain
             request written on scale-down: {requestedAt, timeout, grace,
-            siblings, upstream} — the kubelet forwards it to the runtime),
-            ``drained`` (the runtime's drain report: {tuplesDropped,
-            handedOff, drainMs, clean} — the pod conductor's retire
-            trigger).
+            siblings, upstream, upstreamRestarting, downstream} — the
+            kubelet forwards it to the runtime), ``drained`` (the
+            runtime's drain report: {tuplesDropped, handedOff, drainMs,
+            clean} — removal trigger for the ``streams/drain`` finalizer),
+            ``drainHolds`` (retiring PE ids whose in-flight drains still
+            need THIS pod as delivery path: while non-empty the pod carries
+            the ``streams/path-hold`` finalizer so a mid-drain job teardown
+            cannot reap the path the drained tuples must traverse), and
+            the ``Draining`` / ``Drained`` conditions.
     """
     return Resource(
         kind=POD, name=pod_name(job, pe_id), namespace=namespace,

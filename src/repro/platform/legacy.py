@@ -26,6 +26,8 @@ import itertools
 import threading
 import time
 
+from ..core import Resource, get_condition, set_condition
+from . import crds
 from .fabric import Fabric
 from .pipeline import plan_job
 from .runtime import PERuntime
@@ -121,6 +123,10 @@ class LegacyPlatform:
         self._global_pe_ids = itertools.count(1)  # instance-global (legacy!)
         self._lock = threading.Lock()
         self.rest = _LegacyRest(self)
+        # condition parity with the cloud-native API: the monolith reports
+        # the same Submitted / FullHealth condition vocabulary (held in a
+        # detached Resource per job — there is no store to put it in)
+        self._job_status: dict = {}  # job -> Resource (conditions carrier)
 
     # ------------------------------------------------------------- submit
 
@@ -158,6 +164,11 @@ class LegacyPlatform:
         # start every PE synchronously, in order
         for pe in plan.pes:
             self._start_pe(job, pe, plan)
+        # synchronous submit: by the time it returns, the job IS submitted
+        carrier = self._job_status.setdefault(
+            job, Resource(kind="Job", name=job))
+        set_condition(carrier, crds.COND_SUBMITTED, "True",
+                      reason="SynchronousSubmit")
 
     def _start_pe(self, job: str, pe, plan) -> None:
         # port-label resolution through the central store (thundering herd)
@@ -196,7 +207,18 @@ class LegacyPlatform:
         plan = self.plans[job]
         alive = {(job, pe.pe_id) in self.connected or
                  (job, pe.pe_id) in self.done for pe in plan.pes}
-        return all(alive)
+        full = all(alive)
+        carrier = self._job_status.get(job)
+        if carrier is not None:
+            set_condition(carrier, crds.COND_FULL_HEALTH,
+                          "True" if full else "False")
+        return full
+
+    def job_condition(self, job: str, cond_type: str):
+        """The cloud-native condition vocabulary over the monolith's state
+        (API parity for tests/benchmarks comparing the two platforms)."""
+        carrier = self._job_status.get(job)
+        return get_condition(carrier, cond_type) if carrier else None
 
     def on_checkpoint(self, job: str, region: str, pe_id: int, step: int) -> None:
         plan = self.plans.get(job)
@@ -285,6 +307,7 @@ class LegacyPlatform:
                 del self.pes[(j, pid)]
         self.zk.delete_prefix(f"/jobs/{job}")
         self.plans.pop(job, None)
+        self._job_status.pop(job, None)
 
     def kill_pe(self, job: str, pe_id: int) -> bool:
         entry = self.pes.get((job, pe_id))

@@ -32,6 +32,7 @@ from collections import deque
 
 from ..core import Conductor, Event, EventType
 from . import crds
+from .api import ApiClient, ensure_api
 
 
 class MetricsPlane(Conductor):
@@ -39,12 +40,13 @@ class MetricsPlane(Conductor):
 
     kinds = (crds.POD,)
 
-    def __init__(self, store, namespace, coords, trace=None, *,
+    def __init__(self, store, namespace, coords, trace=None, *, api=None,
                  window: float = 5.0, publish_interval: float = 0.2,
                  clock=time.monotonic):
         super().__init__(store, "metrics-plane", trace)
         self.namespace = namespace
         self.coords = coords
+        self.api = ensure_api(api, store, namespace, coords, trace)
         self.window = window
         self.publish_interval = publish_interval
         self.clock = clock
@@ -162,22 +164,25 @@ class MetricsPlane(Conductor):
         now = self.clock()
         if not force and now - self._last_publish.get(job, -1e9) < self.publish_interval:
             return False
-        if not self.store.exists(crds.JOB, job, self.namespace):
+        job_res = self.store.try_get(crds.JOB, job, self.namespace)
+        if job_res is None or job_res.terminating:
             return False  # job torn down: don't resurrect labeled resources
         self._last_publish[job] = now
         rollup = self.aggregate(job)
         name = crds.metrics_name(job)
         if not self.store.exists(crds.METRICS, name, self.namespace):
             try:
-                self.store.create(crds.make_metrics(job, self.namespace))
-            except Exception:  # lost a create race; the update below lands
+                self.api.metrics.create(crds.make_metrics(job, self.namespace))
+            except Exception:  # lost a create race (or teardown began and
+                # the owner is terminating); the update below lands if the
+                # resource exists, no-ops otherwise
                 pass
             if not self.store.exists(crds.JOB, job, self.namespace):
                 # teardown swept the job between our existence check and the
                 # create: remove the orphan or wait_terminated never drains
                 self.store.try_delete(crds.METRICS, name, self.namespace)
                 return False
-        self.coords["metrics"].submit_status(
+        self.api.metrics.patch_status(
             name, {**rollup, "updatedAt": now}, requester=self.name)
         self._record("publish", (crds.METRICS, self.namespace, name),
                      f"regions={len(rollup['regions'])}")

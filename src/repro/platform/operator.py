@@ -10,15 +10,25 @@ rest.  The causal chains from §4.4:
   3. pod failure/delete -> pod controller bumps launchCount (PE coordinator)
   4. generation change  -> job controller rewrites ConfigMaps; pod conductor
                            restarts only PEs whose metadata changed
-  5. width decrease     -> retiring PEs enter Draining (PE status) and their
-                           pods get a drain request (pod status); the
-                           kubelet forwards it to the runtime + marks the
-                           fabric endpoints drain-only; the pod conductor
-                           deletes pod+pe+cm+svc only on the runtime's
-                           ``drained`` report (or immediately when draining
-                           is disabled / no pod is running)
+  5. width decrease     -> retiring PE/Pod resources get the
+                           ``streams/drain`` finalizer, the ``Draining``
+                           condition, and a two-phase delete (the store
+                           stamps ``deletion_timestamp``; the objects
+                           linger).  The kubelet forwards the drain request
+                           to the runtime + marks the fabric endpoints
+                           drain-only; on the runtime's ``drained`` report
+                           the pod conductor removes the finalizers and the
+                           store reaps (immediately when draining is
+                           disabled / no pod is running).
+  6. job deletion       -> foreground cascade: owner-ref dependents reap
+                           bottom-up, mid-drain branches held open by their
+                           drain finalizers — no gc_collect fixed point on
+                           the happy path (paper §8).
   *  pod conductor is the only actor that creates pods, and only in
      reaction to launchCount changes with all dependencies present.
+
+Every spec/status write goes through the typed ``ApiClient`` (one
+coordinator per kind): single-writer semantics by construction (§4.3).
 """
 
 from __future__ import annotations
@@ -30,14 +40,17 @@ import time
 from ..ckpt import CheckpointStore
 from ..core import (
     Conductor,
+    ConflictError,
     Controller,
     Coordinator,
     Event,
     EventType,
     Resource,
     ResourceStore,
+    set_condition,
 )
 from . import crds
+from .api import ApiClient, ensure_api
 from .fabric import Fabric
 from .pipeline import JobPlan, drain_handoff, plan_job
 
@@ -113,25 +126,87 @@ class RestFacade:
 # ------------------------------------------------------------ controllers
 
 
-def retire_pe(store, ns: str, job: str, pe_id: int) -> None:
+def downstream_pes(store, ns: str, job: str, meta: dict) -> list:
+    """Transitive downstream closure of a PE (by its graph metadata):
+    every PE a tuple leaving it could still have to traverse.  Walks the
+    stored ConfigMaps, so it reflects the topology the running pods
+    actually serve."""
+    seen: set = set()
+    frontier = {dst[0] for port in meta.get("outputs", ())
+                for dst in port.get("to", ())}
+    while frontier:
+        pe_id = frontier.pop()
+        if pe_id in seen:
+            continue
+        seen.add(pe_id)
+        cm = store.try_get(crds.CONFIG_MAP, crds.cm_name(job, pe_id), ns)
+        if cm is None:
+            continue
+        for port in cm.spec.get("data", {}).get("outputs", ()):
+            frontier.update(dst[0] for dst in port.get("to", ())
+                            if dst[0] not in seen)
+    return sorted(seen)
+
+
+def release_drain_holds(api: ApiClient, job: str, retiring_pe: int,
+                        downstream: list) -> None:
+    """Drop the retiring PE's delivery-path holds: each downstream pod
+    loses this drain from its ``drainHolds`` ledger and, when the ledger
+    empties, its ``streams/path-hold`` finalizer.  Whether the pod then
+    reaps is the store's call — it may still carry its own
+    ``streams/drain`` (or the cascade's foreground) finalizer."""
+    for pe_id in downstream:
+        def release(res: Resource) -> None:
+            res.status["drainHolds"] = [
+                h for h in res.status.get("drainHolds", ())
+                if h != retiring_pe]
+            if not res.status["drainHolds"] and \
+                    crds.PATH_HOLD_FINALIZER in res.finalizers:
+                res.finalizers.remove(crds.PATH_HOLD_FINALIZER)
+
+        api.pods.edit(crds.pod_name(job, pe_id), release,
+                      requester="drain-release")
+
+
+def retire_pe(api: ApiClient, job: str, pe_id: int) -> None:
     """Remove a retired PE's resource set (pe + pod + cm + svc).
 
     The PE resource goes FIRST so the pod deletion that follows does not
     look voluntary: with the PE gone, the pod controller has no owner to
     bump a launchCount on and nothing is recreated.
+
+    Finalizer-aware and idempotent: this is the completion path of the
+    PE's OWN drain — its delivery-path holds on downstream pods are
+    released and each resource's ``streams/drain`` finalizer is removed.
+    A pod still holding the delivery path of ANOTHER in-flight drain keeps
+    its separate ``streams/path-hold`` finalizer, so the store reaps it
+    only when that drain completes too — one finalizer per obligation.
     """
-    store.try_delete(crds.PE, crds.pe_name(job, pe_id), ns)
-    store.try_delete(crds.POD, crds.pod_name(job, pe_id), ns)
-    store.try_delete(crds.CONFIG_MAP, crds.cm_name(job, pe_id), ns)
-    store.try_delete(crds.SERVICE, crds.service_name(job, pe_id), ns)
+    pod = api.pods.try_get(crds.pod_name(job, pe_id))
+    if pod is not None:
+        downstream = (pod.status.get("draining") or {}).get("downstream", ())
+        release_drain_holds(api, job, pe_id, downstream)
+    for handle, name in ((api.pes, crds.pe_name(job, pe_id)),
+                         (api.pods, crds.pod_name(job, pe_id)),
+                         (api.config_maps, crds.cm_name(job, pe_id)),
+                         (api.services, crds.service_name(job, pe_id))):
+        res = handle.try_get(name)
+        if res is None:
+            continue
+        if not res.terminating:
+            handle.delete(name)  # reaps, or stamps if finalized
+        handle.remove_finalizer(name, crds.DRAIN_FINALIZER,
+                                requester="retire")
 
 
 class JobController(Controller):
     """Runs the submission pipeline; owns Job + all derived resources."""
 
-    def __init__(self, store, namespace, coords, trace=None, fabric=None):
+    def __init__(self, store, namespace, coords, trace=None, fabric=None,
+                 api=None):
         super().__init__(store, crds.JOB, namespace, "job-controller", trace)
         self.coords = coords
+        self.api = ensure_api(api, store, namespace, coords, trace)
         # control-plane metadata only (publish counts for drain requests);
         # the controller never touches tuple data
         self.fabric = fabric
@@ -151,11 +226,13 @@ class JobController(Controller):
             res.status.update(state="Submitting", jobId=job_id)
             res.spec.setdefault("widths", {})
 
-        self.coords["job"].submit(job.name, mark, requester=self.name)
+        self.api.jobs.edit(job.name, mark, requester=self.name)
 
     # -- causal link: own Submitting write confirmed -> create resources;
     #    widths/generation change -> re-run the pipeline (§6.3)
     def on_modification(self, old, new: Resource) -> None:
+        if new.terminating:  # teardown in flight: never re-plan under it
+            return
         state = new.status.get("state")
         if state not in ("Submitting", "Submitted"):
             return
@@ -165,13 +242,22 @@ class JobController(Controller):
         ctx["applied"] = new.generation
         plan = plan_job(new.name, new.spec, new.spec.get("widths") or None,
                         generation=new.generation)
-        self._apply_plan(new, plan)
+        try:
+            self._apply_plan(new, plan)
+        except ConflictError:
+            # a teardown cascade stamped the job under this re-plan (the
+            # store refuses dependents of a terminating owner) — the
+            # cascade wins; anything genuinely conflicting is re-raised
+            job = self.store.try_get(crds.JOB, new.name, new.namespace)
+            if job is not None and not job.terminating:
+                raise
+            return
 
         def stamp(res: Resource) -> None:
             res.status["appliedGeneration"] = new.generation
             res.status["expectedPEs"] = len(plan.pes)
 
-        self.coords["job"].submit(new.name, stamp, requester=self.name)
+        self.api.jobs.edit(new.name, stamp, requester=self.name)
 
     def _apply_plan(self, job: Resource, plan: JobPlan) -> None:
         ns = job.namespace
@@ -199,31 +285,30 @@ class JobController(Controller):
         # wait on a restart that already happened.
         self._retire_beyond_plan(job, plan, restarting)
         # ConfigMaps FIRST among the creations (pod dependencies — the pod
-        # conductor gates on them)
+        # conductor gates on them).  ``apply`` is create-or-replace with
+        # spec merge, so the §6.3 create-or-update dance is one verb.
         for pe in plan.pes:
             data = new_data[pe.pe_id]
             name = crds.cm_name(job.name, pe.pe_id)
             existing = store.try_get(crds.CONFIG_MAP, name, ns)
-            if existing is None:
-                store.create(crds.make_config_map(job.name, pe.pe_id, data,
-                                                  job.generation, ns))
-            elif existing.spec["data"] != data or \
+            if existing is None or existing.spec["data"] != data or \
                     existing.spec.get("jobGeneration") != job.generation:
-                def upd(res, data=data):
-                    res.spec["data"] = data
-                    res.spec["jobGeneration"] = job.generation
-                store.update(crds.CONFIG_MAP, name, upd, namespace=ns)
+                self.api.config_maps.apply(
+                    crds.make_config_map(job.name, pe.pe_id, data,
+                                         job.generation, ns),
+                    requester=self.name)
         for pe in plan.pes:
             name = crds.service_name(job.name, pe.pe_id)
             if not store.exists(crds.SERVICE, name, ns):
-                store.create(crds.make_service(
+                self.api.services.create(crds.make_service(
                     job.name, pe.pe_id,
                     [p["portId"] for p in pe.input_ports], ns))
         # aux CRDs
         for region, width in plan.widths.items():
             name = crds.pr_name(job.name, region)
             if not store.exists(crds.PARALLEL_REGION, name, ns):
-                store.create(crds.make_parallel_region(job.name, region, width, ns))
+                self.api.parallel_regions.create(
+                    crds.make_parallel_region(job.name, region, width, ns))
         if plan.consistent_region:
             region = plan.consistent_region.get("name", "region")
             # members = stateful region participants: trainers, and sources
@@ -237,13 +322,12 @@ class JobController(Controller):
                               for o in pe.operators)]
             name = crds.cr_name(job.name, region)
             if not store.exists(crds.CONSISTENT_REGION, name, ns):
-                store.create(crds.make_consistent_region(
+                self.api.consistent_regions.create(crds.make_consistent_region(
                     job.name, region,
                     {**plan.consistent_region, "members": members}, ns))
             else:
-                def upd_cr(res, members=members):
-                    res.spec["members"] = members
-                store.update(crds.CONSISTENT_REGION, name, upd_cr, namespace=ns)
+                self.api.consistent_regions.patch(name, {"members": members},
+                                                  requester=self.name)
         for op_name, stream, props in plan.exports:
             name = f"{job.name}-export-{op_name}"
             if not store.exists(crds.EXPORT, name, ns):
@@ -251,7 +335,7 @@ class JobController(Controller):
                           if any(o.name == op_name for o in p.operators))
                 res = crds.make_export(job.name, op_name, stream, props, ns)
                 res.spec["peId"] = pe.pe_id
-                store.create(res)
+                self.api.exports.create(res)
         for op_name, sub in plan.imports:
             name = f"{job.name}-import-{op_name}"
             if not store.exists(crds.IMPORT, name, ns):
@@ -259,7 +343,7 @@ class JobController(Controller):
                           if any(o.name == op_name for o in p.operators))
                 res = crds.make_import(job.name, op_name, sub, ns)
                 res.spec["peId"] = pe.pe_id
-                store.create(res)
+                self.api.imports.create(res)
         # PEs LAST: their creation triggers the pod causal chain.
         # create-or-replace (paper §6.3): an existing PE whose operator set
         # changed gets its spec updated in place (the pod restart, if any,
@@ -270,21 +354,21 @@ class JobController(Controller):
                     "podSpec": pe.pod_spec}
             existing = store.try_get(crds.PE, name, ns)
             if existing is None:
-                store.create(crds.make_pe(job.name, pe.pe_id, want, ns))
+                self.api.pes.create(crds.make_pe(job.name, pe.pe_id, want, ns))
             elif (existing.spec.get("operators") != want["operators"] or
                   existing.spec.get("podSpec") != want["podSpec"]):
-                def upd_pe(res, want=want):
-                    res.spec.update(want)
-                store.update(crds.PE, name, upd_pe, namespace=ns)
+                self.api.pes.patch(name, want, requester=self.name)
 
     def _retire_beyond_plan(self, job: Resource, plan: JobPlan,
                             restarting: set) -> None:
         """Width decrease: retire PEs beyond the plan.  A retiring PE with a
-        live pod is not deleted — it enters the Draining state: the pod
-        gets a drain request (handoff targets computed from the NEW
-        generation's plan) and the pod conductor finalizes the deletion
-        only once the runtime reports ``drained``.  Without a live pod
-        (deterministic mode, or draining disabled) retirement is
+        live pod is not hard-deleted — PE and pod get the ``streams/drain``
+        finalizer, the ``Draining`` condition, and a drain request (handoff
+        targets computed from the NEW generation's plan), and are then
+        two-phase deleted: the store stamps ``deletion_timestamp`` and the
+        objects linger until the runtime's ``drained`` report removes the
+        finalizer (the pod conductor's completion path).  Without a live
+        pod (deterministic mode, or draining disabled) retirement is
         immediate, the seed drop behaviour."""
         ns = job.namespace
         store = self.store
@@ -293,16 +377,21 @@ class JobController(Controller):
                     for pe_res in store.list(crds.PE, ns,
                                              crds.job_labels(job.name))
                     if pe_res.spec["peId"] >= len(plan.pes)}
-        for pe_id, pe_res in retiring.items():
+        # arm DOWNSTREAM drainers first (ids are topologically ordered
+        # within a channel): if a teardown cascade races this loop, the
+        # not-yet-armed PEs it hard-kills are upstream of every armed
+        # drainer — an armed drainer never ends up flushing into a peer
+        # the teardown already tore out from under it
+        for pe_id, pe_res in sorted(retiring.items(), reverse=True):
             pod = store.try_get(crds.POD, crds.pod_name(job.name, pe_id), ns)
             drainable = (drain_cfg["enabled"] and pod is not None
                          and pod.status.get("phase") == "Running")
             if not drainable:
                 if pod is not None and pod.status.get("draining"):
                     continue  # a previous generation's drain is in flight
-                retire_pe(store, ns, job.name, pe_id)
+                retire_pe(self.api, job.name, pe_id)
                 continue
-            if pod.status.get("draining"):
+            if pod.status.get("draining") or pod.terminating:
                 continue  # already draining; the finalizer completes it
             cm = store.try_get(crds.CONFIG_MAP, crds.cm_name(job.name, pe_id),
                                ns)
@@ -320,24 +409,79 @@ class JobController(Controller):
                 [p, self.fabric.publish_count(job.name, p)]
                 for p in upstream_pes
                 if p in restarting) if self.fabric is not None else []
-            self.coords["pe"].submit_status(pe_res.name,
-                                            {"state": "Draining"},
-                                            requester=self.name)
-            self.coords["pod"].submit_status(
-                crds.pod_name(job.name, pe_id),
-                {"draining": {"requestedAt": time.time(),
-                              "timeout": drain_cfg["timeout"],
-                              "grace": drain_cfg["grace"],
-                              "upstream": upstream,
-                              "upstreamRestarting": upstream_restarting,
-                              **handoff}},
-                requester=self.name)
+            # delivery-path holds: every pod downstream of the drainer gets
+            # the drain finalizer + a ledger entry, so a job teardown that
+            # lands mid-drain cannot reap the path the drained tuples still
+            # need (released with the drained report) — zero loss even when
+            # the cascade races the drain
+            downstream = [d for d in downstream_pes(store, ns, job.name, meta)
+                          if d not in retiring and d < len(plan.pes)]
+            drain_request = {"requestedAt": time.time(),
+                             "timeout": drain_cfg["timeout"],
+                             "grace": drain_cfg["grace"],
+                             "upstream": upstream,
+                             "upstreamRestarting": upstream_restarting,
+                             "downstream": downstream,
+                             **handoff}
+            for d in downstream:
+                def hold(res: Resource, pe=pe_id) -> None:
+                    if res.terminating:
+                        return  # too late to extend its life (store rule)
+                    holds = list(res.status.get("drainHolds", ()))
+                    if pe not in holds:
+                        holds.append(pe)
+                    res.status["drainHolds"] = holds
+                    if crds.PATH_HOLD_FINALIZER not in res.finalizers:
+                        res.finalizers.append(crds.PATH_HOLD_FINALIZER)
+
+                self.api.pods.edit(crds.pod_name(job.name, d), hold,
+                                   requester=self.name)
+
+            def mark_pe(res: Resource) -> None:
+                if res.terminating and \
+                        crds.DRAIN_FINALIZER not in res.finalizers:
+                    return  # a teardown got here first; it owns the PE now
+                if crds.DRAIN_FINALIZER not in res.finalizers:
+                    res.finalizers.append(crds.DRAIN_FINALIZER)
+                res.status["state"] = "Draining"
+                set_condition(res, crds.COND_DRAINING, "True",
+                              reason="ScaleDown")
+
+            def mark_pod(res: Resource, req=drain_request) -> None:
+                if res.terminating and \
+                        crds.DRAIN_FINALIZER not in res.finalizers:
+                    return  # too late to arm: the finalizer can't be added
+                if crds.DRAIN_FINALIZER not in res.finalizers:
+                    res.finalizers.append(crds.DRAIN_FINALIZER)
+                res.status["draining"] = req
+                set_condition(res, crds.COND_DRAINING, "True",
+                              reason="ScaleDown")
+
+            pod_name = crds.pod_name(job.name, pe_id)
+            self.api.pes.edit(pe_res.name, mark_pe, requester=self.name)
+            armed = self.api.pods.edit(pod_name, mark_pod,
+                                       requester=self.name)
+            if armed is None or not armed.status.get("draining") or \
+                    crds.DRAIN_FINALIZER not in armed.finalizers:
+                # a teardown cascade raced the arming: without the finalizer
+                # + drain request no drained report will ever release the
+                # delivery-path holds — roll them back and stand aside
+                release_drain_holds(self.api, job.name, pe_id, downstream)
+                continue
+            # the retirement IS a deletion: two-phase — the finalizer keeps
+            # the objects (and the drain machinery) alive until drained
+            self.api.pes.delete(pe_res.name)
+            self.api.pods.delete(pod_name)
             self._record("drain", pe_res.key,
                          f"siblings={handoff['siblings']}")
 
-    # -- teardown: bulk deletion by label (paper §8 GC mitigation)
+    # -- teardown.  The happy path is foreground cascade deletion (the
+    # store walks owner references, holding mid-drain branches open on
+    # their finalizers) — this callback fires at the job's reap, after the
+    # cascade already emptied the subtree.  ``gcMode: "manual"`` keeps the
+    # §8 bulk-label sweep for orphan-propagated deletes.
     def on_deletion(self, job: Resource) -> None:
-        if job.spec.get("gcMode", "manual") == "manual":
+        if job.spec.get("gcMode") == "manual":
             self.store.delete_collection(namespace=job.namespace,
                                          label_selector=crds.job_labels(job.name))
         self.ctx.pop(job.name, None)
@@ -358,7 +502,8 @@ class PEController(Controller):
     # causal link 2: voluntary deletion -> recreate (if still expected)
     def on_deletion(self, pe: Resource) -> None:
         job = self.store.try_get(crds.JOB, pe.spec["job"], pe.namespace)
-        if job is None or job.status.get("state") not in ("Submitted", "Submitting"):
+        if job is None or job.terminating or \
+                job.status.get("state") not in ("Submitted", "Submitting"):
             return
         plan = plan_job(job.name, job.spec, job.spec.get("widths") or None,
                         generation=job.generation)
@@ -375,14 +520,28 @@ class PEController(Controller):
 class PodController(Controller):
     """Overrides kubelet restart: failures route through the PE coordinator."""
 
-    def __init__(self, store, namespace, coords, trace=None):
+    def __init__(self, store, namespace, coords, trace=None, api=None):
         super().__init__(store, crds.POD, namespace, "pod-controller", trace)
         self.coords = coords
+        self.api = ensure_api(api, store, namespace, coords, trace)
 
     # causal link 3a: pod failure -> bump owning PE launch count
     def on_modification(self, old, new: Resource) -> None:
         was = (old.status.get("phase") if old else None)
         if new.status.get("phase") == "Failed" and was != "Failed":
+            if new.status.get("drainHolds"):
+                # a dead pod cannot serve the delivery path its hold was
+                # protecting — drop the hold so the restart chain can free
+                # the name and recreate it (the fabric's residual carryover
+                # preserves its ring across the restart; keeping the corpse
+                # would stall the drain into its timeout instead)
+                def clear_holds(res: Resource) -> None:
+                    res.status["drainHolds"] = []
+                    if crds.PATH_HOLD_FINALIZER in res.finalizers:
+                        res.finalizers.remove(crds.PATH_HOLD_FINALIZER)
+
+                self.api.pods.edit(new.name, clear_holds,
+                                   requester=self.name)
             self.store.try_delete(crds.POD, new.name, new.namespace)
             self._bump(new)
 
@@ -396,11 +555,12 @@ class PodController(Controller):
     def _bump(self, pod: Resource) -> None:
         pe_name = crds.pe_name(pod.spec["job"], pod.spec["peId"])
         pe = self.store.try_get(crds.PE, pe_name, pod.namespace)
-        if pe is not None and pe.status.get("state") == "Draining":
-            # a draining PE that fails/vanishes is not restarted — it was
-            # leaving anyway; finish the retirement instead of resurrecting
-            retire_pe(self.store, pod.namespace, pod.spec["job"],
-                      pod.spec["peId"])
+        if pe is not None and (pe.terminating or
+                               pe.status.get("state") == "Draining"):
+            # a draining/terminating PE that fails/vanishes is not
+            # restarted — it was leaving anyway; finish the retirement
+            # (drop its finalizers) instead of resurrecting it
+            retire_pe(self.api, pod.spec["job"], pod.spec["peId"])
             self._record("retire-failed-drain", pod.key)
             return
         self.coords["pe"].submit(
@@ -456,17 +616,24 @@ class PodConductor(Conductor):
 
     kinds = (crds.PE, crds.CONFIG_MAP, crds.POD, crds.SERVICE)
 
-    def __init__(self, store, namespace, coords, trace=None):
+    def __init__(self, store, namespace, coords, trace=None, api=None):
         super().__init__(store, "pod-conductor", trace)
         self.namespace = namespace
         self.coords = coords
+        self.api = ensure_api(api, store, namespace, coords, trace)
         self._cm_seen: dict = {}  # cm name -> last graph data applied
 
     def on_event(self, event: Event) -> None:
         res = event.resource
         if res.kind == crds.POD and event.type == EventType.MODIFIED and \
                 res.status.get("drained") is not None:
-            self._finalize_drained(res)
+            # act on the drained TRANSITION (or whenever the finalizer is
+            # still pending — replay / a partially-failed finalization),
+            # not on every later status write to the lingering pod
+            if event.old is None or \
+                    event.old.status.get("drained") is None or \
+                    crds.DRAIN_FINALIZER in res.finalizers:
+                self._finalize_drained(res)
             return
         if res.kind == crds.PE and event.type != EventType.DELETED:
             self._reconcile_pe(res)
@@ -479,24 +646,34 @@ class PodConductor(Conductor):
             self._reconcile_cm(event, res)
 
     def _finalize_drained(self, pod: Resource) -> None:
-        """Drain complete: ONLY NOW is the retiring PE's pod deleted (the
-        §6.3 chain's new last link).  Gated on the PE being in the Draining
-        state so a stray ``drained`` status cannot delete a live PE."""
+        """Drain complete: the ``drained`` report is the ``streams/drain``
+        finalizer's removal trigger — dropping it lets the store reap the
+        two-phase-deleted PE/pod (the §6.3 chain's new last link).  Gated
+        on the PE actually draining so a stray ``drained`` status cannot
+        take down a live PE."""
         job, pe_id = pod.spec["job"], pod.spec["peId"]
         pe = self.store.try_get(crds.PE, crds.pe_name(job, pe_id),
                                 self.namespace)
-        if pe is None or pe.status.get("state") != "Draining":
+        if pe is None or not (pe.terminating or
+                              pe.status.get("state") == "Draining"):
             return
-        retire_pe(self.store, self.namespace, job, pe_id)
         stats = pod.status.get("drained") or {}
+        self.api.pods.edit(
+            pod.name,
+            lambda r: set_condition(
+                r, crds.COND_DRAINED, "True",
+                reason="Clean" if stats.get("clean") else "Timeout",
+                message=f"dropped={stats.get('tuplesDropped', 0)}"),
+            requester=self.name)
+        retire_pe(self.api, job, pe_id)
         self._record("retire", pod.key,
                      f"dropped={stats.get('tuplesDropped', 0)};"
                      f"handedOff={stats.get('handedOff', 0)}")
 
     def _reconcile_pe(self, pe: Resource) -> None:
         job, pe_id = pe.spec["job"], pe.spec["peId"]
-        if pe.status.get("state") == "Draining":
-            return  # a retiring PE never gets a fresh pod
+        if pe.terminating or pe.status.get("state") == "Draining":
+            return  # a retiring/terminating PE never gets a fresh pod
         want = pe.status.get("launchCount", 0)
         if want < 1:
             return
@@ -518,7 +695,7 @@ class PodConductor(Conductor):
                                 want, cm.spec.get("jobGeneration", 1),
                                 self.namespace)
         try:
-            self.store.create(new_pod)
+            self.api.pods.create(new_pod)
             self._record("create", new_pod.key, f"launch={want}")
         except Exception:
             pass
@@ -551,10 +728,11 @@ class JobConductor(Conductor):
 
     kinds = (crds.JOB, crds.PE, crds.POD, crds.CONFIG_MAP, crds.SERVICE)
 
-    def __init__(self, store, namespace, coords, trace=None):
+    def __init__(self, store, namespace, coords, trace=None, api=None):
         super().__init__(store, "job-conductor", trace)
         self.namespace = namespace
         self.coords = coords
+        self.api = ensure_api(api, store, namespace, coords, trace)
 
     def on_event(self, event: Event) -> None:
         res = event.resource
@@ -562,32 +740,44 @@ class JobConductor(Conductor):
         if not job_name:
             return
         job = self.store.try_get(crds.JOB, job_name, self.namespace)
-        if job is None:
-            return
+        if job is None or job.terminating:
+            return  # teardown in flight: no further life-cycle churn
         expected = job.status.get("expectedPEs")
         if expected is None:
             return
         pes = self.store.list(crds.PE, self.namespace, crds.job_labels(job_name))
         pods = self.store.list(crds.POD, self.namespace, crds.job_labels(job_name))
         patch: dict = {}
+        conds: list = []  # (type, status, reason)
         if (job.status.get("state") == "Submitting" and len(pes) >= expected):
             patch.update(state="Submitted", submittedAt=time.time())
+            conds.append((crds.COND_SUBMITTED, "True", "PipelineApplied"))
         healthy = [p for p in pods
                    if (p.status.get("phase") == "Running" and p.status.get("connected"))
                    or p.status.get("phase") == "Succeeded"]
         full = (len(healthy) >= expected and len(pods) >= expected)
         if full and not job.status.get("fullHealth"):
             patch.update(fullHealth=True, fullHealthAt=time.time())
+            conds.append((crds.COND_FULL_HEALTH, "True", "AllPodsHealthy"))
         elif not full and job.status.get("fullHealth"):
             patch.update(fullHealth=False)
+            conds.append((crds.COND_FULL_HEALTH, "False",
+                          f"healthy={len(healthy)}/{expected}"))
         done = [p for p in pods if p.status.get("phase") == "Succeeded"
                 or p.status.get("sourceDone")]
         if done and job.status.get("state") == "Submitted":
             src_pes = [p for p in pods if p.status.get("sourceDone")]
             if src_pes:
                 patch.setdefault("sourcesDone", len(src_pes))
-        if patch:
-            self.coords["job"].submit_status(job_name, patch, requester=self.name)
+        if patch or conds:
+            def write(res: Resource, patch=patch, conds=conds) -> None:
+                res.status.update(patch)
+                for ctype, status, reason in conds:
+                    # observedGeneration defaults to the generation current
+                    # at write time — consumers can spot stale conditions
+                    set_condition(res, ctype, status, reason=reason)
+
+            self.api.jobs.edit(job_name, write, requester=self.name)
 
 
 class SubscriptionBroker(Conductor):

@@ -358,6 +358,11 @@ def drain_handoff(plan: JobPlan, meta: dict) -> dict:
     residual tuples to when its ``drain_timeout`` expires before it can
     process them itself.  Empty when the retiring operator is outside any
     region (nothing to hand off to) or the region collapsed to width 0.
+
+    The result rides in the pod's drain request, next to the ``downstream``
+    closure the operator uses for delivery-path holds: together they are
+    what the ``streams/drain`` finalizer promises to resolve before the
+    retiring resources may be reaped (see ``operator.py``).
     """
     op0 = (meta.get("operators") or [{}])[0]
     region = op0.get("region")

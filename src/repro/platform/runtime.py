@@ -445,6 +445,18 @@ class PERuntime(threading.Thread):
     def draining(self) -> bool:
         return self._drain is not None
 
+    def drain_upstream_gone(self, pe_id: int) -> None:
+        """An upstream this drain was gated on is gone FOR GOOD (its pod
+        stopped with no PE left to recreate it — a teardown, not a
+        restart): nothing more can ever arrive from it, so waiting for its
+        republish would only stall the drain into its timeout fallback."""
+        d = self._drain
+        if d is None:
+            return
+        d["upstreamRestarting"] = [(p, c) for p, c in d["upstreamRestarting"]
+                                   if p != pe_id]
+        d["upstream"] = [p for p in d["upstream"] if p != pe_id]
+
     def _drain_expired(self) -> bool:
         return self._drain is not None and \
             time.monotonic() >= self._drain_deadline

@@ -21,6 +21,7 @@ from repro.core import (
     Resource,
     ResourceStore,
     Runtime,
+    TerminatingError,
 )
 
 
@@ -238,6 +239,111 @@ def test_causal_chain_deterministic_under_interleaving(schedule, n_pes):
         assert p.spec["launch"] == 1
     for pe in s.list(kind="PE"):
         assert pe.status["launchCount"] == 1
+
+
+class Drainer(Controller):
+    """Drain-controller-like: observes an owned kind becoming terminating
+    (two-phase delete stamped) and, after its 'drain' completes, removes
+    the finalizer — the reap trigger."""
+
+    FINALIZER = "streams/drain"
+
+    def __init__(self, store, kind):
+        super().__init__(store, kind)
+        self.drained: list = []
+
+    def on_modification(self, old, new):
+        if new.terminating and self.FINALIZER in new.finalizers:
+            self.drained.append(new.name)
+            self.store.remove_finalizer(new.kind, new.name, self.FINALIZER,
+                                        namespace=new.namespace)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 4), min_size=0, max_size=80),
+       st.integers(1, 5))
+def test_finalizer_deletion_converges_under_interleaving(schedule, n_pods):
+    """Two-phase deletion racing finalizer removal: any event-delivery
+    order converges to every finalized object reaped exactly once."""
+    s = ResourceStore()
+    drainer = Drainer(s, "Pod")
+    rt = Runtime(s, threaded=False)
+    rt.register(drainer)
+    for i in range(n_pods):
+        s.create(Resource(kind="Pod", name=f"p{i}",
+                          finalizers=[Drainer.FINALIZER]))
+        s.delete("Pod", f"p{i}")  # stamps; the drainer will release it
+    it = iter(schedule)
+
+    def order(nonempty):
+        try:
+            return nonempty[next(it) % len(nonempty)]
+        except StopIteration:
+            return nonempty[0]
+
+    rt.drain(order=order)
+    assert s.list(kind="Pod") == []  # everything reaped
+    deleted = [e.resource.name for e in s.event_log
+               if e.type == EventType.DELETED]
+    assert sorted(deleted) == sorted(f"p{i}" for i in range(n_pods))
+    assert len(deleted) == len(set(deleted))  # exactly once each
+    assert sorted(set(drainer.drained)) == sorted(f"p{i}"
+                                                  for i in range(n_pods))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 4), min_size=0, max_size=120),
+       st.integers(1, 4))
+def test_foreground_cascade_converges_under_adversarial_drains(schedule,
+                                                               n_pes):
+    """Foreground cascade over a Job -> PE -> Pod tree whose pods drain
+    asynchronously (finalizer removed only when the drain controller gets
+    around to it, in an adversarial order): the tree always empties, the
+    job reaps last, and gc_collect is never needed."""
+    s = ResourceStore()
+    drainer = Drainer(s, "Pod")
+    pe_ctrl = Controller(s, "PE")
+    job_ctrl = Controller(s, "Job")
+    rt = Runtime(s, threaded=False)
+    rt.register(drainer)
+    rt.register(pe_ctrl)
+    rt.register(job_ctrl)
+    s.create(Resource(kind="Job", name="j", labels={"job": "j"}))
+    for i in range(n_pes):
+        s.create(Resource(kind="PE", name=f"pe{i}", labels={"job": "j"},
+                          owner_refs=(OwnerRef("Job", "j"),)))
+        s.create(Resource(kind="Pod", name=f"pod{i}", labels={"job": "j"},
+                          owner_refs=(OwnerRef("PE", f"pe{i}"),),
+                          finalizers=[Drainer.FINALIZER]))
+    s.delete("Job", "j", propagation="foreground")
+    assert s.exists("Job", "j")  # held open by the draining pods
+    it = iter(schedule)
+
+    def order(nonempty):
+        try:
+            return nonempty[next(it) % len(nonempty)]
+        except StopIteration:
+            return nonempty[0]
+
+    rt.drain(order=order)
+    assert s.list(label_selector={"job": "j"}) == []
+    assert s.gc_runs == 0
+    deleted = [e.resource.kind for e in s.event_log
+               if e.type == EventType.DELETED]
+    assert deleted[-1] == "Job"  # owner reaps last, dependents first
+    assert len(deleted) == 2 * n_pes + 1  # exactly once each
+
+
+def test_delete_racing_finalizer_addition_is_rejected():
+    """The convergence guarantee's other half: once deletion is stamped, a
+    racing actor cannot extend the object's life with a new finalizer."""
+    s = ResourceStore()
+    s.create(Resource(kind="Pod", name="p", finalizers=["a"]))
+    s.delete("Pod", "p")
+    with pytest.raises(TerminatingError):
+        s.update("Pod", "p", lambda r: r.finalizers.append("b"))
+    s.remove_finalizer("Pod", "p", "a")
+    assert not s.exists("Pod", "p")
 
 
 def test_causal_trace_records_chain():

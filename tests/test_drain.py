@@ -21,7 +21,8 @@ import time
 
 import pytest
 
-from repro.core import Coordinator, Event, EventType, ResourceStore, wait_for
+from repro.core import (Coordinator, Event, EventType, ResourceStore,
+                        wait_for)
 from repro.platform import Platform, crds
 from repro.platform.autoscale import AutoscaleConductor
 from repro.platform.fabric import Fabric, TupleQueue
@@ -320,6 +321,56 @@ def test_drain_timeout_without_sibling_counts_drops():
     assert rt.rest.metrics[-1]["tuplesDropped"] == 25
 
 
+# -------------------------------------- drain finalizer: dual obligations
+
+
+def _held_draining_pod(store):
+    """A pod that is BOTH draining itself and holding the delivery path
+    for another in-flight drain (PE 7) — one finalizer per obligation, so
+    the store's last-finalizer bookkeeping arbitrates the reap."""
+    pod = crds.make_pod("j", 3, {"pod_spec": {}}, 1, 1)
+    pod.finalizers = [crds.DRAIN_FINALIZER, crds.PATH_HOLD_FINALIZER]
+    pod.status.update(draining={"downstream": []}, drainHolds=[7])
+    store.create(pod)
+    store.delete(crds.POD, pod.name)  # two-phase: terminating, held
+    return pod.name
+
+
+def test_retire_keeps_path_hold_finalizer():
+    """Own drain completing removes only streams/drain; the pod survives
+    on its path-hold until the drain it serves completes too."""
+    from repro.platform.api import ApiClient
+    from repro.platform.operator import release_drain_holds, retire_pe
+
+    store = ResourceStore()
+    api = ApiClient(store)
+    name = _held_draining_pod(store)
+    retire_pe(api, "j", 3)  # own drain over
+    survivor = store.get(crds.POD, name)
+    assert survivor.terminating
+    assert survivor.finalizers == [crds.PATH_HOLD_FINALIZER]
+    release_drain_holds(api, "j", 7, [3])  # drain 7 over: last obligation
+    assert not store.exists(crds.POD, name)
+
+
+def test_hold_release_keeps_own_drain_finalizer():
+    """The reverse race: the hold releasing first must NOT reap a pod
+    whose own drain is still in flight; its retirement reaps."""
+    from repro.platform.api import ApiClient
+    from repro.platform.operator import release_drain_holds, retire_pe
+
+    store = ResourceStore()
+    api = ApiClient(store)
+    name = _held_draining_pod(store)
+    release_drain_holds(api, "j", 7, [3])  # hold gone, own drain pending
+    survivor = store.get(crds.POD, name)
+    assert survivor.terminating
+    assert survivor.finalizers == [crds.DRAIN_FINALIZER]
+    assert survivor.status.get("drainHolds") == []
+    retire_pe(api, "j", 3)  # own drain over: last obligation
+    assert not store.exists(crds.POD, name)
+
+
 # ----------------------------------------------- metrics plane drop ledger
 
 
@@ -377,8 +428,10 @@ def _sink_seen(p, job):
 @pytest.mark.slow
 def test_scaledown_drain_loses_zero_tuples_under_load():
     """Acceptance: a loaded non-consistent region scaled 2 -> 1 mid-stream
-    delivers every emitted tuple to the sink; retiring PEs pass through
-    Draining and their retirement is finalized by the pod conductor."""
+    delivers every emitted tuple to the sink; retiring PE/Pod resources
+    carry the ``streams/drain`` finalizer through a two-phase delete, the
+    drained report removes it (the store reaps), and the subsequent job
+    deletion completes by foreground cascade with no gc_collect call."""
     n_tuples = 800
     p = Platform(num_nodes=4)
     try:
@@ -404,6 +457,116 @@ def test_scaledown_drain_loses_zero_tuples_under_load():
         assert not [x for x in p.store.list(crds.PE, "default",
                                             crds.job_labels("app"))
                     if x.status.get("state") == "Draining"]
+        # the retirement went through the finalizer machinery: the event log
+        # shows a terminating pod carrying streams/drain + the Draining
+        # condition, whose reap strictly follows its drained report
+        _assert_finalizer_drain(p.store, "app")
+        # teardown: foreground cascade, no gc_collect fixed point
+        p.delete_job("app")
+        assert p.wait_terminated("app", 60)
+        assert p.store.gc_runs == 0
+    finally:
+        p.shutdown()
+
+
+def _drain_events(store, job):
+    """(stamped, drained-report, reap) event seqs per DRAINING pod (one
+    that carries an actual drain request — delivery-path holds are a
+    separate role, asserted separately)."""
+    stamped, drained, reaped = {}, {}, {}
+    for ev in store.event_log:
+        res = ev.resource
+        if res.kind != crds.POD or res.spec.get("job") != job:
+            continue
+        if ev.type == EventType.MODIFIED and res.terminating and \
+                crds.DRAIN_FINALIZER in res.finalizers and \
+                res.status.get("draining"):
+            stamped.setdefault(res.name, ev.seq)
+            if res.status.get("drained") is not None:
+                drained.setdefault(res.name, ev.seq)
+        if ev.type == EventType.DELETED and res.name in stamped:
+            reaped.setdefault(res.name, ev.seq)
+    return stamped, drained, reaped
+
+
+def _assert_finalizer_drain(store, job, expect_n=None):
+    from repro.core import get_condition
+
+    stamped, drained, reaped = _drain_events(store, job)
+    assert stamped, "no pod went through the streams/drain finalizer"
+    if expect_n is not None:
+        assert len(stamped) == expect_n
+    for name, seq in stamped.items():
+        assert name in drained, f"{name} reaped without a drained report"
+        assert name in reaped, f"{name} never reaped"
+        assert seq < drained[name] < reaped[name], \
+            f"{name}: reap did not wait for the drained report"
+    # the Draining condition stood on the terminating pod
+    for ev in store.event_log:
+        res = ev.resource
+        if res.kind == crds.POD and res.name in stamped and res.terminating:
+            assert get_condition(res, crds.COND_DRAINING) is not None
+            break
+
+
+@pytest.mark.slow
+def test_job_delete_mid_drain_completes_via_finalizer():
+    """Acceptance: deleting a job while loaded PEs are MID-DRAIN completes
+    through the streams/drain finalizer — the foreground cascade holds the
+    draining branch open until the drained report lands, the drain loses
+    nothing it was responsible for, everything reaps, and gc_collect is
+    never called."""
+    n_tuples = 2000
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("app", {
+            "app": {"type": "streams", "width": 2, "pipeline_depth": 2,
+                    "source": {"tuples": n_tuples, "rate_sleep": 0.0005},
+                    "channel": {"work_sleep": 0.002}},
+            "drain": {"timeout": 20.0, "grace": 0.2},
+        })
+        assert p.wait_full_health("app", 60)
+        assert wait_for(lambda: _sink_seen(p, "app") > 50, 30)
+        p.set_width("app", "par", 1)
+        # catch the drain in flight: a pod is terminating with the finalizer
+        assert wait_for(
+            lambda: any(crds.DRAIN_FINALIZER in pod.finalizers
+                        and pod.terminating and not pod.status.get("drained")
+                        for pod in p.pods("app")), 30), "drain never started"
+        p.delete_job("app")  # foreground cascade lands mid-drain
+        assert p.wait_terminated("app", 90), \
+            f"teardown stuck: {[r.key for r in p.store.list(namespace='default', label_selector=crds.job_labels('app'))]}"
+        assert p.store.gc_runs == 0
+        # the draining pod was reaped only after its drained report
+        _assert_finalizer_drain(p.store, "app")
+        # the drain machinery itself lost nothing: every drained report
+        # accounts its backlog as processed or handed off, not dropped
+        _, drained, _ = _drain_events(p.store, "app")
+        reports = {}
+        for ev in p.store.event_log:
+            if ev.resource.kind == crds.POD and \
+                    ev.resource.status.get("drained") is not None:
+                reports[ev.resource.name] = ev.resource.status["drained"]
+        assert reports
+        for name, rep in reports.items():
+            assert rep.get("tuplesDropped", 0) == 0, \
+                f"{name} dropped tuples during teardown drain: {rep}"
+        # delivery-path holds: every pod downstream of a drainer reaped
+        # only AFTER the last drained report it was holding for
+        last_drained = max(drained.values())
+        held_reaps = {}
+        for ev in p.store.event_log:
+            res = ev.resource
+            if res.kind != crds.POD or res.spec.get("job") != "app":
+                continue
+            if ev.type == EventType.MODIFIED and res.status.get("drainHolds"):
+                held_reaps.setdefault(res.name, None)
+            elif ev.type == EventType.DELETED and res.name in held_reaps:
+                held_reaps[res.name] = ev.seq
+        assert held_reaps, "no delivery-path holds were placed"
+        for name, seq in held_reaps.items():
+            assert seq is not None and seq > last_drained, \
+                f"held pod {name} reaped before the drain completed"
     finally:
         p.shutdown()
 

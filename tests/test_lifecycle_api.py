@@ -1,0 +1,386 @@
+"""Declarative lifecycle API: finalizers + two-phase deletion, conditions
+with observedGeneration, apply/patch verbs, foreground cascade deletion,
+watch-based condition waits, the typed ApiClient, and the single-writer
+invariant (no spec mutation bypasses a coordinator) asserted on a live
+platform run via CausalTrace."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    AlreadyExistsError,
+    CausalTrace,
+    ConflictError,
+    EventType,
+    FOREGROUND_FINALIZER,
+    OwnerRef,
+    Resource,
+    ResourceStore,
+    TerminatingError,
+    condition_is,
+    get_condition,
+    set_condition,
+)
+from repro.platform import Platform, crds
+from repro.platform.api import ApiClient
+
+
+# ------------------------------------------------------- resource plumbing
+
+
+def test_lifecycle_fields_roundtrip_json():
+    res = Resource(kind="Job", name="j", finalizers=["streams/drain"],
+                   deletion_timestamp=123.5,
+                   status={"conditions": [{"type": "Submitted",
+                                           "status": "True",
+                                           "observedGeneration": 3}]})
+    back = Resource.from_json(res.to_json())
+    assert back.finalizers == ["streams/drain"]
+    assert back.deletion_timestamp == 123.5
+    assert get_condition(back, "Submitted")["observedGeneration"] == 3
+    # defaults for records written before the lifecycle fields existed
+    legacy = Resource.from_json({"kind": "Job", "name": "old"})
+    assert legacy.finalizers == [] and legacy.deletion_timestamp is None
+
+
+def test_set_condition_semantics():
+    res = Resource(kind="Job", name="j", generation=4)
+    assert set_condition(res, "FullHealth", "True", now=1.0)
+    t0 = get_condition(res, "FullHealth")["lastTransitionTime"]
+    # same status: no transition-time movement, no change reported
+    assert not set_condition(res, "FullHealth", "True", now=9.0)
+    assert get_condition(res, "FullHealth")["lastTransitionTime"] == t0
+    # status flip: transition time moves
+    assert set_condition(res, "FullHealth", "False", now=9.0)
+    assert get_condition(res, "FullHealth")["lastTransitionTime"] == 9.0
+    # observedGeneration defaults to the resource's generation
+    assert get_condition(res, "FullHealth")["observedGeneration"] == 4
+    assert condition_is(res, "FullHealth", "False")
+    assert not condition_is(res, "FullHealth", "False", min_generation=5)
+
+
+# ------------------------------------------------------ two-phase deletion
+
+
+def test_delete_with_finalizer_stamps_then_reaps_on_removal():
+    s = ResourceStore()
+    s.create(Resource(kind="Pod", name="p", finalizers=["streams/drain"]))
+    out = s.delete("Pod", "p")
+    assert out.terminating  # stamped, not gone
+    assert s.exists("Pod", "p")
+    types = [e.type for e in s.event_log]
+    assert EventType.DELETED not in types  # only ADDED + MODIFIED so far
+    # second delete is a no-op (idempotent)
+    s.delete("Pod", "p")
+    assert s.exists("Pod", "p")
+    # the finalizer's removal is the reap trigger
+    s.remove_finalizer("Pod", "p", "streams/drain")
+    assert not s.exists("Pod", "p")
+    assert s.event_log[-1].type == EventType.DELETED
+
+
+def test_unfinalized_delete_is_still_immediate():
+    s = ResourceStore()
+    s.create(Resource(kind="Pod", name="p"))
+    s.delete("Pod", "p")
+    assert not s.exists("Pod", "p")
+    assert [e.type for e in s.event_log] == [EventType.ADDED,
+                                             EventType.DELETED]
+
+
+def test_terminating_object_rejects_new_finalizers():
+    s = ResourceStore()
+    s.create(Resource(kind="Pod", name="p", finalizers=["a"]))
+    s.delete("Pod", "p")
+    with pytest.raises(TerminatingError):
+        s.add_finalizer("Pod", "p", "b")
+    # status/spec writes still land while terminating (the drain report
+    # path needs them) — deletion_timestamp is store-owned and sticky
+    s.update_status("Pod", "p", {"drained": True})
+    assert s.get("Pod", "p").terminating
+    s.remove_finalizer("Pod", "p", "a")
+    assert not s.exists("Pod", "p")
+
+
+def test_stale_writer_cannot_resurrect_terminating_object():
+    s = ResourceStore()
+    s.create(Resource(kind="Pod", name="p", finalizers=["a"]))
+    stale = s.get("Pod", "p")  # fetched before the delete
+    s.delete("Pod", "p")
+    stale.deletion_timestamp = None
+    s.replace(stale)  # CAS-free replace from a stale snapshot
+    assert s.get("Pod", "p").terminating  # store kept the stamp
+
+
+# ----------------------------------------------------------- apply / patch
+
+
+def test_apply_creates_then_merges_spec():
+    s = ResourceStore()
+    r1 = s.apply(Resource(kind="Job", name="j", spec={"a": 1}))
+    assert r1.generation == 1
+    s.update_status("Job", "j", {"state": "Up"})
+    r2 = s.apply(Resource(kind="Job", name="j", spec={"b": 2}))
+    assert r2.spec == {"a": 1, "b": 2}  # merge, not replace
+    assert r2.generation == 2  # spec changed
+    assert r2.status["state"] == "Up"  # status untouched
+    r3 = s.apply(Resource(kind="Job", name="j", spec={"b": 2}))
+    assert r3.generation == 2  # no-op apply: no generation bump
+
+
+def test_patch_and_patch_status():
+    s = ResourceStore()
+    s.create(Resource(kind="Job", name="j", spec={"a": 1}))
+    assert s.patch("Job", "j", {"a": 2}).generation == 2
+    assert s.patch_status("Job", "j", {"x": 1}).generation == 2
+    assert s.get("Job", "j").status["x"] == 1
+
+
+# ------------------------------------------------------- foreground cascade
+
+
+def _tree(s):
+    s.create(Resource(kind="Job", name="j", labels={"job": "j"}))
+    for i in range(3):
+        s.create(Resource(kind="PE", name=f"pe{i}", labels={"job": "j"},
+                          owner_refs=(OwnerRef("Job", "j"),)))
+        s.create(Resource(kind="Pod", name=f"pod{i}", labels={"job": "j"},
+                          owner_refs=(OwnerRef("PE", f"pe{i}"),)))
+
+
+def test_foreground_cascade_reaps_bottom_up_without_gc():
+    s = ResourceStore()
+    _tree(s)
+    s.delete("Job", "j", propagation="foreground")
+    assert not s.list(label_selector={"job": "j"})  # whole tree gone
+    assert s.gc_runs == 0  # no fixed-point walk needed
+    # dependents reap before their owner
+    deleted = [e.resource.kind for e in s.event_log
+               if e.type == EventType.DELETED]
+    assert deleted.index("Job") == len(deleted) - 1
+    for i in range(3):
+        kinds = [e.resource.name for e in s.event_log
+                 if e.type == EventType.DELETED]
+        assert kinds.index(f"pod{i}") < kinds.index(f"pe{i}")
+
+
+def test_foreground_cascade_waits_for_drain_finalizer():
+    s = ResourceStore()
+    _tree(s)
+    s.add_finalizer("Pod", "pod1", "streams/drain")
+    s.delete("Job", "j", propagation="foreground")
+    # the drained branch holds the cascade open: pod1 -> pe1 -> job remain
+    assert {r.name for r in s.list(label_selector={"job": "j"})} == \
+        {"pod1", "pe1", "j"}
+    assert s.get("Job", "j").terminating
+    assert s.get("PE", "pe1").terminating
+    # ...and creating new dependents under the terminating tree is refused
+    with pytest.raises(ConflictError):
+        s.create(Resource(kind="Pod", name="late",
+                          owner_refs=(OwnerRef("PE", "pe1"),)))
+    # the drain report removes the finalizer: the branch reaps bottom-up
+    s.remove_finalizer("Pod", "pod1", "streams/drain")
+    assert not s.list(label_selector={"job": "j"})
+    assert s.gc_runs == 0
+
+
+def test_foreground_cascade_from_wal_recovery(tmp_path):
+    """Mid-two-phase-delete durability: a store that crashed between the
+    stamp and the finalizer removal completes the reap after recovery."""
+    wal = str(tmp_path / "wal.jsonl")
+    s = ResourceStore(wal_path=wal)
+    _tree(s)
+    s.add_finalizer("Pod", "pod2", "streams/drain")
+    s.delete("Job", "j", propagation="foreground")
+    assert s.exists("Pod", "pod2")
+    s.close()  # crash point: pod2/pe2/job are mid-deletion
+    s2 = ResourceStore.recover(wal)
+    pod = s2.get("Pod", "pod2")
+    assert pod.terminating and "streams/drain" in pod.finalizers
+    assert s2.get("Job", "j").terminating
+    assert FOREGROUND_FINALIZER in s2.get("Job", "j").finalizers
+    s2.remove_finalizer("Pod", "pod2", "streams/drain")
+    assert not s2.list(label_selector={"job": "j"})
+
+
+def test_recover_completes_interrupted_deletion(tmp_path):
+    """A crash can land between any two WAL records of a deletion; recovery
+    must finish the job: terminating objects with no finalizers reap, and
+    foreground holds whose dependents are already gone re-check and reap."""
+    import json as _json
+
+    wal = str(tmp_path / "wal.jsonl")
+    s = ResourceStore(wal_path=wal)
+    s.create(Resource(kind="Job", name="j", labels={"job": "j"}))
+    s.create(Resource(kind="Pod", name="p", labels={"job": "j"},
+                      owner_refs=(OwnerRef("Job", "j"),),
+                      finalizers=["streams/drain"]))
+    s.delete("Job", "j", propagation="foreground")  # held open by the pod
+    s.remove_finalizer("Pod", "p", "streams/drain")  # pod reaps, then job
+    s.close()
+    assert not s.exists("Job", "j")
+    lines = open(wal).read().strip().split("\n")
+    pod_reap = max(i for i, line in enumerate(lines)
+                   if _json.loads(line)["type"] == "DELETED"
+                   and _json.loads(line)["resource"]["name"] == "p")
+    assert pod_reap < len(lines) - 1  # the job's completion records follow
+    # crash point: the pod's reap hit the WAL, the job's foreground release
+    # did not — a recovered store must not leave the job terminating forever
+    with open(wal, "w") as f:
+        f.write("\n".join(lines[:pod_reap + 1]) + "\n")
+    s2 = ResourceStore.recover(wal)
+    assert not s2.exists("Job", "j")  # recovery completed the cascade
+    assert not s2.exists("Pod", "p")
+    assert s2.gc_runs == 0
+
+
+# ----------------------------------------------------- watch-based waiting
+
+
+def test_wait_for_condition_is_watch_driven():
+    s = ResourceStore()
+    s.create(Resource(kind="Job", name="j"))
+
+    def later():
+        time.sleep(0.05)
+        s.update("Job", "j", lambda r: set_condition(r, "Submitted", "True"))
+
+    threading.Thread(target=later, daemon=True).start()
+    assert s.wait_for_condition("Job", "j", "Submitted", timeout=5.0)
+    # already-true fast path and timeout path
+    assert s.wait_for_condition("Job", "j", "Submitted", timeout=0.01)
+    assert not s.wait_for_condition("Job", "j", "Absent", timeout=0.05)
+    assert not s._subs  # every wait unsubscribed its watch
+
+
+def test_wait_deleted():
+    s = ResourceStore()
+    s.create(Resource(kind="Pod", name="p", finalizers=["f"]))
+    s.delete("Pod", "p")
+
+    def later():
+        time.sleep(0.05)
+        s.remove_finalizer("Pod", "p", "f")
+
+    threading.Thread(target=later, daemon=True).start()
+    assert s.wait_deleted("Pod", "p", timeout=5.0)
+
+
+# ------------------------------------------------------------- typed client
+
+
+def test_api_client_routes_writes_through_coordinators():
+    store = ResourceStore()
+    trace = CausalTrace()
+    api = ApiClient(store, "default", trace=trace)
+    job = api.jobs.create(crds.make_job("j", {"app": {"type": "streams"}}))
+    assert job.kind == crds.JOB
+    api.jobs.patch("j", {"widths": {"par": 3}}, requester="test")
+    api.jobs.set_condition("j", crds.COND_SUBMITTED, "True", requester="test")
+    cond = api.jobs.condition("j", crds.COND_SUBMITTED)
+    assert cond["status"] == "True"
+    assert cond["observedGeneration"] == api.jobs.get("j").generation
+    # every write surfaced through the job coordinator in the trace
+    actors = {a for (a, _, k, _) in trace.entries if k[0] == crds.JOB}
+    assert actors == {"job-coordinator"}
+    # typed handles share the platform coordinator registry keys
+    assert set(api.coords) >= {"job", "pe", "pod", "pr", "cr", "cm", "svc"}
+
+
+def test_api_apply_and_finalizer_verbs():
+    api = ApiClient(ResourceStore(), "default")
+    api.scaling_policies.apply(crds.make_scaling_policy("j", "par",
+                                                        max_width=4))
+    out = api.scaling_policies.apply(crds.make_scaling_policy("j", "par",
+                                                              max_width=8))
+    assert out.spec["maxWidth"] == 8  # server-side apply merged the spec
+    api.scaling_policies.add_finalizer(crds.policy_name("j", "par"), "hold")
+    api.scaling_policies.delete(crds.policy_name("j", "par"))
+    assert api.scaling_policies.get(crds.policy_name("j", "par")).terminating
+    api.scaling_policies.remove_finalizer(crds.policy_name("j", "par"),
+                                          "hold")
+    assert not api.scaling_policies.exists(crds.policy_name("j", "par"))
+
+
+def test_api_rejects_cross_kind_resources():
+    api = ApiClient(ResourceStore(), "default")
+    with pytest.raises(AssertionError):
+        api.pods.create(crds.make_job("j", {}))
+
+
+# --------------------------------------- single-writer by construction
+
+
+def test_no_spec_mutation_bypasses_a_coordinator():
+    """CausalTrace invariant over a real platform scenario: every MODIFIED
+    event that changed a spec has a coordinator 'modify' record for the
+    same resource — single-writer semantics hold by construction, not by
+    discipline (deterministic runtime: no threads, total replayable
+    order)."""
+    p = Platform(num_nodes=0, threaded=False, with_cluster=False)
+    try:
+        p.submit("app", {"app": {"type": "streams", "width": 2,
+                                 "pipeline_depth": 1}})
+        p.runtime.drain()
+        p.set_width("app", "par", 3)  # the §6.3 generation-change chain
+        p.runtime.drain()
+        p.set_scaling_policy("app", "par", max_width=4)
+        p.runtime.drain()
+        p.set_width("app", "par", 1)  # scale-down: retire + (no-pod) drop
+        p.runtime.drain()
+
+        spec_changes: dict = {}
+        for ev in p.store.event_log:
+            if ev.type == EventType.MODIFIED and ev.old is not None \
+                    and ev.old.spec != ev.resource.spec:
+                key = ev.resource.key
+                spec_changes[key] = spec_changes.get(key, 0) + 1
+        assert spec_changes, "scenario produced no spec edits to check"
+        coordinator_writes: dict = {}
+        for actor, action, key, _ in p.trace.entries:
+            if actor.endswith("-coordinator") and action == "modify":
+                coordinator_writes[key] = coordinator_writes.get(key, 0) + 1
+        for key, n in spec_changes.items():
+            assert coordinator_writes.get(key, 0) >= n, \
+                f"spec of {key} mutated {n}x with only " \
+                f"{coordinator_writes.get(key, 0)} coordinator writes"
+    finally:
+        p.shutdown()
+
+
+# --------------------------------------------- platform-level life cycle
+
+
+def test_platform_deterministic_teardown_is_cascade_not_gc():
+    """Deterministic-mode teardown: delete_job cascades through owner refs,
+    the store empties, and gc_collect is never called."""
+    p = Platform(num_nodes=0, threaded=False, with_cluster=False)
+    try:
+        p.submit("app", {"app": {"type": "streams", "width": 2,
+                                 "pipeline_depth": 2}})
+        p.runtime.drain()
+        assert p.store.list(crds.PE, "default", crds.job_labels("app"))
+        p.delete_job("app")
+        p.runtime.drain()
+        assert not p.store.list(namespace="default",
+                                label_selector=crds.job_labels("app"))
+        assert p.store.gc_runs == 0
+    finally:
+        p.shutdown()
+
+
+def test_platform_manual_gcmode_keeps_bulk_sweep():
+    p = Platform(num_nodes=0, threaded=False, with_cluster=False)
+    try:
+        p.submit("app", {"app": {"type": "streams", "width": 1,
+                                 "pipeline_depth": 1},
+                         "gcMode": "manual"})
+        p.runtime.drain()
+        p.delete_job("app")
+        p.runtime.drain()
+        assert not p.store.list(namespace="default",
+                                label_selector=crds.job_labels("app"))
+    finally:
+        p.shutdown()
