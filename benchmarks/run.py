@@ -18,10 +18,16 @@
   teardown   job teardown: foreground cascade (owner-ref finalizers) vs
              gc_collect fixed point vs bulk label deletion (paper §8,
              Fig. 7c) -> results/BENCH_teardown.json
+  oversub    the paper's §8 oversubscription pathology: the seed
+             pods-per-core scheduler packs a loaded job onto one node (more
+             PEs than cores -> every hosted PE slows) vs the pressure-aware
+             plugin scheduler spreading it; plus a forced hot-node scenario
+             where the rebalance conductor migrates PEs onto freshly added
+             nodes with zero tuples lost -> results/BENCH_oversub.json
 
 ``--smoke`` runs only the cheap benchmarks (CI regression guard); it fails
-if the transport, scale-down or teardown bench does not produce its JSON
-artifact.
+if the transport, scale-down, teardown or oversub bench does not produce
+its JSON artifact.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Scales are reduced for the
 single-core CPU container; the *shape* of each comparison (scaling with
@@ -47,6 +53,15 @@ ROWS: list = []
 def emit(name: str, seconds: float, derived: str = "") -> None:
     ROWS.append((name, seconds * 1e6, derived))
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def _sink_seen(p: Platform, job: str) -> int:
+    """Tuples the job's sink has reported so far (0 before the first
+    report) — the delivered-count probe the loss benchmarks share."""
+    for pod in p.pods(job):
+        if pod.status.get("sink"):
+            return pod.status["sink"]["seen"]
+    return 0
 
 
 # ----------------------------------------------------------------- fig 7
@@ -418,10 +433,7 @@ def bench_scaledown(out_path: str | None = None, n_tuples: int = 600) -> dict:
             assert p.wait_full_health("j", 120)
 
             def sink_seen():
-                for pod in p.pods("j"):
-                    if pod.status.get("sink"):
-                        return pod.status["sink"]["seen"]
-                return 0
+                return _sink_seen(p, "j")
 
             assert wait_for(lambda: sink_seen() > 50, 60)
             n0 = len(p.pods("j"))
@@ -459,6 +471,190 @@ def bench_scaledown(out_path: str | None = None, n_tuples: int = 600) -> dict:
         json.dump(report, f, indent=2)
     emit("scaledown.zero_loss_with_drain", 0.0,
          str(report["zero_loss_with_drain"]))
+    return report
+
+
+# --------------------------------------------------------------- oversub
+
+
+def _oversub_run(profile: str, n_tuples: int) -> dict:
+    """One scheduling run of the packed-vs-spread comparison: a cluster of
+    small nodes where three carry idle 'ballast' pods (static placement
+    noise), a loaded job submitted on top, and the kubelet's CPU model on —
+    a node hosting more running PEs than cores slows every one of them.
+
+    The seed pods-per-core load factor counts the idle ballast as load and
+    the heavy channels as no more than a sink, so it packs the whole job
+    onto the ballast-free node (more PEs than cores — the §8 pathology);
+    the pressure-aware profile accounts requested cores and live pressure
+    and spreads.  Returns per-channel throughput stats + completion time.
+    """
+    from repro.core import Resource
+
+    p = Platform(num_nodes=4, cores_per_node=2, scheduler_profile=profile,
+                 cpu_model=True)
+    try:
+        # ballast: four idle pinned pods per node1..3 (never Running — pure
+        # bookkeeping noise for the load factor; tiny resource requests).
+        # The seed pods/cores count mistakes them for load and funnels the
+        # whole job onto the ballast-free node0; the pressure profile
+        # accounts their 0.1-core requests for what they are and spreads
+        # the 1.0-core channels.
+        for node_i in (1, 2, 3):
+            for j in range(4):
+                p.store.create(Resource(
+                    kind=crds.POD, name=f"ballast-{node_i}-{j}",
+                    spec={"job": "ballast", "peId": 100 + node_i * 10 + j,
+                          "pod_spec": {"nodeName": f"node{node_i}",
+                                       "resources": {"cores": 0.1}}},
+                    status={"phase": "Pending"}))
+        # flooding source + 20 ms/tuple channels: the region is the
+        # bottleneck by construction, and 20 ms sleeps sit far above the
+        # container's sleep-granularity floor, so a packed channel's
+        # stretched work_sleep (share < 1) shows directly in its delivered
+        # rate and in the stream's completion time (sleeping threads also
+        # do not contend for real host CPU — the model, not the host, is
+        # what's measured)
+        spec = {"app": {"type": "streams", "width": 4, "pipeline_depth": 1,
+                        "pre_ops": 0, "post_ops": 0,
+                        "source": {"tuples": n_tuples, "rate_sleep": 0.0},
+                        "channel": {"work_sleep": 0.02,
+                                    "placement": {"cores": 1.0},
+                                    "emit_batch": 16, "emit_batch_max": 32},
+                        "sink": {"report_every": 10}}}
+        p.submit("j", spec)
+        assert p.wait_full_health("j", 120)
+
+        def sink_seen():
+            return _sink_seen(p, "j")
+
+        # time the stream, not the control plane: first sink report ->
+        # complete; sample per-channel rates mid-stream (live window)
+        assert wait_for(lambda: sink_seen() > 0, 60)
+        t0 = time.monotonic()
+        assert wait_for(lambda: sink_seen() >= n_tuples // 2, 180)
+        ops = p.job_metrics("j").get("operators", {})
+        rates = {name: entry.get("rate", 0.0)
+                 for name, entry in ops.items() if name.startswith("ch")}
+        assert wait_for(lambda: sink_seen() >= n_tuples, 180), \
+            f"{profile}: sink saw {sink_seen()}/{n_tuples}"
+        completion_s = time.monotonic() - t0
+        placement: dict = {}
+        for pod in p.pods("j"):
+            node = pod.spec.get("nodeName")
+            placement.setdefault(node, []).append(pod.spec["peId"])
+        packed_max = max(len(v) for v in placement.values())
+        live = [r for r in rates.values() if r > 0]
+        return {"profile": profile, "completion_s": completion_s,
+                "channels_per_node_max": packed_max,
+                "placement": {k: sorted(v) for k, v in placement.items()},
+                "channel_rates": rates,
+                "mean_channel_rate": sum(live) / len(live) if live else 0.0,
+                "min_channel_rate": min(live) if live else 0.0}
+    finally:
+        p.shutdown()
+
+
+def _oversub_rebalance(n_tuples: int) -> dict:
+    """Forced hot node -> zero-loss rebalance: a loaded job lands on a
+    single 2-core node (nowhere else to go — podsPerCore far past 1), then
+    capacity is added.  The pressure plane marks the node hot, the
+    rebalance conductor migrates region PEs onto the new nodes through the
+    loss-proofed restart chain, and the finite stream still arrives
+    complete at the sink."""
+    p = Platform(num_nodes=1, cores_per_node=2, scheduler_profile="pressure",
+                 cpu_model=True, rebalance=True, pressure_interval=0.2)
+    p.rebalancer.sustain_s = 0.5
+    p.rebalancer.cooldown = 1.0
+    try:
+        spec = {"app": {"type": "streams", "width": 2, "pipeline_depth": 1,
+                        "source": {"tuples": n_tuples, "rate_sleep": 0.002},
+                        "channel": {"work_sleep": 0.002,
+                                    "emit_batch": 16, "emit_batch_max": 32},
+                        "sink": {"report_every": 10}}}
+        p.submit("j", spec)
+        assert p.wait_full_health("j", 120)
+        assert wait_for(  # the lone node is marked hot by the heartbeat
+            lambda: (p.node_pressure("node0").get("podsPerCore", 0) >= 1.0),
+            30)
+        # relief capacity arrives; the conductor should start migrating
+        t0 = time.monotonic()
+        p.add_node("relief0", 8)
+        p.add_node("relief1", 8)
+        assert wait_for(lambda: p.rebalancer.migrations >= 1, 60), \
+            "no rebalance migration despite sustained hot node + cold capacity"
+        first_migration_s = time.monotonic() - t0
+
+        def sink_seen():
+            return _sink_seen(p, "j")
+
+        assert wait_for(lambda: sink_seen() >= n_tuples, 240), \
+            f"rebalance lost tuples: sink saw {sink_seen()}/{n_tuples}"
+        moved = [pod.spec["peId"] for pod in p.pods("j")
+                 if pod.spec.get("nodeName", "").startswith("relief")]
+        return {"migrations": p.rebalancer.migrations,
+                "first_migration_s": first_migration_s,
+                "emitted": n_tuples, "delivered": sink_seen(),
+                "lost": n_tuples - sink_seen(),
+                "pes_on_relief_nodes": sorted(moved),
+                "dropped_in_metrics": p.job_metrics("j").get("tuplesDropped",
+                                                             0)}
+    finally:
+        p.shutdown()
+
+
+def bench_oversub(out_path: str | None = None, n_tuples: int = 800,
+                  rebalance_tuples: int = 600) -> dict:
+    """Oversubscription pathology (paper §8) + zero-loss rebalance.
+
+    Writes ``results/BENCH_oversub.json`` (``--smoke`` fails without it):
+    the pressure-aware scheduler must keep per-PE throughput degradation
+    on the oversubscribed topology measurably lower than the seed
+    load-factor scheduler, and the forced hot-node scenario must migrate
+    with zero tuples lost."""
+    runs = {prof: _oversub_run(prof, n_tuples)
+            for prof in ("seed", "pressure")}
+    for prof, run in runs.items():
+        emit(f"oversub.{prof}.completion", run["completion_s"],
+             f"channels_per_node_max={run['channels_per_node_max']}")
+        emit(f"oversub.{prof}.mean_channel_rate", 0.0,
+             f"{run['mean_channel_rate']:.0f} tuples/s "
+             f"(min {run['min_channel_rate']:.0f})")
+    # per-PE throughput degradation: how much of the spread placement's
+    # per-channel rate each profile loses (0 = none).  The best observed
+    # mean is the un-oversubscribed reference.
+    best = max(run["mean_channel_rate"] for run in runs.values()) or 1e-9
+    degradation = {prof: 1.0 - run["mean_channel_rate"] / best
+                   for prof, run in runs.items()}
+    rebalance = _oversub_rebalance(rebalance_tuples)
+    emit("oversub.rebalance.migrations", 0.0,
+         str(rebalance["migrations"]))
+    emit("oversub.rebalance.lost", 0.0,
+         f"{rebalance['lost']} of {rebalance['emitted']}")
+    report = {
+        "benchmark": "oversub",
+        "packed_vs_spread": runs,
+        "degradation": degradation,
+        "pressure_degrades_less":
+            degradation["pressure"] < degradation["seed"],
+        "per_pe_rate_ratio_pressure_vs_seed":
+            runs["pressure"]["mean_channel_rate"]
+            / max(runs["seed"]["mean_channel_rate"], 1e-9),
+        "completion_ratio_seed_vs_pressure":
+            runs["seed"]["completion_s"] / runs["pressure"]["completion_s"],
+        "seed_packed_more": (runs["seed"]["channels_per_node_max"]
+                             > runs["pressure"]["channels_per_node_max"]),
+        "rebalance": rebalance,
+        "rebalance_zero_loss": rebalance["lost"] == 0,
+    }
+    out = out_path or os.path.join(os.path.dirname(__file__), "..", "results",
+                                   "BENCH_oversub.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("oversub.completion_ratio", 0.0,
+         f"{report['completion_ratio_seed_vs_pressure']:.2f}x "
+         f"(seed vs pressure)")
     return report
 
 
@@ -654,12 +850,14 @@ BENCHES = {
     "transport": bench_transport,
     "scale_down": bench_scaledown,
     "teardown": bench_teardown,
+    "oversub": bench_oversub,
 }
 
-# cheap subset for CI (`--smoke`): seconds not minutes (scale_down is the
-# one Platform spin-up — a few seconds per mode — because zero-loss
-# scale-down is an acceptance criterion, not just a trajectory)
-SMOKE = ("fig7c", "table1", "transport", "scale_down", "teardown")
+# cheap subset for CI (`--smoke`): seconds not minutes (scale_down and
+# oversub are the Platform spin-ups — a few seconds per mode — because
+# zero-loss scale-down and pressure-aware scheduling are acceptance
+# criteria, not just trajectories)
+SMOKE = ("fig7c", "table1", "transport", "scale_down", "teardown", "oversub")
 
 
 def main() -> None:
@@ -687,7 +885,7 @@ def main() -> None:
     if smoke:  # the CI guard must actually guard
         results_dir = os.path.join(os.path.dirname(__file__), "..", "results")
         for artifact in ("BENCH_transport.json", "BENCH_scaledown.json",
-                         "BENCH_teardown.json"):
+                         "BENCH_teardown.json", "BENCH_oversub.json"):
             if not os.path.exists(os.path.join(results_dir, artifact)):
                 print(f"SMOKE FAIL: results/{artifact} not produced",
                       flush=True)

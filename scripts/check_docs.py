@@ -8,7 +8,10 @@ Two guarantees, so the documentation cannot silently rot:
    ``python -m repro...`` invocation resolves to a real module under
    ``src/``;
 2. every script in ``examples/`` at least imports cleanly (side-effect-free
-   top level; their ``main()`` guards keep this cheap).
+   top level; their ``main()`` guards keep this cheap);
+3. every platform/core module (``src/repro/platform``, ``src/repro/core``)
+   is referenced at least once from ``docs/ARCHITECTURE.md`` — a new
+   subsystem (e.g. ``scheduler.py``) cannot land undocumented.
 
 Run from anywhere:  python scripts/check_docs.py
 """
@@ -56,6 +59,26 @@ def check_references() -> list:
     return errors
 
 
+def check_platform_modules_documented() -> list:
+    """Every non-underscore module of the platform/core packages must be
+    mentioned (by filename) somewhere in ARCHITECTURE.md."""
+    arch = os.path.join(ROOT, "docs", "ARCHITECTURE.md")
+    if not os.path.exists(arch):
+        return []  # already reported by check_references
+    with open(arch) as f:
+        text = f.read()
+    errors = []
+    for pkg in ("src/repro/platform", "src/repro/core"):
+        for name in sorted(os.listdir(os.path.join(ROOT, pkg))):
+            if not name.endswith(".py") or name.startswith("_"):
+                continue
+            if name not in text:
+                errors.append(
+                    f"docs/ARCHITECTURE.md: platform module `{pkg}/{name}` "
+                    f"is never referenced — document the subsystem")
+    return errors
+
+
 def check_examples_import() -> list:
     examples = sorted(
         f for f in os.listdir(os.path.join(ROOT, "examples"))
@@ -81,6 +104,7 @@ def check_examples_import() -> list:
 
 def main() -> int:
     errors = check_references()
+    errors += check_platform_modules_documented()
     errors += check_examples_import()
     for err in errors:
         print(f"DOCS CHECK FAIL: {err}", file=sys.stderr)

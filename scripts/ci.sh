@@ -8,10 +8,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests"
 python -m pytest -x -q
 
-echo "== benchmark smoke (fig7c, table1, transport, scale_down, teardown)"
+echo "== benchmark smoke (fig7c, table1, transport, scale_down, teardown, oversub)"
 # drop stale artifacts so run.py's --smoke artifact gates are real
 rm -f results/BENCH_transport.json results/BENCH_scaledown.json \
-      results/BENCH_teardown.json
+      results/BENCH_teardown.json results/BENCH_oversub.json
 python benchmarks/run.py --smoke
 
 echo "== docs checks (README/ARCHITECTURE references, examples import)"

@@ -17,9 +17,10 @@ from ..core import CausalTrace, ResourceStore, Runtime, wait_for
 from . import crds
 from .api import ApiClient
 from .autoscale import AutoscaleConductor
-from .cluster import KubeletController, SchedulerController
+from .cluster import KubeletController, NodePressureMonitor
 from .fabric import Fabric
 from .metrics import MetricsPlane
+from .scheduler import NodeController, RebalanceConductor, SchedulerController
 from .operator import (
     ConsistentRegionController,
     ConsistentRegionOperator,
@@ -45,7 +46,10 @@ class Platform:
                  cores_per_node: int = 8, ckpt_root: str | None = None,
                  wal_path: str | None = None, dns_delay: float = 0.0,
                  threaded: bool = True, with_cluster: bool = True,
-                 store: ResourceStore | None = None):
+                 store: ResourceStore | None = None,
+                 scheduler_profile: str = "pressure",
+                 rebalance: bool = False, cpu_model: bool = False,
+                 pressure_interval: float = 0.5):
         self.namespace = namespace
         self.store = store or ResourceStore(wal_path=wal_path)
         self.trace = CausalTrace()
@@ -136,21 +140,39 @@ class Platform:
             self.metrics_controller, self.policy_controller,
         ]
 
-        # --- cluster substrate (Kubernetes's half)
+        # --- cluster substrate (Kubernetes's half): plugin scheduler fed by
+        # the node pressure plane, kubelets, and (opt-in) the rebalance
+        # conductor that migrates PEs off sustained-hot nodes
         self.kubelet = None
+        self.pressure_monitor = None
+        self.rebalancer = None
         if with_cluster:
             self.scheduler = SchedulerController(self.store, coords["pod"],
-                                                 namespace, self.trace)
+                                                 namespace, self.trace,
+                                                 profile=scheduler_profile)
             self.kubelet = KubeletController(self.store, coords["pod"],
                                              self.fabric, self.rest, namespace,
-                                             self.trace)
-            controllers += [self.scheduler, self.kubelet]
+                                             self.trace, cpu_model=cpu_model)
+            self.node_controller = NodeController(self.store, namespace,
+                                                  self.trace,
+                                                  scheduler=self.scheduler)
+            self.pressure_monitor = NodePressureMonitor(
+                self.store, namespace, coords, self.trace, api=self.api,
+                interval=pressure_interval)
+            self.rebalancer = RebalanceConductor(self.store, namespace, coords,
+                                                 self.trace, api=self.api,
+                                                 enabled=rebalance)
+            self.node_controller.add_listener(self.rebalancer)
+            self.pod_controller.add_listener(self.rebalancer)
+            controllers += [self.scheduler, self.kubelet, self.node_controller]
             for i in range(num_nodes):
                 self.api.nodes.create(crds.make_node(f"node{i}", cores_per_node))
 
         self.runtime = Runtime(self.store, threaded=threaded)
         for c in controllers:
             self.runtime.register(c)
+        if threaded and self.pressure_monitor is not None:
+            self.pressure_monitor.start()
 
     # ------------------------------------------------------------- actions
 
@@ -184,6 +206,19 @@ class Platform:
     def kill_pod(self, job: str, pe_id: int) -> bool:
         assert self.kubelet is not None
         return self.kubelet.kill_pod(crds.pod_name(job, pe_id))
+
+    def add_node(self, name: str, cores: int = 8,
+                 labels: dict | None = None):
+        """Grow the substrate at runtime (kubectl create node ...): the
+        node controller re-kicks unschedulable pods onto the new capacity,
+        and — with rebalancing enabled — the rebalance conductor starts
+        migrating PEs off any sustained-hot node toward it."""
+        return self.api.nodes.create(crds.make_node(name, cores, labels))
+
+    def node_pressure(self, name: str) -> dict:
+        """The pressure plane's latest heartbeat for one node."""
+        node = self.store.try_get(crds.NODE, name)
+        return dict(node.status.get("pressure") or {}) if node else {}
 
     def set_scaling_policy(self, job: str, region: str, **kw):
         """kubectl apply scalingpolicy ... (server-side apply)."""
@@ -269,6 +304,8 @@ class Platform:
 
     def shutdown(self) -> None:
         self.straggler_monitor.stop()
+        if self.pressure_monitor is not None:
+            self.pressure_monitor.stop()
         if self.kubelet is not None:
             self.kubelet.stop_all()
         self.runtime.stop()

@@ -22,11 +22,23 @@ runtime pulls its input dry / hands off -> pod deleted), so elasticity
 decisions do not cost in-flight tuples.  Two gates keep the conductor from
 fighting that machinery:
 
-- the existing health gate (restart churn must not read as low load), and
+- the existing health gate (restart churn must not read as low load),
 - a drain gate: while any pod of the job is still draining, no further
   scale decision is taken for it — a second generation change mid-drain
   would re-plan under the drainers and double the churn the drain exists
-  to absorb.
+  to absorb,
+- a rebalance gate: while the rebalance conductor is migrating one of the
+  job's PEs off a hot node, decisions hold (and vice versa — the rebalance
+  conductor holds while a drain is in flight), and
+- a pressure gate: a scale-UP is held while the node pressure plane
+  reports every node oversubscribed — widening then would amplify a hot
+  node instead of spreading onto a cold one (paper §8's oversubscription
+  complaint, closed from the policy side).
+
+Policy variants: ``backpressure`` (threshold+step), ``throughput`` (direct
+sizing), and ``pid`` — target tracking with a PID law on a region signal
+(queue fill or serving slot occupancy), anti-windup by conditional
+integration, and a hysteresis deadband (see ``decide_width_pid``).
 """
 
 from __future__ import annotations
@@ -38,6 +50,7 @@ import time
 from ..core import Conductor, Event, EventType, condition_is, get_condition
 from . import crds
 from .api import ApiClient, ensure_api
+from .scheduler import job_mid_drain
 
 
 def decide_width(current: int, region_agg: dict | None, spec: dict) -> int:
@@ -67,6 +80,55 @@ def decide_width(current: int, region_agg: dict | None, spec: dict) -> int:
     return max(lo, min(hi, want))
 
 
+def decide_width_pid(current: int, value: float | None, spec: dict,
+                     state: dict | None, now: float) -> tuple:
+    """Target-tracking PID decision (``metric: "pid"``): drive the region
+    signal named by ``spec["signal"]`` toward ``spec["setpoint"]``.
+
+    Pure function of (current width, signal value, policy spec, controller
+    state, clock): returns ``(wanted width, new state)`` where state is
+    ``{"error", "integral", "at"}``.
+
+    - **Hysteresis window**: inside the ±``hysteresis`` deadband around the
+      setpoint nothing moves and the integral stops accumulating — the
+      limit-cycle killer a bare threshold policy lacks.
+    - **Anti-windup**: the integral is accumulated *conditionally* — frozen
+      whenever the raw (unclamped) output is already saturated past
+      minWidth/maxWidth in the error's direction — and clamped to
+      ±``integralClamp``, so a long saturation episode cannot bank error
+      that later overshoots the other way.
+    - The derivative term uses the error delta over the *actual* elapsed
+      time (``dt`` capped at 10 s so a conductor pause does not explode it).
+    """
+    lo = spec.get("minWidth", 1)
+    hi = spec.get("maxWidth", max(current, lo))
+    state = dict(state or {})
+    if value is None:
+        return max(lo, min(hi, current)), state
+    setpoint = spec.get("setpoint", 0.5)
+    err = value - setpoint
+    last_at = state.get("at")
+    dt = min(now - last_at, 10.0) if last_at is not None else 0.0
+    dt = max(dt, 0.0)
+    integral = state.get("integral", 0.0)
+    if abs(err) <= spec.get("hysteresis", 0.1):
+        # deadband: on target — hold width, decay nothing, stamp the clock
+        return max(lo, min(hi, current)), \
+            {"error": err, "integral": integral, "at": now}
+    kp = spec.get("kp", 4.0)
+    ki = spec.get("ki", 0.0)
+    kd = spec.get("kd", 0.0)
+    deriv = ((err - state.get("error", err)) / dt) if dt > 0 else 0.0
+    raw = current + kp * err + ki * (integral + err * dt) + kd * deriv
+    saturating = (raw > hi and err > 0) or (raw < lo and err < 0)
+    if dt > 0 and not saturating:  # conditional integration (anti-windup)
+        clamp = abs(spec.get("integralClamp", 8.0))
+        integral = max(-clamp, min(clamp, integral + err * dt))
+    want = int(round(current + kp * err + ki * integral + kd * deriv))
+    return max(lo, min(hi, want)), {"error": err, "integral": integral,
+                                    "at": now}
+
+
 class AutoscaleConductor(Conductor):
     """Watches Metrics + ScalingPolicy (+ ParallelRegion) events and drives
     region widths toward what the policies ask for."""
@@ -83,6 +145,11 @@ class AutoscaleConductor(Conductor):
         # events arrive from several controller threads; decisions must be
         # serialized or two evaluates could double-step inside one cooldown
         self._lock = threading.Lock()
+        # PID controller state per policy, persisted to policy status only
+        # on scale actions (persisting every evaluation would turn each
+        # Metrics event into a policy event into another evaluation); a
+        # conductor restart between actions simply re-accumulates
+        self._pid: dict = {}
 
     def on_event(self, event: Event) -> None:
         if event.type == EventType.DELETED:
@@ -105,6 +172,11 @@ class AutoscaleConductor(Conductor):
             # let the in-flight drain finish before the next generation
             # change; the metrics burst that follows re-triggers evaluation
             return []
+        if self._rebalancing(job):
+            # a hot-node migration is moving a PE of this job: a generation
+            # change now would re-plan under the moving pod and double the
+            # churn (the mirror of the rebalance conductor's drain gate)
+            return []
         metrics = self.store.try_get(crds.METRICS, crds.metrics_name(job),
                                      self.namespace)
         changes = []
@@ -118,17 +190,49 @@ class AutoscaleConductor(Conductor):
             current = pr.spec.get("width", 1)
             agg = (metrics.status.get("regions", {}).get(region)
                    if metrics is not None else None)
-            want = decide_width(current, agg, pol.spec)
+            new_state = state = None
+            if pol.spec.get("metric") == "pid":
+                value = (agg or {}).get(pol.spec.get("signal", "backpressure"))
+                state = self._pid.get(pol.name, pol.status.get("pid"))
+                want, new_state = decide_width_pid(current, value, pol.spec,
+                                                   state, now)
+            else:
+                want = decide_width(current, agg, pol.spec)
+            # An evaluation discarded by the health / pressure / cooldown
+            # gates must not bank integral — that would be windup through a
+            # gate the saturation check cannot see, overshooting the
+            # setpoint the moment the gate releases.  Gated paths commit
+            # the clock and error but FREEZE the integral at its prior
+            # value (conditional integration, extended to the gates).
+            def hold_state() -> None:
+                if new_state is not None:
+                    self._pid[pol.name] = {
+                        **new_state,
+                        "integral": (state or {}).get("integral", 0.0)}
+
             if want == current:
+                if new_state is not None:
+                    self._pid[pol.name] = new_state
                 continue
             if want < current and self._unhealthy(job):
                 # restart churn (e.g. from a previous width change) drains
                 # queues while PEs are down; that transient low-backpressure
                 # reading must not trigger a spurious scale-down
+                hold_state()
+                continue
+            if want > current and self._no_cold_capacity():
+                # every node is already oversubscribed: widening would only
+                # amplify a hot node — hold until the pressure plane shows
+                # cold capacity (or the rebalance conductor frees some)
+                self._record("hold", pol.key, "no-cold-capacity")
+                hold_state()
                 continue
             cooldown = pol.spec.get("cooldown", 0.0)
             if cooldown and now - pol.status.get("lastScaleAt", 0.0) < cooldown:
+                hold_state()
                 continue
+            if new_state is not None:
+                self._pid[pol.name] = new_state
             self._scale(job, region, pol, current, want, now)
             changes.append((region, current, want))
         return changes
@@ -137,13 +241,32 @@ class AutoscaleConductor(Conductor):
         """True while a previous scale-down's drain phase is still running
         (a pod carries the ``streams/drain`` finalizer — or a drain request
         — without a drained report yet)."""
-        for pod in self.store.list(crds.POD, self.namespace,
-                                   crds.job_labels(job)):
-            mid_drain = (crds.DRAIN_FINALIZER in pod.finalizers
-                         or pod.status.get("draining"))
-            if mid_drain and not pod.status.get("drained"):
-                return True
-        return False
+        return job_mid_drain(self.store, self.namespace, job)
+
+    def _rebalancing(self, job: str) -> bool:
+        """True while the rebalance conductor is migrating a PE of ``job``
+        off a hot node (its ``Rebalancing`` condition stands until the
+        replacement pod reports Running+connected)."""
+        return any(condition_is(pe, crds.COND_REBALANCING, "True")
+                   for pe in self.store.list(crds.PE, self.namespace,
+                                             crds.job_labels(job)))
+
+    def _no_cold_capacity(self) -> bool:
+        """True when the pressure plane reports EVERY node oversubscribed
+        (``Pressure`` condition True).  No nodes / no conditions (bare
+        deterministic stores) means no pressure plane — gate inactive."""
+        nodes = self.store.list(kind=crds.NODE)
+        if not nodes:
+            return False
+        seen = False
+        for node in nodes:
+            cond = get_condition(node, crds.COND_PRESSURE)
+            if cond is None:
+                return False  # unmonitored node: assume schedulable capacity
+            seen = True
+            if cond.get("status") != "True":
+                return False
+        return seen
 
     def _unhealthy(self, job: str) -> bool:
         """True only when the job conductor has *observed* lost health (the
@@ -162,9 +285,11 @@ class AutoscaleConductor(Conductor):
         # stamp the cooldown FIRST: if the width edit lands but this actor
         # dies, replay re-evaluates against the already-changed width (no
         # double scale); the reverse order could scale twice on restart.
+        stamp = {"lastScaleAt": now, "lastWidth": want}
+        if pol.name in self._pid:
+            stamp["pid"] = self._pid[pol.name]  # controller state round-trip
         self.api.scaling_policies.patch_status(
-            pol.name, {"lastScaleAt": now, "lastWidth": want},
-            requester=self.name)
+            pol.name, stamp, requester=self.name)
         # -> ParallelRegionController -> Job (the §6.3 chain)
         self.api.parallel_regions.patch(crds.pr_name(job, region),
                                         {"width": want}, requester=self.name)

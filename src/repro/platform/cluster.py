@@ -1,107 +1,89 @@
-"""Cluster substrate: nodes, scheduler, kubelets.
+"""Cluster substrate: nodes, kubelets, and the node pressure plane.
 
 This is the "Kubernetes" half of the system (the part the paper *offloads
-to*): a scheduler controller that assigns pods to nodes honoring
-affinity/anti-affinity/nodeName constraints and balancing load, and kubelet
-controllers that start/stop the PE runtime for pods bound to their node.
-Pod *creation* and failure *handling* belong to the platform (instance
-operator), not here — exactly the paper's division of responsibility.
+to*): kubelet controllers that start/stop the PE runtime for pods bound to
+their node, and the node pressure plane — a kubelet-side heartbeat that
+publishes per-node oversubscription signals (pods-per-core, aggregate ring
+fill of hosted PEs, straggler heartbeat lag) as Node status conditions
+through the declarative API.  The *scheduler* (filter/score plugin
+pipeline consuming those conditions) lives in ``scheduler.py``; pod
+creation and failure handling belong to the platform (instance operator) —
+exactly the paper's division of responsibility.
+
+The kubelet optionally models CPU oversubscription (``cpu_model=True``):
+when a node hosts more running PEs than spec cores, every hosted runtime's
+synthetic per-tuple work is stretched by the inverse share — the §8
+pathology ("Kubernetes has problems with oversubscription") made
+measurable, which is what the ``oversub`` benchmark compares schedulers
+against.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 
-from ..core import Controller, Coordinator, Resource, ResourceStore
+from ..core import Controller, Coordinator, Resource, ResourceStore, \
+    set_condition
 from . import crds
+from .api import ensure_api
 from .fabric import Fabric
 from .runtime import PERuntime
-
-
-class SchedulerController(Controller):
-    """Assigns ``nodeName`` to pending pods (paper §6.2 semantics)."""
-
-    def __init__(self, store: ResourceStore, pod_coord: Coordinator,
-                 namespace=None, trace=None):
-        super().__init__(store, crds.POD, namespace, "scheduler", trace)
-        self.pod_coord = pod_coord
-
-    def on_addition(self, res: Resource) -> None:
-        self._maybe_schedule(res)
-
-    def on_modification(self, old, new) -> None:
-        if not new.spec.get("nodeName") and new.status.get("phase") == "Pending":
-            self._maybe_schedule(new)
-
-    def _maybe_schedule(self, pod: Resource) -> None:
-        if pod.spec.get("nodeName") or pod.terminating:
-            return
-        nodes = self.store.list(kind=crds.NODE)
-        if not nodes:
-            return
-        placed = [p for p in self.cache.values()
-                  if p.kind == crds.POD and p.spec.get("nodeName")]
-        by_node: dict = {}
-        for p in placed:
-            by_node.setdefault(p.spec["nodeName"], []).append(p)
-
-        want = pod.spec.get("pod_spec", {})
-        affinity = want.get("podAffinity", [])
-        anti = want.get("podAntiAffinity", [])
-        tags = set(want.get("nodeAffinityTags", []))
-        forced = want.get("nodeName")
-
-        def pod_labels(p):
-            return p.spec.get("pod_spec", {}).get("labels", {})
-
-        candidates = []
-        for node in nodes:
-            if forced and node.name != forced:
-                continue
-            if tags and not tags.issubset(set(node.labels)):
-                continue
-            here = by_node.get(node.name, [])
-            if any(lbl in pod_labels(p) for p in here for lbl in anti):
-                continue
-            if affinity:
-                anywhere = [p for p in placed
-                            if any(lbl in pod_labels(p) for lbl in affinity)]
-                if anywhere and not any(p.spec["nodeName"] == node.name
-                                        for p in anywhere):
-                    continue
-            load = len(here) / max(node.spec.get("cores", 8), 1)
-            candidates.append((load, node.name))
-        if not candidates:
-            self.pod_coord.submit_status(pod.name, {"phase": "Unschedulable"},
-                                         requester=self.name)
-            return
-        candidates.sort()
-        node_name = candidates[0][1]
-
-        def bind(res: Resource) -> None:
-            res.spec["nodeName"] = node_name
-
-        self.pod_coord.submit(pod.name, bind, requester=self.name)
+from .scheduler import NodeController, SchedulerController  # noqa: F401 — the
+#   scheduler moved to scheduler.py; re-exported for substrate callers
 
 
 class PodHandle:
-    def __init__(self, runtime: PERuntime, stop_event: threading.Event):
+    def __init__(self, runtime: PERuntime, stop_event: threading.Event,
+                 node: str | None = None):
         self.runtime = runtime
         self.stop_event = stop_event
+        self.node = node
 
 
 class KubeletController(Controller):
     """Starts/stops PE runtimes for pods bound to nodes (all nodes in one
-    controller here — the per-node split is an artifact of real clusters)."""
+    controller here — the per-node split is an artifact of real clusters).
+
+    With ``cpu_model=True`` the kubelet also models node CPU contention:
+    each node's running PEs share ``spec.cores`` equally, and every hosted
+    runtime stretches its synthetic per-tuple work by the inverse share
+    (see ``PERuntime``'s ``cpu_share`` hook) — oversubscribing a node
+    measurably slows every PE on it."""
 
     def __init__(self, store: ResourceStore, pod_coord: Coordinator,
-                 fabric: Fabric, rest, namespace=None, trace=None):
+                 fabric: Fabric, rest, namespace=None, trace=None,
+                 cpu_model: bool = False):
         super().__init__(store, crds.POD, namespace, "kubelet", trace)
         self.pod_coord = pod_coord
         self.fabric = fabric
         self.rest = rest
+        self.cpu_model = cpu_model
         self.handles: dict = {}
         self._hlock = threading.Lock()
+        self._shares: dict = {}  # node -> cpu share in (0, 1]; lock-free reads
+
+    def cpu_share(self, node: str | None) -> float:
+        """Current CPU share of one PE on ``node`` (1.0 without the model)."""
+        if not self.cpu_model or node is None:
+            return 1.0
+        return self._shares.get(node, 1.0)
+
+    def _recompute_shares(self) -> None:
+        """Caller holds ``_hlock``.  share(node) = cores / running PEs,
+        capped at 1 — the equal-slice contention model."""
+        if not self.cpu_model:
+            return
+        counts: dict = {}
+        for handle in self.handles.values():
+            if handle.node:
+                counts[handle.node] = counts.get(handle.node, 0) + 1
+        shares: dict = {}
+        for node_name, n in counts.items():
+            node = self.store.try_get(crds.NODE, node_name)
+            cores = node.spec.get("cores", 8) if node is not None else 8
+            shares[node_name] = min(1.0, cores / max(n, 1))
+        self._shares = shares  # atomic swap: runtimes read without the lock
 
     def on_addition(self, res: Resource) -> None:
         self._maybe_start(res)
@@ -162,12 +144,15 @@ class KubeletController(Controller):
             if cm is None:  # pod conductor guarantees this; guard anyway
                 return
             stop = threading.Event()
+            node = pod.spec.get("nodeName")
             runtime = PERuntime(
                 job=pod.spec["job"], pe_id=pod.spec["peId"],
                 metadata=cm.spec["data"], fabric=self.fabric, rest=self.rest,
                 launch_count=pod.spec.get("launchCount", 0), stop_event=stop,
-                on_exit=self._on_runtime_exit)
-            self.handles[pod.name] = PodHandle(runtime, stop)
+                on_exit=self._on_runtime_exit,
+                cpu_share=(lambda n=node: self.cpu_share(n)))
+            self.handles[pod.name] = PodHandle(runtime, stop, node)
+            self._recompute_shares()
         self.pod_coord.submit_status(pod.name, {"phase": "Running"},
                                      requester=self.name)
         runtime.start()
@@ -176,6 +161,7 @@ class KubeletController(Controller):
         pod_name = crds.pod_name(runtime.job, runtime.pe_id)
         with self._hlock:
             self.handles.pop(pod_name, None)
+            self._recompute_shares()
         if runtime.crashed:
             self.pod_coord.submit_status(pod_name, {"phase": "Failed"},
                                          requester=self.name)
@@ -192,6 +178,7 @@ class KubeletController(Controller):
     def stop_pod(self, pod_name: str, timeout: float = 5.0) -> None:
         with self._hlock:
             handle = self.handles.pop(pod_name, None)
+            self._recompute_shares()
         if handle:
             handle.stop_event.set()
             handle.runtime.join(timeout=timeout)
@@ -200,6 +187,7 @@ class KubeletController(Controller):
         """Simulate an involuntary PE crash (test/benchmark hook)."""
         with self._hlock:
             handle = self.handles.pop(pod_name, None)
+            self._recompute_shares()
         if not handle:
             return False
         handle.stop_event.set()
@@ -213,3 +201,130 @@ class KubeletController(Controller):
             names = list(self.handles)
         for n in names:
             self.stop_pod(n)
+
+
+class NodePressureMonitor:
+    """The kubelets' per-node pressure heartbeat (ROADMAP's per-node
+    oversubscription signals).
+
+    Every ``interval`` seconds (or on an explicit ``report()`` — tests and
+    deterministic runs call it directly) it aggregates, per node, over the
+    RUNNING pods bound there:
+
+    - ``podsPerCore``:   running pods / spec cores — the oversubscription
+                         ratio proper;
+    - ``ringFill``:      mean input-ring backpressure of the hosted PEs
+                         (from the load samples they already report);
+    - ``heartbeatLag``:  max staleness of the hosted pods' heartbeats —
+                         the node-level straggler signal;
+
+    and writes them as ``status.pressure`` plus the ``Pressure`` /
+    ``Straggling`` conditions on the Node resource, through the declarative
+    API (the PR-4 rule: conditions are the platform's only signal surface).
+    The ``Pressure`` condition keys on podsPerCore alone (a saturated ring
+    on an idle node is an app problem, not a node problem); the blended
+    ``score`` (pods-per-core and ring fill) rides in status for the
+    scheduler's pressure-avoidance scorer to rank by.
+    """
+
+    def __init__(self, store: ResourceStore, namespace, coords=None,
+                 trace=None, *, api=None, interval: float = 0.5,
+                 pods_per_core_hot: float = 1.0, fill_weight: float = 0.5,
+                 straggle_after: float = 5.0, clock=time.time):
+        self.store = store
+        self.namespace = namespace
+        self.api = ensure_api(api, store, namespace, coords, trace)
+        self.trace = trace
+        self.interval = interval
+        self.pods_per_core_hot = pods_per_core_hot
+        self.fill_weight = fill_weight
+        self.straggle_after = straggle_after
+        self.clock = clock
+        self._stop = threading.Event()
+        self._thread = None
+
+    # ------------------------------------------------------------- sampling
+
+    def snapshot(self, now: float | None = None) -> dict:
+        """Pure aggregation: node name -> pressure sample dict."""
+        now = self.clock() if now is None else now
+        per_node: dict = {}
+        for pod in self.store.list(crds.POD, self.namespace):
+            node = pod.spec.get("nodeName")
+            if not node or pod.status.get("phase") != "Running":
+                continue
+            entry = per_node.setdefault(node, {"pods": 0, "fills": [],
+                                               "lag": 0.0})
+            entry["pods"] += 1
+            metrics = pod.status.get("metrics") or {}
+            if "backpressure" in metrics:
+                entry["fills"].append(metrics["backpressure"])
+            hb = pod.status.get("heartbeat")
+            if hb is not None:
+                entry["lag"] = max(entry["lag"], now - hb)
+        out: dict = {}
+        for node in self.store.list(kind=crds.NODE):
+            entry = per_node.get(node.name, {"pods": 0, "fills": [], "lag": 0.0})
+            cores = max(node.spec.get("cores", 8), 1e-9)
+            ppc = entry["pods"] / cores
+            fill = (sum(entry["fills"]) / len(entry["fills"])
+                    if entry["fills"] else 0.0)
+            out[node.name] = {
+                "pods": entry["pods"],
+                "podsPerCore": round(ppc, 4),
+                "ringFill": round(fill, 4),
+                "heartbeatLag": round(entry["lag"], 3),
+                # the scorer's ranking signal: oversubscription, nudged by
+                # how loaded the hosted rings actually are
+                "score": round(ppc / self.pods_per_core_hot
+                               + self.fill_weight * fill, 4),
+            }
+        return out
+
+    # ------------------------------------------------------------ reporting
+
+    def report(self, now: float | None = None) -> dict:
+        """One heartbeat: write every node's pressure sample + conditions."""
+        now = self.clock() if now is None else now
+        samples = self.snapshot(now)
+        for node_name, sample in samples.items():
+            hot = sample["podsPerCore"] >= self.pods_per_core_hot
+            straggling = sample["heartbeatLag"] > self.straggle_after
+
+            def write(res: Resource, sample=sample, hot=hot,
+                      straggling=straggling) -> None:
+                res.status["pressure"] = {**sample, "updatedAt": now}
+                set_condition(res, crds.COND_PRESSURE,
+                              "True" if hot else "False",
+                              reason="Oversubscribed" if hot else "InBudget",
+                              message=f"podsPerCore={sample['podsPerCore']}")
+                set_condition(res, crds.COND_STRAGGLING,
+                              "True" if straggling else "False",
+                              reason="StaleHeartbeat" if straggling
+                              else "Fresh",
+                              message=f"lag={sample['heartbeatLag']}s")
+
+            self.api.nodes.edit(node_name, write, requester="pressure-monitor")
+        return samples
+
+    # --------------------------------------------------------------- daemon
+
+    def start(self, interval: float | None = None) -> None:
+        interval = self.interval if interval is None else interval
+
+        def loop():
+            while not self._stop.is_set():
+                try:
+                    self.report()
+                except Exception:  # noqa: BLE001 — heartbeat must not die
+                    pass
+                self._stop.wait(interval)
+
+        self._thread = threading.Thread(target=loop, name="pressure-monitor",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)

@@ -82,6 +82,20 @@ COND_FULL_HEALTH = "FullHealth"
 COND_DRAINING = "Draining"
 #: Pod: the runtime's drain report landed (reason carries clean/timeout).
 COND_DRAINED = "Drained"
+#: Node: the node is oversubscribed (pods-per-core at/over the hot
+#: threshold).  Written by the kubelet's pressure heartbeat; the scheduler's
+#: pressure-avoidance scorer and the rebalance conductor key off it.  The
+#: raw signals ride in ``status.pressure`` ({podsPerCore, ringFill,
+#: heartbeatLag, score, pods, updatedAt}).
+COND_PRESSURE = "Pressure"
+#: Node: some hosted pod's heartbeat is stale past the straggle threshold —
+#: the node-level view of the straggler monitor's per-pod signal.
+COND_STRAGGLING = "Straggling"
+#: PE: the rebalance conductor is migrating this PE off a hot node; its pod
+#: was deleted and the replacement has not reported Running+connected yet.
+#: The autoscale conductor holds decisions for the job while this stands —
+#: a generation change mid-migration would re-plan under the moving PE.
+COND_REBALANCING = "Rebalancing"
 
 #: Finalizer a retiring PE/Pod carries while draining: deletion only stamps
 #: ``deletion_timestamp``; the drained report removes the finalizer and the
@@ -241,7 +255,14 @@ def make_pod(job: str, pe_id: int, pod_spec: dict, launch_count: int,
 
     spec:   ``job``, ``peId``, ``launchCount`` (which launch this pod
             serves), ``jobGeneration``, ``nodeName`` (bound by the
-            scheduler), ``pod_spec`` (labels/affinity from §6.2).
+            scheduler), ``pod_spec`` (labels/affinity from §6.2, plus
+            ``resources`` — ``{"cores": float}``, the pod's requested CPU
+            share, filled by the pipeline from per-operator-kind defaults
+            or an explicit ``placement.cores``; the scheduler's capacity
+            filter and spread scorer account in requested cores, not pod
+            counts — and ``avoidNodes``, a soft scheduling hint the
+            rebalance conductor stamps so a migrated pod is not re-bound
+            to the hot node it just left).
     status: ``phase`` (Pending|Running|Succeeded|Failed|Unschedulable),
             ``connected``, ``sourceDone``, ``heartbeat``, ``metrics`` (the
             PE's latest load sample, scraped by the metrics plane),
@@ -377,19 +398,38 @@ def make_scaling_policy(job: str, region: str, *, min_width: int = 1,
                         max_width: int = 4, metric: str = "backpressure",
                         scale_up_at: float = 0.5, scale_down_at: float = 0.05,
                         target_per_channel: float = 0.0, step: int = 1,
-                        cooldown: float = 1.0,
+                        cooldown: float = 1.0, setpoint: float = 0.5,
+                        signal: str = "backpressure", kp: float = 4.0,
+                        ki: float = 0.0, kd: float = 0.0,
+                        hysteresis: float = 0.1,
+                        integral_clamp: float = 8.0,
                         namespace: str = "default") -> Resource:
     """ScalingPolicy CRD: bounds + thresholds the autoscale conductor obeys.
 
     spec:   ``job``, ``region``, ``minWidth``/``maxWidth`` (clamp),
-            ``metric`` — the region aggregate to scale on: "backpressure"
-            (mean input-queue fill, thresholded by ``scaleUpAt`` /
-            ``scaleDownAt``, stepping by ``step``) or "throughput"
-            (tuples/s divided by ``targetPerChannel`` gives the wanted
-            width directly) — and ``cooldown`` (seconds between scale
-            actions).
+            ``metric`` — the region aggregate to scale on:
+
+            - "backpressure": mean input-queue fill, thresholded by
+              ``scaleUpAt`` / ``scaleDownAt``, stepping by ``step``;
+            - "throughput": tuples/s divided by ``targetPerChannel`` gives
+              the wanted width directly;
+            - "pid": target tracking — drive the region aggregate named by
+              ``signal`` ("backpressure", "occupancy", …) toward
+              ``setpoint`` with a PID law on the error.  ``kp``/``ki``/
+              ``kd`` are the gains (widths per unit error); ``hysteresis``
+              is the deadband half-width around the setpoint inside which
+              no action is taken (kills limit-cycle hunting); the integral
+              term is conditionally accumulated (frozen while the output
+              saturates at minWidth/maxWidth — anti-windup) and clamped to
+              ±``integralClamp``.
+
+            ``cooldown`` (seconds between scale actions) applies to every
+            metric mode.
     status: ``lastScaleAt`` (cooldown stamp, written BEFORE the width edit
-            so a conductor restart cannot double-scale), ``lastWidth``.
+            so a conductor restart cannot double-scale), ``lastWidth``,
+            ``pid`` (the controller state {error, integral, at} persisted
+            on each scale action; a conductor restart between actions
+            simply re-accumulates).
     """
     return Resource(
         kind=SCALING_POLICY, name=policy_name(job, region), namespace=namespace,
@@ -397,7 +437,9 @@ def make_scaling_policy(job: str, region: str, *, min_width: int = 1,
               "maxWidth": max_width, "metric": metric,
               "scaleUpAt": scale_up_at, "scaleDownAt": scale_down_at,
               "targetPerChannel": target_per_channel, "step": step,
-              "cooldown": cooldown},
+              "cooldown": cooldown, "setpoint": setpoint, "signal": signal,
+              "kp": kp, "ki": ki, "kd": kd, "hysteresis": hysteresis,
+              "integralClamp": integral_clamp},
         labels=job_labels(job),
         owner_refs=(OwnerRef(JOB, job),),
         status={"lastScaleAt": 0.0},
@@ -405,7 +447,19 @@ def make_scaling_policy(job: str, region: str, *, min_width: int = 1,
 
 
 def make_node(name: str, cores: int = 16, labels: dict | None = None) -> Resource:
-    """Node — cluster substrate capacity (spec: ``cores``; labels are the
-    tags hostpool/node affinity match against)."""
+    """Node — cluster substrate capacity.
+
+    spec:   ``cores`` — schedulable CPU capacity; validated here (must be a
+            positive number) so the scheduler never has to clamp a
+            zero-or-negative divisor at placement time.
+    status: ``pressure`` ({podsPerCore, ringFill, heartbeatLag, score,
+            pods, updatedAt} — the kubelet pressure heartbeat), plus the
+            ``Pressure`` / ``Straggling`` conditions.  Labels are the tags
+            hostpool/node affinity match against.
+    """
+    if not isinstance(cores, (int, float)) or isinstance(cores, bool) \
+            or cores <= 0:
+        raise ValueError(f"node {name!r}: cores must be a positive number, "
+                         f"got {cores!r}")
     return Resource(kind=NODE, name=name, spec={"cores": cores},
                     labels=labels or {})

@@ -14,6 +14,9 @@ Aggregates per region:
   window; tuplesOut for sources);
 - ``queueDepth``:   summed depths; ``stepTime``: mean trainer step time;
 - ``emitBatch``:    mean adaptive output batch the channels run at;
+- ``occupancy``:    mean slot occupancy across serving replicas (the
+  ServeEngine-shaped samples server PEs report) — the signal the
+  target-tracking autoscale policy drives toward its setpoint;
 - ``tuplesDropped``: cumulative drain-fallback drops, *including* PEs whose
   pods are already retired — a retiring PE's final (forced) sample is folded
   into a per-job ledger when its pod deletes, so scale-down losses stay
@@ -112,7 +115,7 @@ class MetricsPlane(Conductor):
         whose every channel already retired but whose drops remain)."""
         return {"channels": 0, "backpressure": 0.0, "throughput": 0.0,
                 "queueDepth": 0, "blockedPuts": 0, "stepTime": 0.0,
-                "emitBatch": 0.0, "tuplesDropped": dropped}
+                "emitBatch": 0.0, "occupancy": 0.0, "tuplesDropped": dropped}
 
     def aggregate(self, job: str) -> dict:
         """Pure rollup of the current windows for one job."""
@@ -133,7 +136,7 @@ class MetricsPlane(Conductor):
                 continue
             agg = regions.setdefault(region, {
                 **self._region_zero(retired.get(region, 0)),
-                "stepTimeSamples": 0})
+                "stepTimeSamples": 0, "occupancySamples": 0})
             agg["channels"] += 1
             agg["backpressure"] += latest.get("backpressure", 0.0)
             agg["throughput"] += rate
@@ -141,15 +144,22 @@ class MetricsPlane(Conductor):
             agg["blockedPuts"] += latest.get("blockedPuts", 0)
             agg["emitBatch"] += latest.get("emitBatch", 0)
             agg["tuplesDropped"] += latest.get("tuplesDropped", 0)
+            if "occupancy" in latest:
+                # serving replicas (ServeEngine-shaped slot samples): mean
+                # slot occupancy is the target-tracking policy's signal
+                agg["occupancy"] += latest["occupancy"]
+                agg["occupancySamples"] += 1
             if latest.get("stepTime"):
                 agg["stepTime"] += latest["stepTime"]
                 agg["stepTimeSamples"] += 1
         for region, agg in regions.items():
             agg["backpressure"] /= max(agg["channels"], 1)
             agg["emitBatch"] /= max(agg["channels"], 1)
+            if agg["occupancySamples"]:
+                agg["occupancy"] /= agg["occupancySamples"]
             if agg["stepTimeSamples"]:
                 agg["stepTime"] /= agg["stepTimeSamples"]
-            del agg["stepTimeSamples"]
+            del agg["stepTimeSamples"], agg["occupancySamples"]
         # regions whose every channel already retired still report drops
         for region, n in retired.items():
             if region and region not in regions:

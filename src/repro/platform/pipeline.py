@@ -75,9 +75,11 @@ def _streams_logical(app: dict, cr) -> LogicalModel:
     # the parallel region: a pipeline of ``depth`` ops, expanded ``width``-way
     region_first = prev
     rprev = None
+    ch_cfg = app.get("channel", {})
     for j in range(depth):
         ops.append(OpDef(f"ch{j}", "pipe", region="par",
-                         config=app.get("channel", {})))
+                         placement=ch_cfg.get("placement", {}),
+                         config=ch_cfg))
         if rprev is None:
             edges.append((region_first, f"ch{j}"))
         else:
@@ -285,6 +287,14 @@ def fuse(topo: list, edges: list, scheme: str = "one-per-op") -> list:
 
 # ----------------------------------------------- scheduling constraints (6)
 
+#: Default requested cores per operator kind — what a pod asks the
+#: scheduler's capacity filter / spread scorer for when no explicit
+#: ``placement.cores`` is given.  Heavy compute kinds (trainer shards,
+#: serving replicas) request a full core; streaming pipes half; plumbing
+#: operators a quarter.
+KIND_CORES = {"trainer": 1.0, "server": 1.0, "pipe": 0.5, "reducer": 0.5,
+              "source": 0.25, "sink": 0.25, "router": 0.25}
+
 
 def pod_specs(plans: list, job: str) -> None:
     """Fill each plan's pod_spec from SPL placement semantics (paper §6.2).
@@ -294,6 +304,8 @@ def pod_specs(plans: list, job: str) -> None:
     isolate   -> unique label on every *other* pod + podAntiAffinity here
                  (builds symmetric isolation from the asymmetric primitive)
     host      -> nodeName;  hostpool tags -> nodeAffinity
+    cores     -> resources request ({"cores": float}; defaults summed from
+                 ``KIND_CORES`` over the PE's fused operators)
     """
     iso_tokens = []
     for p in plans:
@@ -306,8 +318,10 @@ def pod_specs(plans: list, job: str) -> None:
         anti: list = []
         node_name = None
         node_tags: list = []
+        cores = 0.0
         for o in p.operators:
             pl = o.placement
+            cores += float(pl.get("cores", KIND_CORES.get(o.kind, 0.5)))
             if pl.get("colocate"):
                 labels[f"colo-{pl['colocate']}"] = "1"
                 affinity.append(f"colo-{pl['colocate']}")
@@ -329,6 +343,7 @@ def pod_specs(plans: list, job: str) -> None:
             "podAntiAffinity": anti,
             "nodeName": node_name,
             "nodeAffinityTags": node_tags,
+            "resources": {"cores": cores},
         }
 
 

@@ -171,7 +171,7 @@ class AdaptiveBatcher:
 class PERuntime(threading.Thread):
     def __init__(self, *, job: str, pe_id: int, metadata: dict, fabric: Fabric,
                  rest, launch_count: int, stop_event: threading.Event,
-                 on_exit=None):
+                 on_exit=None, cpu_share=None):
         super().__init__(name=f"pe-{job}-{pe_id}", daemon=True)
         self.job = job
         self.pe_id = pe_id
@@ -181,6 +181,10 @@ class PERuntime(threading.Thread):
         self.launch_count = launch_count
         self.stop_event = stop_event
         self.on_exit = on_exit
+        # node CPU share (the kubelet's oversubscription model): synthetic
+        # per-tuple work stretches by the inverse share, so packing more
+        # PEs than cores onto a node measurably slows each of them
+        self.cpu_share = cpu_share or (lambda: 1.0)
         self.in_queues: dict = {}
         self.out_targets: dict = {}  # portId -> list[(peer pe, peer port)]
         self.crashed = False
@@ -597,8 +601,10 @@ class PERuntime(threading.Thread):
                 self._run_source()
             elif "reducer" in kinds:
                 self._run_reducer()
-            elif "server" in kinds or "router" in kinds:
-                self._run_chain()  # same pull-transform-push loop
+            elif "server" in kinds:
+                self._run_server()
+            elif "router" in kinds:
+                self._run_router()
             elif "sink" in kinds:
                 self._run_chain()
             else:
@@ -712,9 +718,13 @@ class PERuntime(threading.Thread):
                 continue
             self.counts["in"] += len(items)
             self._pending_in = len(items)
+            # synthetic work stretches by the node's inverse CPU share (1.0
+            # unless the kubelet's oversubscription model is on)
+            eff_sleep = work_sleep / max(self.cpu_share(), 0.05) \
+                if work_sleep else 0
             for item in items:
-                if work_sleep:  # synthetic per-tuple cost (load/bench knob)
-                    time.sleep(work_sleep)
+                if eff_sleep:  # synthetic per-tuple cost (load/bench knob)
+                    time.sleep(eff_sleep)
                 if is_sink:
                     seen += 1
                     maxseq = max(maxseq, item.get("seq", -1))
@@ -724,7 +734,7 @@ class PERuntime(threading.Thread):
                     item = dict(item)
                     item["hops"] = item.get("hops", 0) + 1
                     self._emit(0, item, partition=item.get("seq"))
-                    if work_sleep:
+                    if eff_sleep:
                         # slow per-tuple work: honour the linger bound and
                         # keep heartbeats fresh inside the batch too, not
                         # only between batches
@@ -735,6 +745,112 @@ class PERuntime(threading.Thread):
         self._flush_all()
         if is_sink:
             self.rest.report_sink(self.job, self.pe_id, seen, maxseq)
+
+    # ------------------------------------------------------------- serving
+
+    def _run_router(self) -> None:
+        """Serve-job request router: partitions requests across the server
+        replicas.  With an input port (pub/sub import feeding it) it is the
+        plain pull-partition-push chain; without one it synthesizes the
+        request stream itself from its config (``requests`` total at one
+        request per ``request_sleep`` seconds) — the serve job's load
+        driver for benchmarks and autoscale tests."""
+        cfg = self.meta["operators"][0].get("config", {})
+        if self.meta.get("inputs"):
+            return self._run_chain()
+        limit = int(cfg.get("requests", 0))  # 0 = unbounded
+        sleep = float(cfg.get("request_sleep", 0.001))
+        tokens = int(cfg.get("tokens_per_request", 8))
+        i = 0
+        while not self.stop_event.is_set():
+            if self._drain is not None:
+                break
+            if limit and i >= limit:
+                break
+            self._emit(0, {"seq": i, "rid": i, "tokens": tokens}, partition=i)
+            i += 1
+            self._maybe_flush()
+            self._adapt()
+            self._report_load()
+            if sleep:
+                time.sleep(sleep)
+        self._flush_all()
+        self.rest.notify_source_done(self.job, self.pe_id)
+
+    def _run_server(self) -> None:
+        """Serving replica: continuous batching over ``slots`` request
+        slots, reporting ServeEngine-shaped slot-occupancy samples into the
+        metrics plane (``occupancy`` / ``meanOccupancy`` / ``slotsBusy`` /
+        ``numSlots`` — the same keys ``ServeEngine.metrics()`` exports), so
+        the target-tracking autoscale policy can drive the ``replicas``
+        region width from occupancy.
+
+        Each admitted request occupies a slot for ``tokens`` engine ticks
+        (one token per tick — the continuous-batching cost model;
+        ``token_sleep`` is the per-tick decode cost, stretched by the
+        node's inverse CPU share like any synthetic work).  Finished
+        requests emit a response tuple downstream."""
+        op = self.meta["operators"][0]
+        cfg = op.get("config", {})
+        slots = max(1, int(cfg.get("slots", 4)))
+        token_sleep = float(cfg.get("token_sleep", 0.001))
+        default_tokens = int(cfg.get("tokens_per_request", 8))
+        active: list = []  # [request item, remaining tokens]
+        ticks = 0
+        busy_ticks = 0
+        while not self.stop_event.is_set():
+            if self._drain_done():
+                break
+            q = self.in_queues.get(0)
+            if q is None:
+                time.sleep(0.01)
+                continue
+            free = slots - len(active)
+            if free > 0:
+                items = q.get_many(free, timeout=self._pull_timeout(
+                    idle=0.02 if active else 0.1))
+                if items:
+                    self.counts["in"] += len(items)
+                    for item in items:
+                        active.append([item, int(item.get("tokens",
+                                                          default_tokens))])
+            if active:
+                ticks += 1
+                busy_ticks += len(active)
+                if token_sleep:
+                    time.sleep(token_sleep / max(self.cpu_share(), 0.05))
+                done = []
+                for entry in active:
+                    entry[1] -= 1
+                    if entry[1] <= 0:
+                        done.append(entry)
+                for entry in done:
+                    active.remove(entry)
+                    item = dict(entry[0])
+                    item["hops"] = item.get("hops", 0) + 1
+                    self._emit(0, item, partition=item.get("seq"))
+            occupancy = len(active) / slots
+            self._report_load({
+                "occupancy": occupancy, "slotsBusy": len(active),
+                "numSlots": slots,
+                "meanOccupancy": busy_ticks / (ticks * slots) if ticks else 0.0,
+            })
+            self._maybe_flush()
+            self._adapt()
+        # finish the admitted requests before exiting (the slot-level
+        # analogue of _run_chain completing its in-hand batch): a stop or
+        # drain costs at most tokens x token_sleep extra, never a request
+        while active and not self.crashed:
+            for entry in list(active):
+                entry[1] -= 1
+                if entry[1] <= 0:
+                    active.remove(entry)
+                    item = dict(entry[0])
+                    item["hops"] = item.get("hops", 0) + 1
+                    self._emit(0, item, partition=item.get("seq"))
+            if token_sleep:
+                time.sleep(token_sleep)
+        self._flush_all()
 
     def _run_reducer(self) -> None:
         """Aggregates trainer metric tuples per step, forwards means."""

@@ -1,0 +1,556 @@
+"""Pluggable scheduling subsystem: filter/score pipelines + rebalancing.
+
+The paper's own verdict on Kubernetes (§8) is that it "has problems with
+oversubscription": placement by static request counting, and nothing that
+ever re-examines a placement once made.  This module replaces the seed
+pods-per-core scheduler with a kube-scheduler-style plugin pipeline fed by
+the node pressure plane (``cluster.NodePressureMonitor``), and adds the
+re-examination half as a ``RebalanceConductor``:
+
+- **Filters** are pure predicates ``(ctx, node) -> bool``.  The feasible
+  set is their intersection, so filter *order can never change it* (pinned
+  by a property test).  Capacity (requested ``resources.cores`` fitting the
+  node) is applied as a *soft* filter: if it empties the feasible set the
+  pipeline falls back to the hard filters only — a small test cluster
+  degrades to best-effort oversubscription instead of wedging Pending pods,
+  and the spread/pressure scorers then pick the least oversubscribed node.
+- **Scorers** map ``(ctx, node) -> float`` (higher is better); the weighted
+  sum ranks the feasible set with a deterministic tie-break
+  ``(-score, node name)`` so placements are reproducible under the
+  testsuite's interleavings.
+- The **binding decision runs inside the pod coordinator's writer lock**
+  (decide + bind are one serialized command), so two concurrent Pending
+  pods can never double-book the same remaining capacity — the classic
+  read-then-bind race of the seed scheduler is closed by construction.
+- The **RebalanceConductor** watches Node ``Pressure`` conditions; a node
+  that stays hot past ``sustain_s`` gets one hosted region PE migrated off
+  it through the loss-proofed restart machinery (PR 3/4): stamp the PE
+  ``Rebalancing`` + an ``avoidNodes`` hint, delete the pod, and let the
+  launchCount causal chain recreate it — the kubelet joins the old runtime
+  (final flush lands), the fabric's residual carryover preloads the new
+  ring, and the scheduler's pressure scorer binds the replacement to a cold
+  node.  Gated so it never races an in-flight drain or autoscale: it holds
+  while any pod of the job is mid-drain, requires a fresh ``FullHealth``
+  condition, and the autoscale conductor symmetrically holds while a
+  ``Rebalancing`` condition stands.
+"""
+
+from __future__ import annotations
+
+import time
+
+from ..core import Controller, Conductor, Coordinator, Event, EventType, \
+    Resource, ResourceStore, condition_is, get_condition, set_condition
+from . import crds
+from .api import ensure_api
+
+#: Requested cores assumed for a pod whose spec carries no ``resources``
+#: block (naked pods, pre-refactor WAL replays).
+DEFAULT_POD_CORES = 0.5
+
+
+def pod_cores(pod_spec: dict) -> float:
+    """A pod's requested cores from its ``pod_spec`` (see ``crds.make_pod``)."""
+    res = (pod_spec or {}).get("resources") or {}
+    try:
+        return float(res.get("cores", DEFAULT_POD_CORES))
+    except (TypeError, ValueError):
+        return DEFAULT_POD_CORES
+
+
+def job_mid_drain(store: ResourceStore, namespace: str, job: str) -> bool:
+    """True while a scale-down drain of ``job`` is still in flight (a pod
+    carries the ``streams/drain`` finalizer — or a drain request — without
+    a drained report yet).  Shared gate: the autoscale conductor holds its
+    decisions and the rebalance conductor holds its migrations on it."""
+    for pod in store.list(crds.POD, namespace, crds.job_labels(job)):
+        mid_drain = (crds.DRAIN_FINALIZER in pod.finalizers
+                     or pod.status.get("draining"))
+        if mid_drain and not pod.status.get("drained"):
+            return True
+    return False
+
+
+# ------------------------------------------------------------------ context
+
+
+class SchedContext:
+    """One scheduling cycle's view of the world: the pod to place, the
+    candidate nodes (name-sorted — the determinism anchor), and the pods
+    already bound, grouped by node."""
+
+    def __init__(self, pod: Resource, nodes: list, placed: list):
+        self.pod = pod
+        self.nodes = sorted(nodes, key=lambda n: n.name)
+        self.placed = [p for p in placed if p.spec.get("nodeName")]
+        self.by_node: dict = {}
+        for p in self.placed:
+            self.by_node.setdefault(p.spec["nodeName"], []).append(p)
+        self.want = pod.spec.get("pod_spec", {}) or {}
+
+    def pods_on(self, node_name: str) -> list:
+        return self.by_node.get(node_name, [])
+
+    def used_cores(self, node_name: str) -> float:
+        return sum(pod_cores(p.spec.get("pod_spec", {}))
+                   for p in self.pods_on(node_name))
+
+    @staticmethod
+    def pod_labels(p: Resource) -> dict:
+        return (p.spec.get("pod_spec", {}) or {}).get("labels", {})
+
+
+# ------------------------------------------------------------------ filters
+
+
+class ForcedNodeFilter:
+    """``placement.host`` -> the pod runs there or nowhere (§6.2)."""
+
+    name = "forced-node"
+
+    def feasible(self, ctx: SchedContext, node: Resource) -> bool:
+        forced = ctx.want.get("nodeName")
+        return not forced or node.name == forced
+
+
+class NodeAffinityFilter:
+    """Hostpool tags must all appear among the node's labels (§6.2)."""
+
+    name = "node-affinity"
+
+    def feasible(self, ctx: SchedContext, node: Resource) -> bool:
+        tags = set(ctx.want.get("nodeAffinityTags") or ())
+        return tags.issubset(set(node.labels))
+
+
+class PodAntiAffinityFilter:
+    """No pod on the node may carry a label this pod anti-affines to."""
+
+    name = "pod-anti-affinity"
+
+    def feasible(self, ctx: SchedContext, node: Resource) -> bool:
+        anti = ctx.want.get("podAntiAffinity") or ()
+        return not any(lbl in ctx.pod_labels(p)
+                       for p in ctx.pods_on(node.name) for lbl in anti)
+
+
+class PodAffinityFilter:
+    """If any placed pod carries an affinity label, only its nodes are
+    feasible (colocate semantics; vacuously true while none exists)."""
+
+    name = "pod-affinity"
+
+    def feasible(self, ctx: SchedContext, node: Resource) -> bool:
+        affinity = ctx.want.get("podAffinity") or ()
+        if not affinity:
+            return True
+        anywhere = [p for p in ctx.placed
+                    if any(lbl in ctx.pod_labels(p) for lbl in affinity)]
+        if not anywhere:
+            return True
+        return any(p.spec["nodeName"] == node.name for p in anywhere)
+
+
+class CapacityFilter:
+    """Requested cores (this pod + everything already bound) must fit the
+    node.  Soft: the pipeline runner falls back to the hard filters when
+    this empties the feasible set (see the module docstring)."""
+
+    name = "capacity"
+    soft = True
+
+    def feasible(self, ctx: SchedContext, node: Resource) -> bool:
+        cores = node.spec.get("cores", 8)
+        return ctx.used_cores(node.name) + pod_cores(ctx.want) <= cores
+
+
+# ------------------------------------------------------------------ scorers
+
+
+class SpreadScorer:
+    """Prefer the node with the most free *requested* capacity."""
+
+    name = "spread"
+
+    def __init__(self, weight: float = 1.0):
+        self.weight = weight
+
+    def score(self, ctx: SchedContext, node: Resource) -> float:
+        cores = max(node.spec.get("cores", 8), 1e-9)
+        return 1.0 - min(1.0, ctx.used_cores(node.name) / cores)
+
+
+class PackingScorer:
+    """Bin-pack: prefer the fullest node that still fits (consolidation
+    profiles; the inverse of spread)."""
+
+    name = "packing"
+
+    def __init__(self, weight: float = 1.0):
+        self.weight = weight
+
+    def score(self, ctx: SchedContext, node: Resource) -> float:
+        cores = max(node.spec.get("cores", 8), 1e-9)
+        return min(1.0, ctx.used_cores(node.name) / cores)
+
+
+class PressureAvoidScorer:
+    """Prefer cold nodes: score decays with the pressure plane's live
+    ``status.pressure.score`` (pods-per-core + ring fill, written by the
+    kubelet heartbeat) and collapses to 0 while the ``Pressure`` condition
+    stands — static requests lie, the pressure plane does not."""
+
+    name = "pressure-avoid"
+
+    def __init__(self, weight: float = 2.0):
+        self.weight = weight
+
+    def score(self, ctx: SchedContext, node: Resource) -> float:
+        if condition_is(node, crds.COND_PRESSURE, "True"):
+            return 0.0
+        raw = (node.status.get("pressure") or {}).get("score", 0.0)
+        return 1.0 / (1.0 + max(raw, 0.0))
+
+
+class AvoidHintScorer:
+    """Soft repulsion from ``pod_spec.avoidNodes`` (the rebalance
+    conductor's hint): a migrated pod should not bounce straight back to
+    the hot node it just left, but if the hinted nodes are the only
+    feasible ones the hint loses (all candidates tie at 0)."""
+
+    name = "avoid-hint"
+
+    def __init__(self, weight: float = 3.0):
+        self.weight = weight
+
+    def score(self, ctx: SchedContext, node: Resource) -> float:
+        return 0.0 if node.name in (ctx.want.get("avoidNodes") or ()) else 1.0
+
+
+class SeedSpreadScorer:
+    """The seed load factor, kept as the ``seed`` profile's only scorer:
+    placed-pod *count* over spec cores — blind to requested resources and
+    to live pressure (the §8 oversubscription pathology the ``oversub``
+    benchmark reproduces)."""
+
+    name = "seed-spread"
+    weight = 1.0
+
+    def score(self, ctx: SchedContext, node: Resource) -> float:
+        return -len(ctx.pods_on(node.name)) / max(node.spec.get("cores", 8), 1)
+
+
+# ----------------------------------------------------------------- pipeline
+
+
+def feasible_set(ctx: SchedContext, filters: list) -> list:
+    """Intersection of all filter predicates — order-independent by
+    construction (pinned by a property test)."""
+    return [n for n in ctx.nodes
+            if all(f.feasible(ctx, n) for f in filters)]
+
+
+def rank(ctx: SchedContext, nodes: list, scorers: list) -> list:
+    """Weighted-sum ranking with the deterministic ``(-score, name)``
+    tie-break; returns node names, best first."""
+    scored = [(-sum(s.weight * s.score(ctx, n) for s in scorers), n.name)
+              for n in nodes]
+    scored.sort()
+    return [name for _, name in scored]
+
+
+PROFILES = {
+    # pressure-aware default: capacity accounting + live pressure avoidance
+    "pressure": lambda: (
+        [ForcedNodeFilter(), NodeAffinityFilter(), PodAntiAffinityFilter(),
+         PodAffinityFilter(), CapacityFilter()],
+        [SpreadScorer(1.0), PressureAvoidScorer(2.0), AvoidHintScorer(3.0)]),
+    # consolidation: same feasibility, pack instead of spread
+    "pack": lambda: (
+        [ForcedNodeFilter(), NodeAffinityFilter(), PodAntiAffinityFilter(),
+         PodAffinityFilter(), CapacityFilter()],
+        [PackingScorer(1.0), PressureAvoidScorer(2.0), AvoidHintScorer(3.0)]),
+    # the pre-refactor behaviour, kept as the benchmark baseline
+    "seed": lambda: (
+        [ForcedNodeFilter(), NodeAffinityFilter(), PodAntiAffinityFilter(),
+         PodAffinityFilter()],
+        [SeedSpreadScorer()]),
+}
+
+
+class SchedulerController(Controller):
+    """Assigns ``nodeName`` to pending pods (paper §6.2 semantics) through
+    the filter -> score plugin pipeline.
+
+    The placement decision and the binding are one command on the pod
+    coordinator: the feasible set and scores are computed from store state
+    *under the writer lock*, so concurrent Pending pods serialize and the
+    capacity each one sees already includes every earlier binding."""
+
+    def __init__(self, store: ResourceStore, pod_coord: Coordinator,
+                 namespace=None, trace=None, profile: str = "pressure",
+                 filters: list | None = None, scorers: list | None = None):
+        super().__init__(store, crds.POD, namespace, "scheduler", trace)
+        self.pod_coord = pod_coord
+        self.profile = profile
+        default_filters, default_scorers = PROFILES[profile]()
+        self.filters = default_filters if filters is None else filters
+        self.scorers = default_scorers if scorers is None else scorers
+
+    def on_addition(self, res: Resource) -> None:
+        self._maybe_schedule(res)
+
+    def on_modification(self, old, new) -> None:
+        if not new.spec.get("nodeName") and new.status.get("phase") == "Pending":
+            self._maybe_schedule(new)
+
+    # ------------------------------------------------------------ decisions
+
+    def decide(self, pod: Resource) -> str | None:
+        """Pure decision from current store state: the node to bind, or
+        None when no node is feasible."""
+        ns = pod.namespace
+        nodes = self.store.list(kind=crds.NODE)
+        if not nodes:
+            return None
+        placed = [p for p in self.store.list(crds.POD, ns)
+                  if p.spec.get("nodeName")]
+        ctx = SchedContext(pod, nodes, placed)
+        hard = [f for f in self.filters if not getattr(f, "soft", False)]
+        soft = [f for f in self.filters if getattr(f, "soft", False)]
+        feasible = feasible_set(ctx, hard + soft)
+        if not feasible and soft:
+            # soft-filter fallback: oversubscribe rather than wedge; the
+            # scorers pick the least oversubscribed feasible node
+            feasible = feasible_set(ctx, hard)
+        if not feasible:
+            return None
+        return rank(ctx, feasible, self.scorers)[0]
+
+    def _maybe_schedule(self, pod: Resource) -> None:
+        if pod.spec.get("nodeName") or pod.terminating:
+            return
+        if not self.store.list(kind=crds.NODE):
+            return  # no substrate yet; a node addition re-kicks pending pods
+
+        def place(res: Resource) -> None:
+            if res.spec.get("nodeName") or res.terminating:
+                return  # lost the race to an earlier command; nothing to do
+            node_name = self.decide(res)
+            if node_name is None:
+                res.status["phase"] = "Unschedulable"
+                return
+            res.spec["nodeName"] = node_name
+            if res.status.get("phase") == "Unschedulable":
+                res.status["phase"] = "Pending"  # revived (node added/freed)
+
+        out = self.pod_coord.submit(pod.name, place, requester=self.name)
+        if out is not None and out.spec.get("nodeName"):
+            self._record("bind", out.key, out.spec["nodeName"])
+
+    def kick_pending(self) -> int:
+        """Re-run placement for every unbound pod (Unschedulable included);
+        called when capacity appears (node addition).  Returns how many
+        pods were submitted for (re)scheduling."""
+        kicked = 0
+        for pod in self.store.list(crds.POD, self.namespace):
+            if pod.spec.get("nodeName") or pod.terminating:
+                continue
+            if pod.status.get("phase") in ("Pending", "Unschedulable"):
+                self._maybe_schedule(pod)
+                kicked += 1
+        return kicked
+
+
+class NodeController(Controller):
+    """Node life-cycle: a node addition re-kicks unschedulable pods (new
+    capacity must not strand them Pending forever).  Also the event source
+    conductors (rebalance) register with for node pressure updates."""
+
+    def __init__(self, store: ResourceStore, namespace=None, trace=None,
+                 scheduler: SchedulerController | None = None):
+        super().__init__(store, crds.NODE, namespace, "node-controller", trace)
+        self.scheduler = scheduler
+
+    def on_addition(self, res: Resource) -> None:
+        if self.scheduler is not None:
+            self.scheduler.kick_pending()
+
+
+# ---------------------------------------------------------------- rebalance
+
+
+class RebalanceConductor(Conductor):
+    """Detects sustained hot nodes from the pressure plane and migrates one
+    hosted region PE off them — the placement re-examination Kubernetes
+    lacks (paper §8).  See the module docstring for the zero-loss
+    mechanics and the gating rules."""
+
+    kinds = (crds.NODE, crds.POD)
+
+    def __init__(self, store, namespace, coords, trace=None, *, api=None,
+                 enabled: bool = True, sustain_s: float = 1.0,
+                 cooldown: float = 3.0, clock=time.time):
+        super().__init__(store, "rebalance-conductor", trace)
+        self.namespace = namespace
+        self.api = ensure_api(api, store, namespace, coords, trace)
+        self.enabled = enabled
+        self.sustain_s = sustain_s
+        self.cooldown = cooldown
+        self.clock = clock
+        self.migrations = 0
+        self._last_migration = 0.0
+
+    # --------------------------------------------------------------- events
+
+    def on_event(self, event: Event) -> None:
+        res = event.resource
+        if res.kind == crds.POD:
+            self._maybe_complete(event)
+            return
+        if not self.enabled or event.type == EventType.DELETED:
+            return
+        cond = get_condition(res, crds.COND_PRESSURE)
+        if cond is None or cond.get("status") != "True":
+            return
+        now = self.clock()
+        if now - cond.get("lastTransitionTime", now) < self.sustain_s:
+            return  # hot, but not yet *sustained* hot
+        if now - self._last_migration < self.cooldown:
+            return
+        self._maybe_migrate(res, now)
+
+    def _maybe_complete(self, event: Event) -> None:
+        """The migrated PE's REPLACEMENT pod reported Running+connected:
+        the migration is over — drop the ``Rebalancing`` condition (the
+        autoscale conductor resumes) and the ``avoidNodes`` hint (it must
+        not outlive the hot episode it was aimed at: a later restart
+        should be free to use that node again).
+
+        Guarded against the victim's own stale status events: between the
+        mark and the kubelet joining the runtime, the victim still patches
+        Running+connected status — only a pod of a LATER launch than the
+        one migrated away (``rebalancedLaunch``) completes the migration."""
+        pod = event.resource
+        if event.type == EventType.DELETED or pod.terminating or \
+                not (pod.status.get("phase") == "Running"
+                     and pod.status.get("connected")):
+            return
+        pe_name = crds.pe_name(pod.spec.get("job", ""), pod.spec.get("peId", -1))
+        pe = self.store.try_get(crds.PE, pe_name, self.namespace)
+        if pe is None or not condition_is(pe, crds.COND_REBALANCING, "True"):
+            return
+        if pod.spec.get("launchCount", 0) <= \
+                pe.status.get("rebalancedLaunch", -1):
+            return  # the old incarnation's tail, not the replacement
+
+        def complete(res: Resource) -> None:
+            spec = dict(res.spec.get("podSpec") or {})
+            spec.pop("avoidNodes", None)
+            res.spec["podSpec"] = spec
+            res.status.pop("rebalancedLaunch", None)
+            set_condition(res, crds.COND_REBALANCING, "False",
+                          reason="MigrationComplete")
+
+        self.api.pes.edit(pe_name, complete, requester=self.name)
+        self._record("migrated", pe.key, pod.spec.get("nodeName", "?"))
+
+    # ------------------------------------------------------------ migration
+
+    def _cold_node_exists(self, hot: str) -> bool:
+        for node in self.store.list(kind=crds.NODE):
+            if node.name != hot and \
+                    not condition_is(node, crds.COND_PRESSURE, "True"):
+                return True
+        return False
+
+    def _rebalancing_in_flight(self) -> bool:
+        return any(condition_is(pe, crds.COND_REBALANCING, "True")
+                   for pe in self.store.list(crds.PE, self.namespace))
+
+    def _region_pe(self, pod: Resource) -> bool:
+        """Only PEs inside a parallel region are migration candidates:
+        siblings absorb the restart blip, and accounting pods (sinks) keep
+        their counters."""
+        cm = self.store.try_get(
+            crds.CONFIG_MAP, crds.cm_name(pod.spec["job"], pod.spec["peId"]),
+            self.namespace)
+        ops = (cm.spec.get("data", {}).get("operators")
+               if cm is not None else None) or [{}]
+        return ops[0].get("region") is not None
+
+    def pick_victim(self, node_name: str) -> Resource | None:
+        """The region pod to move: Running, not draining/terminating, not
+        host-pinned; highest backpressure first, name tie-break."""
+        candidates = []
+        for pod in self.store.list(crds.POD, self.namespace):
+            if pod.spec.get("nodeName") != node_name:
+                continue
+            if pod.status.get("phase") != "Running" or pod.terminating or \
+                    pod.status.get("draining"):
+                continue
+            if (pod.spec.get("pod_spec", {}) or {}).get("nodeName"):
+                continue  # host-pinned: the scheduler would re-bind it here
+            if not self._region_pe(pod):
+                continue
+            bp = (pod.status.get("metrics") or {}).get("backpressure", 0.0)
+            candidates.append((-bp, pod.name, pod))
+        candidates.sort(key=lambda c: c[:2])
+        return candidates[0][2] if candidates else None
+
+    def _maybe_migrate(self, node: Resource, now: float) -> None:
+        if self._rebalancing_in_flight():
+            return  # one migration at a time: let the cluster resettle
+        if not self._cold_node_exists(node.name):
+            return  # nowhere better to go; migrating would reshuffle, not fix
+        victim = self.pick_victim(node.name)
+        if victim is None:
+            return
+        job = victim.spec["job"]
+        job_res = self.store.try_get(crds.JOB, job, self.namespace)
+        if job_res is None or job_res.terminating:
+            return
+        if not condition_is(job_res, crds.COND_FULL_HEALTH, "True",
+                            min_generation=job_res.generation):
+            return  # restart churn / in-flight scale-up: do not pile on
+        if job_mid_drain(self.store, self.namespace, job):
+            return  # never race a scale-down drain
+        pe_name = crds.pe_name(job, victim.spec["peId"])
+        victim_launch = victim.spec.get("launchCount", 0)
+
+        def mark(res: Resource) -> None:
+            if res.terminating:
+                return
+            spec = dict(res.spec.get("podSpec") or {})
+            spec["avoidNodes"] = [node.name]
+            res.spec["podSpec"] = spec
+            # completion trigger: only a pod of a LATER launch than the
+            # victim proves the replacement is up (the victim keeps
+            # heartbeating Running+connected until the kubelet joins it)
+            res.status["rebalancedLaunch"] = victim_launch
+            set_condition(res, crds.COND_REBALANCING, "True",
+                          reason="HotNode", message=node.name)
+
+        marked = self.api.pes.edit(pe_name, mark, requester=self.name)
+        if marked is None or marked.terminating or \
+                not condition_is(marked, crds.COND_REBALANCING, "True"):
+            return  # a teardown/drain got the PE first
+        self._last_migration = now
+        self.migrations += 1
+        # the loss-proofed restart chain (PR 3/4): kubelet joins the old
+        # runtime (its tail flushes), unpublish stashes the ring, the pod
+        # controller bumps launchCount, the pod conductor recreates, the
+        # scheduler binds the replacement to a cold node, and the fresh
+        # publish preloads the stashed residuals — zero tuples lost
+        self.api.pods.delete(victim.name)
+        self._record("migrate", victim.key, f"off={node.name}")
+
+
+__all__ = [
+    "AvoidHintScorer", "CapacityFilter", "DEFAULT_POD_CORES",
+    "ForcedNodeFilter", "NodeAffinityFilter", "NodeController",
+    "PackingScorer", "PodAffinityFilter", "PodAntiAffinityFilter",
+    "PressureAvoidScorer", "PROFILES", "RebalanceConductor", "SchedContext",
+    "SchedulerController", "SeedSpreadScorer", "SpreadScorer", "feasible_set",
+    "job_mid_drain", "pod_cores", "rank",
+]

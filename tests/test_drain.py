@@ -591,16 +591,23 @@ def test_scaledown_drain_disabled_restores_drop_behaviour():
 @pytest.mark.slow
 def test_adaptive_batching_grows_under_load_and_shrinks_idle():
     """The region channels' emit batch grows under sustained backpressure
-    (visible in the metrics rollup) and decays once the source finishes."""
-    n_tuples = 1500  # small enough that the tail drains well inside the
-    # waits even when time.sleep granularity inflates work_sleep tenfold
+    (visible in the metrics rollup) and decays once the source finishes.
+
+    Load construction budgets for degraded timers (sub-ms sleeps cost up
+    to ~10 ms on a loaded container): the source FLOODS (rate_sleep 0 —
+    faster than the channel by construction, whatever sleep granularity
+    is), the channel's work_sleep is 2 ms (≥ the granularity floor), and
+    the tuple count is sized so the drain-the-tail wait holds even at
+    ~10 ms/tuple worst case (400 × 10 ms = 4 s ≪ the 120 s deadline)."""
+    n_tuples = 400
     p = Platform(num_nodes=4)
     try:
         p.submit("app", {"app": {
             "type": "streams", "width": 1, "pipeline_depth": 1,
             "source": {"tuples": n_tuples, "rate_sleep": 0.0},
-            "channel": {"work_sleep": 0.0005, "emit_batch": 8,
-                        "emit_batch_max": 256}}})
+            "channel": {"work_sleep": 0.002, "emit_batch": 8,
+                        "emit_batch_max": 256},
+            "sink": {"report_every": 10}}})
         assert p.wait_full_health("app", 60)
 
         def region_batch():

@@ -1,0 +1,542 @@
+"""The pluggable scheduling subsystem (node pressure plane + plugin
+scheduler + rebalance + PID policy).
+
+Layers:
+- unit: each filter/scorer plugin in isolation; ``decide_width_pid``
+  (hysteresis, anti-windup, convergence); node ``cores`` CRD validation;
+  the pressure monitor's snapshot/report math;
+- property: filter ORDER never changes the feasible set (filters are pure
+  predicates; the feasible set is their intersection);
+- deterministic interleaving: concurrent Pending pods never double-book a
+  full node (the decide+bind command runs under the pod coordinator's
+  writer lock), and placements are reproducible across event orders;
+- threaded e2e (rebalance): a deliberately oversubscribed single-node job
+  is migrated onto freshly added nodes with zero tuples lost.
+"""
+
+import itertools
+import random
+import time
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import Coordinator, ResourceStore, condition_is, wait_for
+from repro.platform import Platform, crds
+from repro.platform.autoscale import AutoscaleConductor, decide_width_pid
+from repro.platform.cluster import NodePressureMonitor
+from repro.platform.scheduler import (
+    AvoidHintScorer,
+    CapacityFilter,
+    ForcedNodeFilter,
+    NodeAffinityFilter,
+    PackingScorer,
+    PodAffinityFilter,
+    PodAntiAffinityFilter,
+    PressureAvoidScorer,
+    RebalanceConductor,
+    SchedContext,
+    SchedulerController,
+    SeedSpreadScorer,
+    SpreadScorer,
+    feasible_set,
+    pod_cores,
+    rank,
+)
+
+
+def _pod(name, node=None, labels=None, cores=0.5, **want):
+    from repro.core import Resource
+
+    spec = {"job": "j", "peId": 0,
+            "pod_spec": {"labels": labels or {},
+                         "resources": {"cores": cores}, **want}}
+    if node:
+        spec["nodeName"] = node
+    return Resource(kind=crds.POD, name=name, spec=spec,
+                    status={"phase": "Pending"})
+
+
+def _ctx(pod, nodes, placed=()):
+    return SchedContext(pod, nodes, list(placed))
+
+
+# -------------------------------------------------------------- unit: filters
+
+
+def test_forced_node_and_affinity_filters():
+    nodes = [crds.make_node("a", 4, {"gpu": "1"}), crds.make_node("b", 4)]
+    ctx = _ctx(_pod("p", nodeName="a"), nodes)
+    assert [n.name for n in feasible_set(ctx, [ForcedNodeFilter()])] == ["a"]
+    ctx = _ctx(_pod("p", nodeAffinityTags=["gpu"]), nodes)
+    assert [n.name for n in feasible_set(ctx, [NodeAffinityFilter()])] == ["a"]
+
+
+def test_pod_affinity_and_anti_affinity_filters():
+    nodes = [crds.make_node("a", 4), crds.make_node("b", 4)]
+    friend = _pod("friend", node="a", labels={"colo-g": "1"})
+    foe = _pod("foe", node="b", labels={"exlo-x": "1"})
+    ctx = _ctx(_pod("p", podAffinity=["colo-g"]), nodes, [friend, foe])
+    assert [n.name for n in feasible_set(ctx, [PodAffinityFilter()])] == ["a"]
+    ctx = _ctx(_pod("p", podAntiAffinity=["exlo-x"]), nodes, [friend, foe])
+    assert [n.name for n in feasible_set(ctx, [PodAntiAffinityFilter()])] == ["a"]
+    # no placed pod carries the affinity label yet -> vacuously feasible
+    ctx = _ctx(_pod("p", podAffinity=["colo-other"]), nodes, [friend])
+    assert len(feasible_set(ctx, [PodAffinityFilter()])) == 2
+
+
+def test_capacity_filter_accounts_requested_cores():
+    nodes = [crds.make_node("a", 2), crds.make_node("b", 2)]
+    heavy = _pod("h", node="a", cores=1.75)
+    ctx = _ctx(_pod("p", cores=0.5), nodes, [heavy])
+    assert [n.name for n in feasible_set(ctx, [CapacityFilter()])] == ["b"]
+    assert pod_cores({}) == 0.5  # naked pods get the default request
+
+
+# -------------------------------------------------------------- unit: scorers
+
+
+def test_spread_and_packing_scorers_are_inverse_preferences():
+    nodes = [crds.make_node("a", 4), crds.make_node("b", 4)]
+    placed = [_pod("x", node="a", cores=2.0)]
+    ctx = _ctx(_pod("p"), nodes, placed)
+    assert rank(ctx, nodes, [SpreadScorer()]) == ["b", "a"]
+    assert rank(ctx, nodes, [PackingScorer()]) == ["a", "b"]
+    assert rank(ctx, nodes, [SeedSpreadScorer()]) == ["b", "a"]
+
+
+def test_pressure_scorer_prefers_cold_nodes_and_hard_avoids_condition():
+    from repro.core import set_condition
+
+    hot = crds.make_node("hot", 4)
+    hot.status["pressure"] = {"score": 3.0}
+    warm = crds.make_node("warm", 4)
+    warm.status["pressure"] = {"score": 0.5}
+    cold = crds.make_node("zcold", 4)  # name sorts last: score must win
+    ctx = _ctx(_pod("p"), [hot, warm, cold])
+    assert rank(ctx, ctx.nodes, [PressureAvoidScorer()]) == \
+        ["zcold", "warm", "hot"]
+    set_condition(warm, crds.COND_PRESSURE, "True", reason="test")
+    assert PressureAvoidScorer().score(ctx, warm) == 0.0
+
+
+def test_avoid_hint_scorer_is_soft():
+    nodes = [crds.make_node("a", 4), crds.make_node("b", 4)]
+    ctx = _ctx(_pod("p", avoidNodes=["a"]), nodes)
+    assert rank(ctx, nodes, [AvoidHintScorer()]) == ["b", "a"]
+    # every node hinted away -> scores tie, name tie-break decides
+    ctx = _ctx(_pod("p", avoidNodes=["a", "b"]), nodes)
+    assert rank(ctx, nodes, [AvoidHintScorer()]) == ["a", "b"]
+
+
+def test_rank_tie_break_is_deterministic_by_name():
+    nodes = [crds.make_node(n, 4) for n in ("c", "a", "b")]
+    ctx = _ctx(_pod("p"), nodes)
+    assert rank(ctx, ctx.nodes, [SpreadScorer()]) == ["a", "b", "c"]
+
+
+# ----------------------------------------------------- CRD validation (cores)
+
+
+def test_make_node_rejects_nonpositive_cores():
+    for bad in (0, -1, -0.5, True):
+        with pytest.raises(ValueError):
+            crds.make_node("n", bad)
+    assert crds.make_node("n", 2.5).spec["cores"] == 2.5
+
+
+# ----------------------------------------------- property: filter-order free
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 30), st.integers(2, 5), st.integers(0, 6))
+def test_filter_order_never_changes_feasible_set(seed, n_nodes, n_placed):
+    """The feasible set is the intersection of pure predicates — every
+    permutation of the filter pipeline must produce the same set."""
+    rng = random.Random(seed)
+    nodes = [crds.make_node(f"n{i}", rng.choice([1, 2, 4]),
+                            {"gpu": "1"} if rng.random() < 0.5 else {})
+             for i in range(n_nodes)]
+    placed = [_pod(f"placed{i}", node=rng.choice(nodes).name,
+                   labels=rng.choice([{}, {"colo-g": "1"}, {"exlo-x": "1"}]),
+                   cores=rng.choice([0.25, 0.5, 1.0, 2.0]))
+              for i in range(n_placed)]
+    want = {}
+    if rng.random() < 0.3:
+        want["nodeName"] = rng.choice(nodes).name
+    if rng.random() < 0.3:
+        want["nodeAffinityTags"] = ["gpu"]
+    if rng.random() < 0.4:
+        want["podAffinity"] = ["colo-g"]
+    if rng.random() < 0.4:
+        want["podAntiAffinity"] = ["exlo-x"]
+    ctx = _ctx(_pod("p", cores=rng.choice([0.5, 1.0, 3.0]), **want),
+               nodes, placed)
+    filters = [ForcedNodeFilter(), NodeAffinityFilter(),
+               PodAntiAffinityFilter(), PodAffinityFilter(), CapacityFilter()]
+    sets = {tuple(n.name for n in feasible_set(ctx, list(perm)))
+            for perm in itertools.permutations(filters)}
+    assert len(sets) == 1
+
+
+# ------------------------------------- interleaving: no double-booked nodes
+
+
+def _sched_harness():
+    """A standalone scheduler over a manual runtime (no kubelet: naked
+    Pending pods stand in for the pod conductor's creations)."""
+    from repro.core import Runtime
+
+    store = ResourceStore()
+    coord = Coordinator(store, crds.POD)
+    sched = SchedulerController(store, coord, "default")
+    runtime = Runtime(store, threaded=False)
+    runtime.register(sched)
+    return store, sched, runtime
+
+
+def _channel_usage(store):
+    usage = []
+    for node in store.list(kind=crds.NODE):
+        used = sum(pod_cores(p.spec.get("pod_spec", {}))
+                   for p in store.list(crds.POD)
+                   if p.spec.get("nodeName") == node.name
+                   and pod_cores(p.spec.get("pod_spec", {})) >= 1.0)
+        usage.append((node.name, used, node.spec["cores"]))
+    return usage
+
+
+def test_concurrent_pending_pods_never_double_book_a_full_node():
+    """A burst of Pending pods that exactly fills the cluster: every pod is
+    already Pending before the scheduler sees the first one, so a scheduler
+    reading its (stale) reflector cache would bind them all against the
+    same empty picture.  The decide+bind command re-reads the store under
+    the pod coordinator's writer lock, so each decision sees every earlier
+    binding: requested cores never exceed any node's capacity, in any
+    creation order — and placement is a pure function of the creation
+    order (reproducible across runs)."""
+    for seed in range(6):
+        rng = random.Random(seed)
+        order = ["heavy0", "heavy1", "heavy2", "heavy3", "light0", "light1"]
+        rng.shuffle(order)
+        placements = []
+        for _repeat in range(2):  # same order twice: identical placement
+            store, sched, runtime = _sched_harness()
+            store.create(crds.make_node("na", 2))
+            store.create(crds.make_node("nb", 2))
+            for name in order:
+                cores = 1.0 if name.startswith("heavy") else 0.25
+                store.create(_pod(name, cores=cores))
+            runtime.drain()
+            for node, used, cap in _channel_usage(store):
+                assert used <= cap, \
+                    f"seed {seed}: node {node} double-booked ({used} > {cap})"
+            placements.append({p.name: p.spec.get("nodeName")
+                               for p in store.list(crds.POD)})
+            assert all(n for n in placements[-1].values()), "pod left unbound"
+            runtime.stop()
+        assert placements[0] == placements[1], \
+            f"seed {seed}: placement not reproducible"
+
+
+def test_unschedulable_pod_revived_by_node_addition():
+    """A pod no node can host parks Unschedulable; adding a feasible node
+    re-kicks it through the node controller (capacity growth must not
+    strand Pending pods)."""
+    from repro.platform.scheduler import NodeController
+
+    store, sched, runtime = _sched_harness()
+    nodes = NodeController(store, "default", scheduler=sched)
+    runtime.register(nodes)
+    store.create(crds.make_node("plain", 2))
+    store.create(_pod("gpu-pod", nodeAffinityTags=["gpu"]))
+    runtime.drain()
+    assert store.get(crds.POD, "gpu-pod").status["phase"] == "Unschedulable"
+    store.create(crds.make_node("gpu-node", 4, {"gpu": "1"}))
+    runtime.drain()
+    pod = store.get(crds.POD, "gpu-pod")
+    assert pod.spec.get("nodeName") == "gpu-node"
+    assert pod.status["phase"] == "Pending"
+    runtime.stop()
+
+
+# ------------------------------------------------------------ pressure plane
+
+
+def test_pressure_monitor_snapshot_and_conditions():
+    store = ResourceStore()
+    store.create(crds.make_node("hot", 2))
+    store.create(crds.make_node("cold", 8))
+    now = time.time()
+    for i in range(4):
+        pod = _pod(f"p{i}", node="hot")
+        pod.status.update(phase="Running",
+                          metrics={"backpressure": 0.5},
+                          heartbeat=now - (10.0 if i == 0 else 0.0))
+        store.create(pod)
+    coords = {"node": Coordinator(store, crds.NODE)}
+    mon = NodePressureMonitor(store, "default", coords, straggle_after=5.0,
+                              clock=lambda: now)
+    samples = mon.report()
+    assert samples["hot"]["podsPerCore"] == 2.0
+    assert samples["hot"]["ringFill"] == 0.5
+    assert samples["hot"]["heartbeatLag"] == pytest.approx(10.0, abs=0.01)
+    assert samples["cold"]["pods"] == 0
+    hot = store.get(crds.NODE, "hot")
+    cold = store.get(crds.NODE, "cold")
+    assert condition_is(hot, crds.COND_PRESSURE, "True")
+    assert condition_is(hot, crds.COND_STRAGGLING, "True")
+    assert condition_is(cold, crds.COND_PRESSURE, "False")
+    assert hot.status["pressure"]["score"] > cold.status["pressure"]["score"]
+
+
+# ------------------------------------------------------------------ rebalance
+
+
+def _rebalance_fixture(now):
+    """Deterministic store with a sustained-hot node hosting one region pod
+    and one cold node; returns (platform-less pieces, conductor)."""
+    from repro.core import Resource, set_condition
+
+    store = ResourceStore()
+    job = crds.make_job("j", {})
+    job.status["expectedPEs"] = 1
+    set_condition(job, crds.COND_FULL_HEALTH, "True", reason="t")
+    store.create(job)
+    hot = crds.make_node("hot", 1)
+    set_condition(hot, crds.COND_PRESSURE, "True", reason="t", now=now - 60.0)
+    store.create(hot)
+    cold = crds.make_node("cold", 8)
+    set_condition(cold, crds.COND_PRESSURE, "False", reason="t", now=now)
+    store.create(cold)
+    pe = crds.make_pe("j", 2, {"operators": ["ch0[0]"], "podSpec": {}})
+    store.create(pe)
+    cm = crds.make_config_map("j", 2, {"operators": [
+        {"name": "ch0[0]", "kind": "pipe", "region": "par", "channel": 0,
+         "config": {}}]}, 1)
+    store.create(cm)
+    pod = crds.make_pod("j", 2, {"pod_spec": {}}, 1, 1)
+    pod.spec["nodeName"] = "hot"
+    pod.status.update(phase="Running", connected=True,
+                      metrics={"backpressure": 0.9})
+    store.create(pod)
+    cond = RebalanceConductor(store, "default", {}, sustain_s=1.0,
+                              cooldown=0.0, clock=lambda: now)
+    return store, hot, pod, cond
+
+
+def test_rebalance_migrates_region_pe_off_sustained_hot_node():
+    from repro.core import Event, EventType
+
+    now = time.time()
+    store, hot, pod, cond = _rebalance_fixture(now)
+    cond.on_event(Event(seq=1, type=EventType.MODIFIED, resource=hot))
+    assert cond.migrations == 1
+    # the pod was two-phase/hard deleted; the PE carries the hint + condition
+    assert store.try_get(crds.POD, pod.name) is None
+    pe = store.get(crds.PE, crds.pe_name("j", 2))
+    assert condition_is(pe, crds.COND_REBALANCING, "True")
+    assert pe.spec["podSpec"]["avoidNodes"] == ["hot"]
+    # a STALE status event of the victim's own launch (it keeps patching
+    # Running+connected until the kubelet joins it) must NOT complete the
+    # migration — only the replacement launch does
+    stale = crds.make_pod("j", 2, {"pod_spec": {}}, 1, 1)
+    stale.spec["nodeName"] = "hot"
+    stale.status.update(phase="Running", connected=True)
+    cond.on_event(Event(seq=2, type=EventType.MODIFIED, resource=stale))
+    assert condition_is(store.get(crds.PE, crds.pe_name("j", 2)),
+                        crds.COND_REBALANCING, "True")
+    # replacement pod (later launch) comes up Running+connected ->
+    # condition clears and the avoid hint does not outlive the episode
+    newpod = crds.make_pod("j", 2, {"pod_spec": pe.spec["podSpec"]}, 2, 1)
+    newpod.spec["nodeName"] = "cold"
+    newpod.status.update(phase="Running", connected=True)
+    store.create(newpod)
+    cond.on_event(Event(seq=3, type=EventType.MODIFIED, resource=newpod))
+    pe = store.get(crds.PE, crds.pe_name("j", 2))
+    assert condition_is(pe, crds.COND_REBALANCING, "False")
+    assert "avoidNodes" not in pe.spec["podSpec"]
+    assert "rebalancedLaunch" not in pe.status
+
+
+def test_rebalance_gates_on_sustain_cooldown_drain_and_cold_capacity():
+    from repro.core import Event, EventType, set_condition
+
+    now = time.time()
+    # not yet sustained: Pressure flipped True only just now
+    store, hot, pod, cond = _rebalance_fixture(now)
+    set_condition(hot, crds.COND_PRESSURE, "False", reason="t", now=now)
+    set_condition(hot, crds.COND_PRESSURE, "True", reason="t", now=now)
+    cond.on_event(Event(seq=1, type=EventType.MODIFIED, resource=hot))
+    assert cond.migrations == 0
+
+    # mid-drain job: migration must hold
+    store, hot, pod, cond = _rebalance_fixture(now)
+    store.update(crds.POD, pod.name,
+                 lambda r: r.status.update(draining={"requestedAt": now}))
+    cond.on_event(Event(seq=1, type=EventType.MODIFIED,
+                        resource=store.get(crds.NODE, "hot")))
+    assert cond.migrations == 0
+
+    # no cold node anywhere: migrating would reshuffle, not fix
+    store, hot, pod, cond = _rebalance_fixture(now)
+    store.update(crds.NODE, "cold",
+                 lambda r: set_condition(r, crds.COND_PRESSURE, "True",
+                                         reason="t", now=now - 60.0))
+    cond.on_event(Event(seq=1, type=EventType.MODIFIED, resource=hot))
+    assert cond.migrations == 0
+
+    # disabled conductor never migrates
+    store, hot, pod, cond = _rebalance_fixture(now)
+    cond.enabled = False
+    cond.on_event(Event(seq=1, type=EventType.MODIFIED, resource=hot))
+    assert cond.migrations == 0
+
+
+# ------------------------------------------------------------------ PID unit
+
+
+def test_pid_converges_toward_setpoint_band():
+    spec = {"minWidth": 1, "maxWidth": 8, "metric": "pid", "setpoint": 0.5,
+            "kp": 4.0, "hysteresis": 0.1}
+    want, state = decide_width_pid(1, 0.95, spec, None, now=0.0)
+    assert want == 3  # 1 + 4 * 0.45 = 2.8 -> 3
+    # inside the hysteresis deadband: hold
+    want, state = decide_width_pid(3, 0.55, spec, state, now=1.0)
+    assert want == 3
+    # far under the setpoint: shrink
+    want, state = decide_width_pid(3, 0.05, spec, state, now=2.0)
+    assert want == 1  # 3 - 4*0.45 = 1.2 -> 1
+    # no signal at all: clamp-only
+    assert decide_width_pid(9, None, spec, None, now=3.0)[0] == 8
+
+
+def test_pid_anti_windup_freezes_integral_at_saturation():
+    spec = {"minWidth": 1, "maxWidth": 2, "metric": "pid", "setpoint": 0.2,
+            "kp": 1.0, "ki": 1.0, "hysteresis": 0.0, "integralClamp": 8.0}
+    state = {"error": 0.8, "integral": 0.0, "at": 0.0}
+    # saturated high for a long stretch: the integral must not bank error
+    for t in range(1, 20):
+        want, state = decide_width_pid(2, 1.0, spec, state, now=float(t))
+        assert want == 2
+    assert state["integral"] == 0.0  # conditional integration froze it
+    # once the error flips, recovery is immediate, not delayed by windup
+    want, state = decide_width_pid(2, 0.0, spec, state, now=20.0)
+    assert want <= 2
+
+
+def test_pid_state_not_committed_through_gate_holds():
+    """An evaluation discarded by cooldown must not bank integral: after a
+    long hold the released action reflects the error, not wound-up state."""
+    store = ResourceStore()
+    coords = {"pr": Coordinator(store, crds.PARALLEL_REGION),
+              "policy": Coordinator(store, crds.SCALING_POLICY)}
+    now = [100.0]
+    cond = AutoscaleConductor(store, "default", coords, clock=lambda: now[0])
+    store.create(crds.make_parallel_region("j", "par", 2))
+    store.create(crds.make_scaling_policy(
+        "j", "par", metric="pid", signal="backpressure", setpoint=0.5,
+        kp=2.0, ki=1.0, hysteresis=0.0, max_width=8, cooldown=30.0))
+    metrics = crds.make_metrics("j")
+    metrics.status["regions"] = {"par": {"backpressure": 0.9, "channels": 2}}
+    store.create(metrics)
+    assert cond.evaluate("j") == [("par", 2, 3)]  # first action, stamps t=100
+    for t in range(101, 130):  # held by cooldown: every evaluate discarded
+        now[0] = float(t)
+        assert cond.evaluate("j") == []
+    now[0] = 130.5  # cooldown over; integral must not have banked 30 s
+    changes = cond.evaluate("j")
+    assert changes, "gate release never acted"
+    (_, frm, to) = changes[0]
+    # kp*err = 0.8 and ONE ~1 s integration step — not err * 30 s of holds
+    assert to - frm <= 2, f"wound-up jump {frm}->{to}"
+
+
+def test_pid_integral_clamp_bounds_accumulation():
+    spec = {"minWidth": 1, "maxWidth": 100, "metric": "pid", "setpoint": 0.0,
+            "kp": 0.0, "ki": 1.0, "hysteresis": 0.0, "integralClamp": 2.0}
+    state = {"error": 1.0, "integral": 0.0, "at": 0.0}
+    for t in range(1, 30):
+        _, state = decide_width_pid(1, 1.0, spec, state, now=float(t))
+    assert state["integral"] == 2.0
+
+
+def test_pid_policy_drives_width_through_conductor():
+    """The conductor path: a pid policy on the occupancy signal scales the
+    region when the published rollup leaves the deadband."""
+    store = ResourceStore()
+    coords = {"pr": Coordinator(store, crds.PARALLEL_REGION),
+              "policy": Coordinator(store, crds.SCALING_POLICY)}
+    now = [100.0]
+    cond = AutoscaleConductor(store, "default", coords, clock=lambda: now[0])
+    store.create(crds.make_parallel_region("j", "replicas", 1))
+    store.create(crds.make_scaling_policy(
+        "j", "replicas", metric="pid", signal="occupancy", setpoint=0.6,
+        kp=4.0, hysteresis=0.1, max_width=8, cooldown=0.0))
+    metrics = crds.make_metrics("j")
+    metrics.status["regions"] = {"replicas": {"occupancy": 0.95,
+                                              "channels": 1}}
+    store.create(metrics)
+    assert cond.evaluate("j") == [("replicas", 1, 2)]
+    pol = store.get(crds.SCALING_POLICY, crds.policy_name("j", "replicas"))
+    assert "pid" in pol.status  # controller state round-trips on scale
+    # occupancy settles inside the deadband: no further action
+    store.update_status(crds.METRICS, crds.metrics_name("j"),
+                        {"regions": {"replicas": {"occupancy": 0.62,
+                                                  "channels": 2}}})
+    now[0] = 101.0
+    assert cond.evaluate("j") == []
+
+
+def test_autoscaler_holds_scale_up_when_every_node_pressured():
+    from repro.core import set_condition
+
+    store = ResourceStore()
+    coords = {"pr": Coordinator(store, crds.PARALLEL_REGION),
+              "policy": Coordinator(store, crds.SCALING_POLICY)}
+    cond = AutoscaleConductor(store, "default", coords)
+    store.create(crds.make_parallel_region("j", "par", 1))
+    store.create(crds.make_scaling_policy("j", "par", max_width=4,
+                                          cooldown=0.0))
+    metrics = crds.make_metrics("j")
+    metrics.status["regions"] = {"par": {"backpressure": 0.9, "channels": 1}}
+    store.create(metrics)
+    for name in ("n0", "n1"):
+        node = crds.make_node(name, 2)
+        set_condition(node, crds.COND_PRESSURE, "True", reason="t")
+        store.create(node)
+    assert cond.evaluate("j") == []  # widening would amplify a hot node
+    # one node cools down -> the held scale-up proceeds
+    store.update(crds.NODE, "n1",
+                 lambda r: set_condition(r, crds.COND_PRESSURE, "False",
+                                         reason="t"))
+    assert cond.evaluate("j") == [("par", 1, 2)]
+
+
+# -------------------------------------------------------- serve occupancy e2e
+
+
+def test_serve_job_reports_occupancy_and_pid_scales_replicas():
+    """The ROADMAP serve-autoscale chain end to end: server PEs report
+    ServeEngine-shaped slot-occupancy samples, the metrics plane rolls them
+    up per region, and a pid/occupancy policy widens the replicas region."""
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("srv", {"app": {
+            "type": "serve", "replicas": 1,
+            # a request stream that keeps one replica's slots saturated:
+            # admission outruns completion (4 slots x 8 ticks x 1ms/tick)
+            "requests": 0, "request_sleep": 0.002,
+            "slots": 4, "tokens_per_request": 8, "token_sleep": 0.002}})
+        assert p.wait_full_health("srv", 60)
+        assert wait_for(lambda: p.job_metrics("srv").get("regions", {}).get(
+            "replicas", {}).get("occupancy", 0.0) > 0.5, 60), \
+            f"no occupancy rollup: {p.job_metrics('srv')}"
+        p.set_scaling_policy("srv", "replicas", metric="pid",
+                             signal="occupancy", setpoint=0.4, kp=4.0,
+                             hysteresis=0.1, max_width=3, cooldown=0.5)
+        assert wait_for(lambda: p.region_width("srv", "replicas") >= 2, 60), \
+            f"pid never scaled: {p.job_metrics('srv')}"
+        assert p.wait_full_health("srv", 60)
+    finally:
+        p.shutdown()

@@ -13,20 +13,26 @@ from repro.platform.legacy import LegacyPlatform
 
 def test_scenario_kill_random_pes_streams():
     """Paper §6.6: 'randomly killing critical processes' — the app must
-    return to full health after each kill and keep processing."""
+    return to full health after each kill and keep processing.
+
+    Budgeted for degraded timers (sub-ms sleeps cost up to ~10 ms under
+    suite load): the source is throttled at 5 ms — comfortably above the
+    container's sleep-granularity floor, so the job's CPU load stays light
+    and bounded whatever the timer does — and the recovery waits budget
+    the restart chain at suite-load speed, not isolation speed."""
     p = Platform(num_nodes=4)
     try:
         p.submit("chaos", {"app": {"type": "streams", "width": 2,
                                    "pipeline_depth": 2,
-                                   "source": {"rate_sleep": 0.001}}})
-        assert p.wait_full_health("chaos", 60)
+                                   "source": {"rate_sleep": 0.005}}})
+        assert p.wait_full_health("chaos", 120)
         import random
         rng = random.Random(0)
         n_pes = len(p.pods("chaos"))
         for _ in range(3):
             victim = rng.randrange(1, n_pes)  # keep the source alive
             p.kill_pod("chaos", victim)
-            assert p.wait_full_health("chaos", 90), f"no recovery after pe {victim}"
+            assert p.wait_full_health("chaos", 120), f"no recovery after pe {victim}"
 
         def sink_seen():
             for x in p.pods("chaos"):
