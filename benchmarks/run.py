@@ -837,6 +837,105 @@ def bench_roofline() -> None:
              f"useful={t['model_vs_hlo_flops']:.2f}")
 
 
+def bench_latency(out_path: str | None = None, n_tuples: int = 900) -> dict:
+    """Observability plane end to end: delivery-latency percentiles under
+    load, a pod-kill recovery-time span, and an SLO verdict over the run.
+
+    A finite-source streams job runs with a 2-wide channel region; sources
+    stamp ingest watermarks, the sink's P² digests estimate delivery
+    percentiles, and the metrics plane publishes them per job/region.  Mid
+    stream one channel pod is killed: the span tracer times the recovery
+    chain (failure -> recreate -> bind -> start -> connected) and an ``SLO``
+    resource (p95 target, loss budget, recovery bound) is judged into a
+    Met/Violated verdict with an error-budget ledger.  Writes
+    ``results/BENCH_latency.json`` plus a Chrome trace export of the run's
+    span trees.
+    """
+    spec = {"app": {"type": "streams", "width": 2, "pipeline_depth": 1,
+                    "source": {"tuples": n_tuples, "rate_sleep": 0.001},
+                    "channel": {"work_sleep": 0.0005,
+                                "emit_batch": 16, "emit_batch_max": 32},
+                    "sink": {"report_every": 10}},
+            "drain": {"timeout": 15.0, "grace": 0.3}}
+    slo_spec = {"latency_p95_ms": 500.0, "loss_budget": 64,
+                "recovery_time_s": 30.0}
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("j", spec)
+        assert p.wait_full_health("j", 120)
+        p.set_slo("j", **slo_spec)
+
+        def sink_seen():
+            return _sink_seen(p, "j")
+
+        assert wait_for(lambda: sink_seen() > 150, 60)
+        # mid-stream chaos: kill one channel pod, time the recovery
+        t0 = time.monotonic()
+        p.kill_pod("j", 1)
+        wait_for(lambda: not p.job_status("j").get("fullHealth"), 20)
+        assert p.wait_full_health("j", 120)
+        recovery_wall_s = time.monotonic() - t0
+        # quiesce: the finite source completes and the sink count stops
+        last = [-1, time.monotonic()]
+
+        def quiesced():
+            seen = sink_seen()
+            if seen != last[0]:
+                last[0] = seen
+                last[1] = time.monotonic()
+            return seen >= n_tuples or time.monotonic() - last[1] > 2.0
+        wait_for(quiesced, 120)
+        seen = sink_seen()
+        assert wait_for(
+            lambda: p.slo_status("j").get("ledger", {}).get("evaluations", 0) > 0,
+            30)
+        m = p.job_metrics("j")
+        latency = {k: m.get(k) for k in
+                   ("latencyP50", "latencyP95", "latencyP99",
+                    "latencyMax", "latencySamples")}
+        recs = [s for s in p.trace.spans(name="recover")
+                if s.attrs.get("job") == "j" and s.t1 is not None]
+        recovery_span_s = max(s.t1 - s.t0 for s in recs) if recs else None
+        recovery_chain = p.trace.render(recs[-1]) if recs else ""
+        slo = p.slo_status("j")
+        verdicts = {c["type"]: c["status"]
+                    for c in slo.get("conditions", ())
+                    if c["type"] in ("Met", "Violated")}
+        results_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+        os.makedirs(results_dir, exist_ok=True)
+        trace_path = os.path.join(results_dir, "BENCH_latency_trace.json")
+        p.export_trace(trace_path)
+        report = {
+            "benchmark": "latency",
+            "emitted": n_tuples, "delivered": seen,
+            "lost": n_tuples - seen,
+            "metricsDropped": m.get("tuplesDropped", 0),
+            "latency_ms": latency,
+            "recovery": {"wall_s": round(recovery_wall_s, 4),
+                         "span_s": round(recovery_span_s, 4)
+                         if recovery_span_s is not None else None,
+                         "spans": len(recs),
+                         "chain": recovery_chain.splitlines()},
+            "slo": {"spec": slo_spec, "verdicts": verdicts,
+                    "ledger": slo.get("ledger", {})},
+            "trace_export": os.path.basename(trace_path),
+            "prometheus_sample": p.metrics_text().splitlines()[:12],
+        }
+    finally:
+        p.shutdown()
+    out = out_path or os.path.join(os.path.dirname(__file__), "..", "results",
+                                   "BENCH_latency.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("latency.p95_ms", 0.0, str(latency.get("latencyP95")))
+    emit("latency.recovery_span", recovery_span_s or 0.0,
+         f"wall={recovery_wall_s:.2f}s")
+    emit("latency.slo_verdict", 0.0,
+         "Met" if verdicts.get("Met") == "True" else "Violated")
+    return report
+
+
 BENCHES = {
     "fig7": bench_fig7_job_lifecycle,
     "fig7c": bench_fig7c_gc_vs_bulk,
@@ -851,13 +950,15 @@ BENCHES = {
     "scale_down": bench_scaledown,
     "teardown": bench_teardown,
     "oversub": bench_oversub,
+    "latency": bench_latency,
 }
 
 # cheap subset for CI (`--smoke`): seconds not minutes (scale_down and
 # oversub are the Platform spin-ups — a few seconds per mode — because
 # zero-loss scale-down and pressure-aware scheduling are acceptance
 # criteria, not just trajectories)
-SMOKE = ("fig7c", "table1", "transport", "scale_down", "teardown", "oversub")
+SMOKE = ("fig7c", "table1", "transport", "scale_down", "teardown", "oversub",
+         "latency")
 
 
 def main() -> None:
@@ -885,6 +986,7 @@ def main() -> None:
     if smoke:  # the CI guard must actually guard
         results_dir = os.path.join(os.path.dirname(__file__), "..", "results")
         for artifact in ("BENCH_transport.json", "BENCH_scaledown.json",
+                         "BENCH_latency.json",
                          "BENCH_teardown.json", "BENCH_oversub.json"):
             if not os.path.exists(os.path.join(results_dir, artifact)):
                 print(f"SMOKE FAIL: results/{artifact} not produced",

@@ -1,17 +1,57 @@
 #!/usr/bin/env bash
 # Tier-1 verification + cheap benchmark smoke. Run from the repo root.
+#
+# The tier-1 suite runs ~10 minutes serially, so CI splits it into two
+# parallel shards via TIER1_SHARD=1|2 (unset = run everything — the local
+# default).  Shard 2 names the heavy threaded files explicitly; shard 1 is
+# *everything else*, so a newly added test file always lands in shard 1
+# instead of being silently skipped.  Shard 1 also carries the benchmark
+# smoke + docs checks (its test half is the lighter one).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests"
-python -m pytest -x -q
+# the two heaviest files by --durations (~170 s of ~270 s serial); the
+# remaining ~100 s of tests plus the bench smoke + docs checks balance out
+# as shard 1
+SHARD2=(
+  tests/test_models.py
+  tests/test_platform_e2e.py
+)
 
-echo "== benchmark smoke (fig7c, table1, transport, scale_down, teardown, oversub)"
+shard="${TIER1_SHARD:-all}"
+case "$shard" in
+  1)
+    echo "== tier-1 tests (shard 1: everything not in shard 2)"
+    ignores=()
+    for f in "${SHARD2[@]}"; do ignores+=("--ignore=$f"); done
+    python -m pytest -x -q --durations=20 "${ignores[@]}"
+    ;;
+  2)
+    echo "== tier-1 tests (shard 2: heaviest suites)"
+    python -m pytest -x -q --durations=20 "${SHARD2[@]}"
+    ;;
+  all)
+    echo "== tier-1 tests"
+    python -m pytest -x -q --durations=20
+    ;;
+  *)
+    echo "unknown TIER1_SHARD='$shard' (want 1, 2, or unset)" >&2
+    exit 2
+    ;;
+esac
+
+if [ "$shard" = "2" ]; then
+  echo "CI OK (shard 2: tests only)"
+  exit 0
+fi
+
+echo "== benchmark smoke (fig7c, table1, transport, scale_down, teardown, oversub, latency)"
 # drop stale artifacts so run.py's --smoke artifact gates are real
 rm -f results/BENCH_transport.json results/BENCH_scaledown.json \
-      results/BENCH_teardown.json results/BENCH_oversub.json
+      results/BENCH_teardown.json results/BENCH_oversub.json \
+      results/BENCH_latency.json
 python benchmarks/run.py --smoke
 
 echo "== docs checks (README/ARCHITECTURE references, examples import)"

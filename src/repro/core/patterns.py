@@ -25,6 +25,7 @@ random interleavings of event delivery must converge to the same final state.
 from __future__ import annotations
 
 import threading
+from collections import deque
 from typing import Callable, Iterable, Optional
 
 from .resources import (
@@ -39,11 +40,17 @@ from .resources import (
 
 class CausalTrace:
     """Records (actor, action, resource, detail) tuples so causal chains can
-    be asserted on in tests and rendered for debugging."""
+    be asserted on in tests and rendered for debugging.
 
-    def __init__(self) -> None:
+    ``entries`` is a bounded ring (``maxlen`` records): a long-lived harness
+    keeps only the most recent window instead of growing without limit.  The
+    default is large enough that no single test scenario ever evicts — the
+    single-writer property tests iterate the full run's entries.
+    """
+
+    def __init__(self, maxlen: int | None = 100_000) -> None:
         self._lock = threading.Lock()
-        self.entries: list[tuple[str, str, tuple, str]] = []
+        self.entries: deque[tuple[str, str, tuple, str]] = deque(maxlen=maxlen)
 
     def record(self, actor: str, action: str, key: tuple, detail: str = "") -> None:
         with self._lock:

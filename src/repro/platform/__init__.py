@@ -13,7 +13,7 @@ import tempfile
 import time
 
 from ..ckpt import CheckpointStore
-from ..core import CausalTrace, ResourceStore, Runtime, wait_for
+from ..core import ResourceStore, Runtime, wait_for
 from . import crds
 from .api import ApiClient
 from .autoscale import AutoscaleConductor
@@ -21,6 +21,8 @@ from .cluster import KubeletController, NodePressureMonitor
 from .fabric import Fabric
 from .metrics import MetricsPlane
 from .scheduler import NodeController, RebalanceConductor, SchedulerController
+from .slo import SLOConductor
+from .tracing import SpanTracer
 from .operator import (
     ConsistentRegionController,
     ConsistentRegionOperator,
@@ -52,7 +54,10 @@ class Platform:
                  pressure_interval: float = 0.5):
         self.namespace = namespace
         self.store = store or ResourceStore(wal_path=wal_path)
-        self.trace = CausalTrace()
+        # the span tracer IS the causal trace (tracing.py grows it): flat
+        # records for chain assertions, parented timed spans for the
+        # observability plane
+        self.trace = SpanTracer()
         self.fabric = Fabric(dns_delay=dns_delay)
         self.ckpt = CheckpointStore(ckpt_root or tempfile.mkdtemp(prefix="repro-ckpt-"))
 
@@ -61,7 +66,8 @@ class Platform:
         self.api = ApiClient(self.store, namespace, trace=self.trace)
         coords = self.api.coords
         self.coords = coords
-        self.rest = RestFacade(self.store, coords["pod"], self.ckpt, namespace)
+        self.rest = RestFacade(self.store, coords["pod"], self.ckpt, namespace,
+                               trace=self.trace)
 
         # --- instance operator actors
         self.job_controller = JobController(self.store, namespace, coords,
@@ -94,6 +100,10 @@ class Platform:
                                           self.trace, api=self.api)
         self.autoscaler = AutoscaleConductor(self.store, namespace, coords,
                                              self.trace, api=self.api)
+        # SLO verdict plane: judges Metrics rollups + recovery spans into
+        # Met/Violated conditions and an error-budget ledger
+        self.slo_conductor = SLOConductor(self.store, namespace, coords,
+                                          self.trace, api=self.api)
 
         # conductor registration (paper Fig. 4 observation matrix)
         self.pe_controller.add_listener(self.pod_conductor)
@@ -103,6 +113,10 @@ class Platform:
         self.pod_controller.add_listener(self.cr_operator)
         self.pod_controller.add_listener(self.metrics_plane)
         self.job_controller.add_listener(self.job_conductor)
+        # Job deletions prune the metrics plane's per-job ledgers and the
+        # SLO conductor's throttle map
+        self.job_controller.add_listener(self.metrics_plane)
+        self.job_controller.add_listener(self.slo_conductor)
         self.import_controller.add_listener(self.broker)
         self.export_controller.add_listener(self.broker)
         self.cr_controller.add_listener(self.cr_operator)
@@ -133,11 +147,19 @@ class Platform:
         self.metrics_controller.add_listener(self.autoscaler)
         self.policy_controller.add_listener(self.autoscaler)
 
+        # SLO events reach the verdict plane the same way; Metrics updates
+        # re-judge standing SLOs at the evaluation cadence.
+        self.slo_controller = Controller(self.store, crds.SLO, namespace,
+                                         "slo-controller", self.trace)
+        self.slo_controller.add_listener(self.slo_conductor)
+        self.metrics_controller.add_listener(self.slo_conductor)
+
         controllers = [
             self.job_controller, self.pe_controller, self.pod_controller,
             self.pr_controller, self.import_controller, self.export_controller,
             self.cr_controller, self.cm_controller, self.svc_controller,
             self.metrics_controller, self.policy_controller,
+            self.slo_controller,
         ]
 
         # --- cluster substrate (Kubernetes's half): plugin scheduler fed by
@@ -228,6 +250,25 @@ class Platform:
 
     def delete_scaling_policy(self, job: str, region: str) -> bool:
         return self.api.scaling_policies.delete(crds.policy_name(job, region))
+
+    def set_slo(self, job: str, **kw):
+        """kubectl apply slo ... — declare the job's pass/fail contract
+        (latency targets / loss budget / recovery bound; see ``make_slo``)."""
+        res = crds.make_slo(job, namespace=self.namespace, **kw)
+        return self.api.slos.apply(res, requester="user")
+
+    def slo_status(self, job: str) -> dict:
+        """The SLO conductor's published verdict + error-budget ledger."""
+        res = self.store.try_get(crds.SLO, crds.slo_name(job), self.namespace)
+        return dict(res.status) if res else {}
+
+    def metrics_text(self) -> str:
+        """Prometheus-style text exposition (the ``/metrics`` scrape)."""
+        return self.rest.metrics_text()
+
+    def export_trace(self, path: str) -> str:
+        """Write the span ring as Chrome trace-event JSON."""
+        return self.trace.export_chrome(path)
 
     def region_width(self, job: str, region: str) -> int:
         pr = self.store.try_get(crds.PARALLEL_REGION, crds.pr_name(job, region),

@@ -49,6 +49,7 @@ HANDLES = {
     "consistent_regions": (crds.CONSISTENT_REGION, "cr"),
     "metrics": (crds.METRICS, "metrics"),
     "scaling_policies": (crds.SCALING_POLICY, "policy"),
+    "slos": (crds.SLO, "slo"),
     "config_maps": (crds.CONFIG_MAP, "cm"),
     "services": (crds.SERVICE, "svc"),
     "imports": (crds.IMPORT, "import"),
@@ -207,6 +208,7 @@ class ApiClient:
     consistent_regions: KindApi
     metrics: KindApi
     scaling_policies: KindApi
+    slos: KindApi
     config_maps: KindApi
     services: KindApi
     imports: KindApi

@@ -31,6 +31,7 @@ from .fabric import Fabric
 from .runtime import PERuntime
 from .scheduler import NodeController, SchedulerController  # noqa: F401 — the
 #   scheduler moved to scheduler.py; re-exported for substrate callers
+from .tracing import drain_token, pod_token, span_tracer
 
 
 class PodHandle:
@@ -120,16 +121,26 @@ class KubeletController(Controller):
         the drain parameters + handoff targets."""
         with self._hlock:
             handle = self.handles.get(pod.name)
+        sp = span_tracer(self.trace)
+        parent = sp.context(drain_token(pod.name)) if sp is not None else None
         if handle is None or not handle.runtime.is_alive():
             # nothing running here (already exited): report an empty drain
             # so the pod conductor finalizes the retirement
+            if sp is not None:
+                sp.end_span(sp.start_span(self.name, "begin-drain", pod.key,
+                                          parent=parent, empty=True))
             self.pod_coord.submit_status(
                 pod.name, {"drained": {"tuplesDropped": 0, "handedOff": 0,
                                        "drainMs": 0.0, "clean": True}},
                 requester=self.name)
             return
-        self.fabric.set_draining(pod.spec["job"], pod.spec["peId"])
-        handle.runtime.begin_drain(pod.status["draining"])
+        if sp is None:
+            self.fabric.set_draining(pod.spec["job"], pod.spec["peId"])
+            handle.runtime.begin_drain(pod.status["draining"])
+        else:
+            with sp.span(self.name, "begin-drain", pod.key, parent=parent):
+                self.fabric.set_draining(pod.spec["job"], pod.spec["peId"])
+                handle.runtime.begin_drain(pod.status["draining"])
 
     def _maybe_start(self, pod: Resource) -> None:
         if not pod.spec.get("nodeName") or pod.status.get("phase") != "Pending" \
@@ -153,6 +164,15 @@ class KubeletController(Controller):
                 cpu_share=(lambda n=node: self.cpu_share(n)))
             self.handles[pod.name] = PodHandle(runtime, stop, node)
             self._recompute_shares()
+        sp = span_tracer(self.trace)
+        if sp is not None:
+            with sp.span(self.name, "start-pod", pod.key,
+                         parent=sp.context(pod_token(pod.name)),
+                         node=node, launch=pod.spec.get("launchCount", 0)):
+                self.pod_coord.submit_status(pod.name, {"phase": "Running"},
+                                             requester=self.name)
+                runtime.start()
+            return
         self.pod_coord.submit_status(pod.name, {"phase": "Running"},
                                      requester=self.name)
         runtime.start()
@@ -192,6 +212,19 @@ class KubeletController(Controller):
             return False
         handle.stop_event.set()
         handle.runtime.join(timeout=5.0)
+        sp = span_tracer(self.trace)
+        if sp is not None:
+            # the recovery clock starts at the failure injection: the span
+            # stays open through restart-chain links (recover/bind/start,
+            # parented here via the pod token) until the replacement
+            # runtime reports connected
+            pod = self.store.try_get(crds.POD, pod_name)
+            if pod is not None and sp.context(pod_token(pod_name)) is None:
+                sp.attach(pod_token(pod_name),
+                          sp.start_span("chaos", "recover", pod.key,
+                                        job=handle.runtime.job,
+                                        pe=handle.runtime.pe_id,
+                                        cause="kill"))
         self.pod_coord.submit_status(pod_name, {"phase": "Failed"},
                                      requester="chaos")
         return True

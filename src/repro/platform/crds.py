@@ -55,9 +55,10 @@ NODE = "Node"
 TEST_SUITE = "TestSuite"
 METRICS = "Metrics"
 SCALING_POLICY = "ScalingPolicy"
+SLO = "SLO"
 
 CUSTOM_KINDS = (JOB, PE, PARALLEL_REGION, HOSTPOOL, IMPORT, EXPORT,
-                CONSISTENT_REGION, TEST_SUITE, METRICS, SCALING_POLICY)
+                CONSISTENT_REGION, TEST_SUITE, METRICS, SCALING_POLICY, SLO)
 K8S_KINDS = (CONFIG_MAP, POD, SERVICE, NODE)
 
 
@@ -96,6 +97,14 @@ COND_STRAGGLING = "Straggling"
 #: The autoscale conductor holds decisions for the job while this stands —
 #: a generation change mid-migration would re-plan under the moving PE.
 COND_REBALANCING = "Rebalancing"
+#: SLO: every objective dimension (latency / loss / recovery) is within its
+#: target over the evaluation window.  Written only by the SLO conductor via
+#: the slo coordinator; ``Met`` and ``Violated`` are always set as a
+#: complementary pair so consumers can wait on either polarity.
+COND_SLO_MET = "Met"
+#: SLO: at least one objective dimension is out of budget; the condition
+#: reason names the failing dimensions.
+COND_SLO_VIOLATED = "Violated"
 
 #: Finalizer a retiring PE/Pod carries while draining: deletion only stamps
 #: ``deletion_timestamp``; the drained report removes the finalizer and the
@@ -143,6 +152,10 @@ def metrics_name(job: str) -> str:
 
 def policy_name(job: str, region: str) -> str:
     return f"{job}-scale-{region}"
+
+
+def slo_name(job: str) -> str:
+    return f"{job}-slo"
 
 
 def job_labels(job: str) -> dict:
@@ -443,6 +456,45 @@ def make_scaling_policy(job: str, region: str, *, min_width: int = 1,
         labels=job_labels(job),
         owner_refs=(OwnerRef(JOB, job),),
         status={"lastScaleAt": 0.0},
+    )
+
+
+def make_slo(job: str, *, latency_p95_ms: float | None = None,
+             latency_p99_ms: float | None = None,
+             loss_budget: int | None = 0,
+             recovery_time_s: float | None = None,
+             namespace: str = "default") -> Resource:
+    """SLO CRD: the pass/fail contract a job's observability rolls up into.
+
+    spec:   ``job``; any subset of objective dimensions (``None`` disables
+            a dimension):
+
+            - ``latencyP95Ms`` / ``latencyP99Ms``: end-to-end delivery
+              latency targets, judged against the Metrics rollup's digest
+              percentiles (ingest watermark -> sink);
+            - ``lossBudgetTuples``: how many tuples the job may drop
+              (drain-timeout / undelivered-output accounting) before the
+              SLO is violated;
+            - ``recoveryTimeS``: upper bound on any single pod
+              restart/recovery span (failure detected -> replacement
+              connected), judged against the span tracer's ``recover``
+              spans.
+
+    status: ``Met`` / ``Violated`` conditions (a complementary pair; the
+            Violated reason names the failing dimensions) and ``ledger`` —
+            the error-budget ledger {evaluations, violations, burnRate,
+            worstP95Ms, worstP99Ms, lossSpentTuples, worstRecoveryS,
+            lastVerdictAt}.  Written only through the slo coordinator.
+    """
+    return Resource(
+        kind=SLO, name=slo_name(job), namespace=namespace,
+        spec={"job": job, "latencyP95Ms": latency_p95_ms,
+              "latencyP99Ms": latency_p99_ms,
+              "lossBudgetTuples": loss_budget,
+              "recoveryTimeS": recovery_time_s},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+        status={"ledger": {}},
     )
 
 

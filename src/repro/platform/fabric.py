@@ -78,6 +78,114 @@ class ShutDown(Exception):
     pass
 
 
+class P2Quantile:
+    """Streaming quantile estimator (Jain & Chlamtac's P² algorithm).
+
+    O(1) memory (five markers), pure python, no sorting — the data plane can
+    afford to feed it per delivered tuple.  Used by sink PEs to estimate
+    delivery-latency percentiles from the ingest watermarks sources stamp
+    into tuples; the estimates ride the normal load-sample path into the
+    metrics plane.
+    """
+
+    def __init__(self, p: float):
+        if not 0.0 < p < 1.0:
+            raise ValueError("quantile must be in (0, 1)")
+        self.p = p
+        self.n = 0
+        self._q: list[float] = []       # marker heights
+        self._pos: list[float] = []     # marker positions (1-based)
+        self._want: list[float] = []    # desired positions
+        self._dpos = [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0]
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        if self.n <= 5:
+            self._q.append(x)
+            self._q.sort()
+            if self.n == 5:
+                self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+                self._want = [1.0 + 4.0 * d for d in self._dpos]
+            return
+        q, pos = self._q, self._pos
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = next(i for i in range(4) if q[i] <= x < q[i + 1])
+        for i in range(k + 1, 5):
+            pos[i] += 1.0
+        for i in range(5):
+            self._want[i] += self._dpos[i]
+        # adjust interior markers toward their desired positions
+        for i in (1, 2, 3):
+            d = self._want[i] - pos[i]
+            if (d >= 1.0 and pos[i + 1] - pos[i] > 1.0) or \
+               (d <= -1.0 and pos[i - 1] - pos[i] < -1.0):
+                d = 1.0 if d > 0 else -1.0
+                qp = self._parabolic(i, d)
+                if not q[i - 1] < qp < q[i + 1]:
+                    qp = self._linear(i, d)
+                q[i] = qp
+                pos[i] += d
+
+    def _parabolic(self, i: int, d: float) -> float:
+        q, n = self._q, self._pos
+        return q[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+
+    def _linear(self, i: int, d: float) -> float:
+        q, n = self._q, self._pos
+        j = i + (1 if d > 0 else -1)
+        return q[i] + d * (q[j] - q[i]) / (n[j] - n[i])
+
+    def value(self) -> float:
+        if self.n == 0:
+            return 0.0
+        if self.n <= 5:
+            srt = sorted(self._q)
+            idx = min(int(round(self.p * (len(srt) - 1))), len(srt) - 1)
+            return srt[idx]
+        return self._q[2]
+
+
+class LatencyDigest:
+    """P50/P95/P99 delivery-latency digest a sink feeds per tuple.
+
+    Latencies are observed in seconds (now - ingest watermark) and reported
+    in milliseconds, matching the SLO CRD's ``latencyP95Ms`` vocabulary.
+    """
+
+    QUANTILES = (("p50", 0.50), ("p95", 0.95), ("p99", 0.99))
+
+    def __init__(self):
+        self._est = {label: P2Quantile(q) for label, q in self.QUANTILES}
+        self.count = 0
+        self.max = 0.0
+
+    def observe(self, latency_s: float) -> None:
+        self.count += 1
+        if latency_s > self.max:
+            self.max = latency_s
+        for est in self._est.values():
+            est.add(latency_s)
+
+    def snapshot_ms(self) -> dict:
+        """``{latencyP50: .., latencyP95: .., latencyP99: .., latencyMax: ..,
+        latencySamples: n}`` in milliseconds (empty dict before any sample)."""
+        if not self.count:
+            return {}
+        out = {f"latency{label.upper()[0]}{label[1:]}": round(est.value() * 1e3, 3)
+               for label, est in self._est.items()}
+        out["latencyMax"] = round(self.max * 1e3, 3)
+        out["latencySamples"] = self.count
+        return out
+
+
 class TupleQueue:
     """Bounded blocking ring standing in for a PE-PE TCP connection.
 

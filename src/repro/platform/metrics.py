@@ -41,7 +41,7 @@ from .api import ApiClient, ensure_api
 class MetricsPlane(Conductor):
     """Aggregates pod metric samples and publishes Metrics resources."""
 
-    kinds = (crds.POD,)
+    kinds = (crds.POD, crds.JOB)
 
     def __init__(self, store, namespace, coords, trace=None, *, api=None,
                  window: float = 5.0, publish_interval: float = 0.2,
@@ -60,6 +60,18 @@ class MetricsPlane(Conductor):
     # ------------------------------------------------------------ ingestion
 
     def on_event(self, event: Event) -> None:
+        if event.resource.kind == crds.JOB:
+            if event.type == EventType.DELETED:
+                # the job is gone: drop *all* per-job state, not just the
+                # per-pod windows — the retired-drop ledger and the publish
+                # throttle otherwise leak one entry per job for the life of
+                # the harness
+                job = event.resource.name
+                self._retired_drops.pop(job, None)
+                self._last_publish.pop(job, None)
+                for k in [k for k in self._samples if k[0] == job]:
+                    del self._samples[k]
+            return
         pod = event.resource
         job = pod.spec.get("job")
         pe_id = pod.spec.get("peId")
@@ -109,6 +121,32 @@ class MetricsPlane(Conductor):
         d = s1.get(key, 0) - s0.get(key, 0)
         return max(d, 0) / (t1 - t0)
 
+    _LAT_KEYS = ("latencyP50", "latencyP95", "latencyP99")
+
+    @classmethod
+    def _latency_fold(cls, acc: dict, sample: dict) -> None:
+        """Fold one PE's latency digest into a rollup accumulator
+        (sample-weighted mean per percentile — an approximation, but the
+        digests are already estimates and sinks dominate their own jobs)."""
+        n = sample.get("latencySamples", 0)
+        if not n:
+            return
+        acc["latencySamples"] = acc.get("latencySamples", 0) + n
+        acc["latencyMax"] = max(acc.get("latencyMax", 0.0),
+                                sample.get("latencyMax", 0.0))
+        for k in cls._LAT_KEYS:
+            acc[k] = acc.get(k, 0.0) + n * sample.get(k, 0.0)
+
+    @classmethod
+    def _latency_finish(cls, acc: dict) -> dict:
+        n = acc.get("latencySamples", 0)
+        if not n:
+            return {}
+        out = {k: round(acc[k] / n, 3) for k in cls._LAT_KEYS}
+        out["latencyMax"] = round(acc["latencyMax"], 3)
+        out["latencySamples"] = n
+        return out
+
     @staticmethod
     def _region_zero(dropped: int = 0) -> dict:
         """Empty region aggregate (also the shape published for regions
@@ -121,6 +159,8 @@ class MetricsPlane(Conductor):
         """Pure rollup of the current windows for one job."""
         operators: dict = {}
         regions: dict = {}
+        region_lat: dict = {}
+        job_lat: dict = {}
         retired = self._retired_drops.get(job, {})
         dropped_total = sum(retired.values())
         for (j, pe_id), win in self._samples.items():
@@ -131,9 +171,11 @@ class MetricsPlane(Conductor):
             op_entry = {**latest, "rate": rate, "peId": pe_id}
             operators[latest["operator"]] = op_entry
             dropped_total += latest.get("tuplesDropped", 0)
+            self._latency_fold(job_lat, latest)
             region = latest.get("region")
             if not region:
                 continue
+            self._latency_fold(region_lat.setdefault(region, {}), latest)
             agg = regions.setdefault(region, {
                 **self._region_zero(retired.get(region, 0)),
                 "stepTimeSamples": 0, "occupancySamples": 0})
@@ -164,8 +206,14 @@ class MetricsPlane(Conductor):
         for region, n in retired.items():
             if region and region not in regions:
                 regions[region] = self._region_zero(n)
+        # delivery-latency percentiles (ms), from the sink digests: per
+        # region where a member reported them, and per job at the top level
+        for region, acc in region_lat.items():
+            if region in regions:
+                regions[region].update(self._latency_finish(acc))
         return {"operators": operators, "regions": regions,
-                "tuplesDropped": dropped_total}
+                "tuplesDropped": dropped_total,
+                **self._latency_finish(job_lat)}
 
     # ------------------------------------------------------------ publishing
 

@@ -53,6 +53,7 @@ from . import crds
 from .api import ApiClient, ensure_api
 from .fabric import Fabric
 from .pipeline import JobPlan, drain_handoff, plan_job
+from .tracing import drain_token, migrate_token, pod_token, span_tracer
 
 
 # ----------------------------------------------------------- REST facade
@@ -66,11 +67,13 @@ class RestFacade:
     """
 
     def __init__(self, store: ResourceStore, pod_coord: Coordinator,
-                 ckpt: CheckpointStore, namespace: str = "default"):
+                 ckpt: CheckpointStore, namespace: str = "default",
+                 trace=None):
         self.store = store
         self.pod_coord = pod_coord
         self.ckpt = ckpt
         self.namespace = namespace
+        self.trace = trace
         self.cr_operator = None  # wired by Platform
         self.broker = None
         self._last_metric: dict = {}
@@ -78,6 +81,12 @@ class RestFacade:
     def notify_connected(self, job: str, pe_id: int) -> None:
         self.pod_coord.submit_status(crds.pod_name(job, pe_id),
                                      {"connected": True}, requester="pe-rest")
+        sp = span_tracer(self.trace)
+        if sp is not None:
+            # a connected runtime is the end of any in-flight recovery span
+            # for this pod (kill/crash/migration restart chains)
+            sp.end_span(sp.detach(pod_token(crds.pod_name(job, pe_id))),
+                        connected=True)
 
     def notify_source_done(self, job: str, pe_id: int) -> None:
         self.pod_coord.submit_status(crds.pod_name(job, pe_id),
@@ -121,6 +130,70 @@ class RestFacade:
         set against this and only re-read ``get_routes`` when it moves
         (instead of re-matching + re-resolving per tuple)."""
         return self.broker.epoch if self.broker is not None else 0
+
+    # ------------------------------------------------- metrics exposition
+
+    _PROM_HELP = {
+        "streams_job_throughput_tuples": ("gauge", "Sum of region throughputs (tuples/s)"),
+        "streams_region_throughput_tuples": ("gauge", "Region tuple rate (tuples/s)"),
+        "streams_region_backpressure": ("gauge", "Mean input-queue fill across the region"),
+        "streams_job_tuples_dropped": ("counter", "Cumulative drain-fallback tuple drops"),
+        "streams_job_delivery_latency_ms": ("gauge", "End-to-end delivery latency percentile (ms)"),
+        "streams_slo_met": ("gauge", "1 when every SLO objective is within budget"),
+        "streams_slo_violations": ("counter", "SLO evaluations that returned Violated"),
+        "streams_slo_burn_rate": ("gauge", "violations / evaluations"),
+    }
+
+    def metrics_text(self) -> str:
+        """Prometheus-style text exposition of every job's Metrics rollup
+        and SLO ledger (the scrape endpoint a real deployment would serve
+        at ``/metrics``; tests and benchmarks call it directly)."""
+        samples: dict[str, list[str]] = {name: [] for name in self._PROM_HELP}
+
+        def add(metric: str, labels: dict, value) -> None:
+            if value is None:
+                return
+            lbl = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+            samples[metric].append(f"{metric}{{{lbl}}} {value}")
+
+        for res in self.store.list(crds.METRICS, self.namespace):
+            job = res.spec.get("job", res.name)
+            st = res.status
+            total = 0.0
+            for region, agg in (st.get("regions") or {}).items():
+                total += agg.get("throughput", 0.0)
+                add("streams_region_throughput_tuples",
+                    {"job": job, "region": region},
+                    round(agg.get("throughput", 0.0), 3))
+                add("streams_region_backpressure",
+                    {"job": job, "region": region},
+                    round(agg.get("backpressure", 0.0), 4))
+            add("streams_job_throughput_tuples", {"job": job}, round(total, 3))
+            add("streams_job_tuples_dropped", {"job": job},
+                st.get("tuplesDropped", 0))
+            for q, key in (("0.5", "latencyP50"), ("0.95", "latencyP95"),
+                           ("0.99", "latencyP99")):
+                add("streams_job_delivery_latency_ms",
+                    {"job": job, "quantile": q}, st.get(key))
+        for res in self.store.list(crds.SLO, self.namespace):
+            job = res.spec.get("job", res.name)
+            ledger = res.status.get("ledger") or {}
+            met = next((c for c in res.status.get("conditions", ())
+                        if c.get("type") == crds.COND_SLO_MET), None)
+            if met is not None:
+                add("streams_slo_met", {"job": job},
+                    1 if met.get("status") == "True" else 0)
+            add("streams_slo_violations", {"job": job},
+                ledger.get("violations"))
+            add("streams_slo_burn_rate", {"job": job}, ledger.get("burnRate"))
+        lines = []
+        for metric, (mtype, help_text) in self._PROM_HELP.items():
+            if not samples[metric]:
+                continue
+            lines.append(f"# HELP {metric} {help_text}")
+            lines.append(f"# TYPE {metric} {mtype}")
+            lines.extend(samples[metric])
+        return "\n".join(lines) + ("\n" if lines else "")
 
 
 # ------------------------------------------------------------ controllers
@@ -458,6 +531,14 @@ class JobController(Controller):
                               reason="ScaleDown")
 
             pod_name = crds.pod_name(job.name, pe_id)
+            sp = span_tracer(self.trace)
+            if sp is not None:
+                # root of the drain span tree; attached BEFORE the arming
+                # edits so the kubelet's begin-drain (reacting to the status
+                # event on its own thread) finds the context
+                sp.attach(drain_token(pod_name),
+                          sp.start_span(self.name, "drain", pe_res.key,
+                                        job=job.name, pe=pe_id))
             self.api.pes.edit(pe_res.name, mark_pe, requester=self.name)
             armed = self.api.pods.edit(pod_name, mark_pod,
                                        requester=self.name)
@@ -466,6 +547,9 @@ class JobController(Controller):
                 # a teardown cascade raced the arming: without the finalizer
                 # + drain request no drained report will ever release the
                 # delivery-path holds — roll them back and stand aside
+                if sp is not None:
+                    sp.end_span(sp.detach(drain_token(pod_name)),
+                                aborted="teardown-raced-arming")
                 release_drain_holds(self.api, job.name, pe_id, downstream)
                 continue
             # the retirement IS a deletion: two-phase — the finalizer keeps
@@ -563,6 +647,16 @@ class PodController(Controller):
             retire_pe(self.api, pod.spec["job"], pod.spec["peId"])
             self._record("retire-failed-drain", pod.key)
             return
+        sp = span_tracer(self.trace)
+        if sp is not None and sp.context(pod_token(pod.name)) is None:
+            # recovery span root (unless chaos already opened one at the
+            # kill): failure detected -> replacement connected.  Parented
+            # under an in-flight migration of this PE, if any.
+            sp.attach(pod_token(pod.name),
+                      sp.start_span(self.name, "recover", pod.key,
+                                    parent=sp.context(migrate_token(pe_name)),
+                                    job=pod.spec["job"],
+                                    pe=pod.spec["peId"]))
         self.coords["pe"].submit(
             pe_name, lambda r: r.status.update(
                 launchCount=r.status.get("launchCount", 0) + 1),
@@ -658,6 +752,10 @@ class PodConductor(Conductor):
                               pe.status.get("state") == "Draining"):
             return
         stats = pod.status.get("drained") or {}
+        sp = span_tracer(self.trace)
+        root = sp.context(drain_token(pod.name)) if sp is not None else None
+        retire_span = sp.start_span(self.name, "retire", pod.key,
+                                    parent=root) if sp is not None else None
         self.api.pods.edit(
             pod.name,
             lambda r: set_condition(
@@ -666,6 +764,14 @@ class PodConductor(Conductor):
                 message=f"dropped={stats.get('tuplesDropped', 0)}"),
             requester=self.name)
         retire_pe(self.api, job, pe_id)
+        if sp is not None:
+            sp.end_span(retire_span,
+                        dropped=stats.get("tuplesDropped", 0),
+                        handedOff=stats.get("handedOff", 0))
+            sp.end_span(sp.detach(drain_token(pod.name)),
+                        clean=stats.get("clean", False),
+                        drainMs=stats.get("drainMs", 0.0),
+                        dropped=stats.get("tuplesDropped", 0))
         self._record("retire", pod.key,
                      f"dropped={stats.get('tuplesDropped', 0)};"
                      f"handedOff={stats.get('handedOff', 0)}")

@@ -66,7 +66,8 @@ import jax
 import numpy as np
 
 from ..data.stream import StreamSource
-from .fabric import EndpointCache, EpochAborted, Fabric, ShutDown, TupleQueue
+from .fabric import (EndpointCache, EpochAborted, Fabric, LatencyDigest,
+                     ShutDown, TupleQueue)
 
 
 class AdaptiveBatcher:
@@ -190,6 +191,10 @@ class PERuntime(threading.Thread):
         self.crashed = False
         self.counts = {"in": 0, "out": 0, "routed": 0, "dropped": 0}
         self._last_load_report = 0.0
+        # delivery-latency digest: consuming terminals (sinks) feed it from
+        # the ingest watermark sources stamp into each tuple; percentiles
+        # ride the load sample into the metrics plane
+        self._lat = LatencyDigest()
         # batched emission state (flush policy: size + linger + barriers);
         # the batcher owns emit_batch between the per-operator min/max
         cfg0 = (self.meta.get("operators") or [{}])[0].get("config", {})
@@ -574,6 +579,8 @@ class PERuntime(threading.Thread):
             "resolveInvalidations": cache["invalidations"],
             "monotonic": time.monotonic(),
         }
+        if self._lat.count:
+            sample.update(self._lat.snapshot_ms())
         if extra:
             sample.update(extra)
         return sample
@@ -673,7 +680,11 @@ class PERuntime(threading.Thread):
                 break  # a retiring source just stops emitting and flushes
             if limit and offset >= limit:
                 break
-            item = {"seq": offset, "data": offset % 97}
+            # "ts" is the ingest watermark: stamped once here, carried by
+            # reference through every emit buffer / queue / handoff, and
+            # turned into a delivery-latency observation at the sink
+            item = {"seq": offset, "data": offset % 97,
+                    "ts": time.monotonic()}
             self._emit(0, item, partition=offset)
             offset += 1
             self._maybe_flush()
@@ -728,6 +739,9 @@ class PERuntime(threading.Thread):
                 if is_sink:
                     seen += 1
                     maxseq = max(maxseq, item.get("seq", -1))
+                    ts = item.get("ts")
+                    if ts is not None:
+                        self._lat.observe(time.monotonic() - ts)
                     if seen % report_every == 0 or item.get("flush"):
                         self.rest.report_sink(self.job, self.pe_id, seen, maxseq)
                 else:
@@ -767,7 +781,8 @@ class PERuntime(threading.Thread):
                 break
             if limit and i >= limit:
                 break
-            self._emit(0, {"seq": i, "rid": i, "tokens": tokens}, partition=i)
+            self._emit(0, {"seq": i, "rid": i, "tokens": tokens,
+                           "ts": time.monotonic()}, partition=i)
             i += 1
             self._maybe_flush()
             self._adapt()

@@ -43,6 +43,7 @@ from ..core import Controller, Conductor, Coordinator, Event, EventType, \
     Resource, ResourceStore, condition_is, get_condition, set_condition
 from . import crds
 from .api import ensure_api
+from .tracing import migrate_token, pod_token, span_tracer
 
 #: Requested cores assumed for a pod whose spec carries no ``resources``
 #: block (naked pods, pre-refactor WAL replays).
@@ -344,7 +345,18 @@ class SchedulerController(Controller):
             if res.status.get("phase") == "Unschedulable":
                 res.status["phase"] = "Pending"  # revived (node added/freed)
 
-        out = self.pod_coord.submit(pod.name, place, requester=self.name)
+        sp = span_tracer(self.trace)
+        if sp is None:
+            out = self.pod_coord.submit(pod.name, place, requester=self.name)
+        else:
+            # decide+bind as one timed span, parented to whatever lifecycle
+            # operation is driving this pod (recover / migrate chain)
+            with sp.span(self.name, "decide+bind", pod.key,
+                         parent=sp.context(pod_token(pod.name))) as span:
+                out = self.pod_coord.submit(pod.name, place,
+                                            requester=self.name)
+                span.attrs["node"] = \
+                    out.spec.get("nodeName") if out is not None else None
         if out is not None and out.spec.get("nodeName"):
             self._record("bind", out.key, out.spec["nodeName"])
 
@@ -453,6 +465,10 @@ class RebalanceConductor(Conductor):
                           reason="MigrationComplete")
 
         self.api.pes.edit(pe_name, complete, requester=self.name)
+        sp = span_tracer(self.trace)
+        if sp is not None:
+            sp.end_span(sp.detach(migrate_token(pe_name)),
+                        to=pod.spec.get("nodeName", "?"))
         self._record("migrated", pe.key, pod.spec.get("nodeName", "?"))
 
     # ------------------------------------------------------------ migration
@@ -537,6 +553,15 @@ class RebalanceConductor(Conductor):
             return  # a teardown/drain got the PE first
         self._last_migration = now
         self.migrations += 1
+        sp = span_tracer(self.trace)
+        if sp is not None:
+            # root of the migration span tree: the restart chain below
+            # (recover -> decide+bind -> start-pod) parents under it via
+            # the pod context token; _maybe_complete closes it
+            root = sp.start_span(self.name, "migrate", marked.key,
+                                 job=job, pe=victim.spec["peId"],
+                                 off=node.name)
+            sp.attach(migrate_token(pe_name), root)
         # the loss-proofed restart chain (PR 3/4): kubelet joins the old
         # runtime (its tail flushes), unpublish stashes the ring, the pod
         # controller bumps launchCount, the pod conductor recreates, the

@@ -1,0 +1,182 @@
+"""SLO verdict plane: objectives in, ``Met``/``Violated`` conditions out.
+
+The ``SLO`` CRD states a job's contract (delivery-latency targets, a loss
+budget, a recovery-time bound); the ``SLOConductor`` is the judge.  It
+observes the job's ``Metrics`` rollups (which carry the sink digests'
+delivery-latency percentiles and the drop ledger) and the span tracer's
+``recover`` spans (pod failure detected -> replacement connected), folds
+them into an error-budget ledger, and writes the verdict back as the
+complementary ``Met``/``Violated`` condition pair — so a chaos or benchmark
+run produces a machine-checkable pass/fail instead of a vibe, and any
+consumer can simply ``wait_for_condition``.
+
+Judgement rules per dimension (a dimension whose target is ``None`` is
+disabled; a dimension with no evidence yet passes):
+
+- ``latencyP95Ms`` / ``latencyP99Ms``: the Metrics rollup's ``latencyP95``/
+  ``latencyP99`` (ms) must not exceed the target;
+- ``lossBudgetTuples``: cumulative ``tuplesDropped`` must not exceed the
+  budget (the ledger also exposes what remains);
+- ``recoveryTimeS``: no ``recover`` span for the job — completed *or still
+  open* — may run longer than the bound (an in-flight recovery that has
+  already blown the bound is a violation now, not when it finishes).
+
+Like every conductor, state is recomputable: the throttle map rebuilds from
+the event stream, and the ledger lives in the SLO resource's status, written
+only through the slo coordinator (single writer).
+"""
+
+from __future__ import annotations
+
+import time
+
+from ..core import Conductor, Event, EventType, set_condition
+from . import crds
+from .api import ensure_api
+from .tracing import span_tracer
+
+
+class SLOConductor(Conductor):
+    """Evaluates Metrics rollups + trace spans against SLO resources."""
+
+    kinds = (crds.SLO, crds.METRICS, crds.JOB)
+
+    def __init__(self, store, namespace, coords, trace=None, *, api=None,
+                 evaluate_interval: float = 0.2, clock=time.monotonic):
+        super().__init__(store, "slo-conductor", trace)
+        self.namespace = namespace
+        self.api = ensure_api(api, store, namespace, coords, trace)
+        self.evaluate_interval = evaluate_interval
+        self.clock = clock
+        self._last_eval: dict = {}  # job -> t of last verdict
+        self._last_spec: dict = {}  # job -> SLO spec last judged against
+
+    # --------------------------------------------------------------- events
+
+    def on_event(self, event: Event) -> None:
+        res = event.resource
+        if res.kind == crds.JOB:
+            if event.type == EventType.DELETED:
+                self._last_eval.pop(res.name, None)
+                self._last_spec.pop(res.name, None)
+            return
+        job = res.spec.get("job")
+        if job is None:
+            return
+        if event.type == EventType.DELETED:
+            return
+        # a freshly created or reconfigured SLO gets an immediate verdict.
+        # Our own verdict edits also raise SLO MODIFIED events, so force only
+        # on a *spec* change — status-only echoes go through the throttle,
+        # else the judge feeds itself an unthrottled event loop.
+        force = False
+        if res.kind == crds.SLO:
+            spec_sig = tuple(sorted(res.spec.items()))
+            force = self._last_spec.get(job) != spec_sig
+            self._last_spec[job] = spec_sig
+        self.evaluate(job, force=force)
+
+    # ------------------------------------------------------------ observation
+
+    def observe(self, job: str) -> dict:
+        """The evidence for one job: Metrics rollup + recovery spans."""
+        metrics = self.store.try_get(crds.METRICS, crds.metrics_name(job),
+                                     self.namespace)
+        ms = metrics.status if metrics is not None else {}
+        obs = {
+            "p95Ms": ms.get("latencyP95"),
+            "p99Ms": ms.get("latencyP99"),
+            "latencySamples": ms.get("latencySamples", 0),
+            "lossTuples": ms.get("tuplesDropped", 0),
+            "recoveryS": None,
+            "recoveries": 0,
+        }
+        tracer = span_tracer(self.trace)
+        if tracer is not None:
+            now = self.clock()
+            worst = None
+            n = 0
+            for s in tracer.spans(name="recover"):
+                if s.attrs.get("job") != job:
+                    continue
+                n += 1
+                elapsed = (s.t1 if s.t1 is not None else now) - s.t0
+                worst = elapsed if worst is None else max(worst, elapsed)
+            obs["recoveryS"] = worst
+            obs["recoveries"] = n
+        return obs
+
+    @staticmethod
+    def judge(spec: dict, obs: dict) -> list[str]:
+        """Names of the failing dimensions (empty = Met)."""
+        failing = []
+        p95 = spec.get("latencyP95Ms")
+        if p95 is not None and obs["p95Ms"] is not None and obs["p95Ms"] > p95:
+            failing.append("latencyP95")
+        p99 = spec.get("latencyP99Ms")
+        if p99 is not None and obs["p99Ms"] is not None and obs["p99Ms"] > p99:
+            failing.append("latencyP99")
+        budget = spec.get("lossBudgetTuples")
+        if budget is not None and obs["lossTuples"] > budget:
+            failing.append("loss")
+        bound = spec.get("recoveryTimeS")
+        if bound is not None and obs["recoveryS"] is not None \
+                and obs["recoveryS"] > bound:
+            failing.append("recovery")
+        return failing
+
+    # ------------------------------------------------------------- verdicts
+
+    def evaluate(self, job: str, force: bool = False) -> bool:
+        """Judge one job's SLO and write ledger + conditions (throttled)."""
+        now = self.clock()
+        if not force and now - self._last_eval.get(job, -1e9) < self.evaluate_interval:
+            return False
+        slo = self.store.try_get(crds.SLO, crds.slo_name(job), self.namespace)
+        if slo is None or slo.terminating:
+            return False
+        self._last_eval[job] = now
+        obs = self.observe(job)
+        failing = self.judge(slo.spec, obs)
+        spec = dict(slo.spec)
+        reason = "+".join(failing) if failing else "AllObjectivesWithinBudget"
+        message = (f"p95={obs['p95Ms']}ms p99={obs['p99Ms']}ms "
+                   f"loss={obs['lossTuples']} recovery={obs['recoveryS']}s "
+                   f"samples={obs['latencySamples']}")
+
+        def command(res) -> None:
+            ledger = res.status.setdefault("ledger", {})
+            ledger["evaluations"] = ledger.get("evaluations", 0) + 1
+            ledger["violations"] = ledger.get("violations", 0) + bool(failing)
+            ledger["burnRate"] = round(
+                ledger["violations"] / ledger["evaluations"], 4)
+            if obs["p95Ms"] is not None:
+                ledger["worstP95Ms"] = max(ledger.get("worstP95Ms", 0.0),
+                                           obs["p95Ms"])
+            if obs["p99Ms"] is not None:
+                ledger["worstP99Ms"] = max(ledger.get("worstP99Ms", 0.0),
+                                           obs["p99Ms"])
+            ledger["lossSpentTuples"] = obs["lossTuples"]
+            budget = spec.get("lossBudgetTuples")
+            if budget is not None:
+                ledger["lossRemainingTuples"] = max(budget - obs["lossTuples"], 0)
+            if obs["recoveryS"] is not None:
+                ledger["worstRecoveryS"] = round(
+                    max(ledger.get("worstRecoveryS", 0.0), obs["recoveryS"]), 4)
+            ledger["recoveries"] = obs["recoveries"]
+            ledger["lastVerdict"] = "Violated" if failing else "Met"
+            ledger["lastVerdictAt"] = now
+            met = "False" if failing else "True"
+            violated = "True" if failing else "False"
+            set_condition(res, crds.COND_SLO_MET, met,
+                          reason=reason, message=message)
+            set_condition(res, crds.COND_SLO_VIOLATED, violated,
+                          reason=reason, message=message)
+
+        self.api.slos.edit(slo.name, command, requester=self.name)
+        self._record("verdict", slo.key,
+                     ("Violated:" + reason) if failing else "Met")
+        return True
+
+
+__all__ = ["SLOConductor"]

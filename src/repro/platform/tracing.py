@@ -1,0 +1,306 @@
+"""Span-based causal-chain tracing (the observability plane's substrate).
+
+``CausalTrace`` (core/patterns.py) records flat ``(actor, action, key,
+detail)`` tuples — enough to assert that a chain *happened*, but chains
+cannot be timed, linked, or exported.  ``SpanTracer`` grows it into span
+tracing:
+
+- every span has an id, a parent link, and wall-clock start/end, so a causal
+  chain (event -> controller -> conductor -> coordinator command -> kubelet
+  -> runtime) renders as a *parented span tree with durations*;
+- context propagates two ways: synchronously via a thread-local span stack
+  (controller -> conductor -> coordinator all run on one delivery thread),
+  and across actors/threads via a token registry — the actor that arms an
+  operation ``attach``-es its span under a token (e.g. ``drain:<pod>``) and
+  the downstream actor reacting to the resulting event looks it up with
+  ``context``;
+- spans live in a bounded ring and export as Chrome trace-event JSON
+  (``chrome://tracing`` / Perfetto) or a human-readable indented tree.
+
+``SpanTracer`` subclasses ``CausalTrace``, so the platform's existing
+``trace`` plumbing *is* the tracer: every actor already holds a reference,
+and all flat-trace assertions (``chain()``/``actors_for()``/``entries``)
+keep working.  Finished spans are mirrored into the flat trace as
+``span:<name>`` records so ``chain()`` shows timings inline.
+
+Instrumented hot paths (each a §8 pathology made measurable):
+
+==========================  =====================================
+token                       causal chain covered
+==========================  =====================================
+``drain:<pod>``             job-controller arm -> kubelet begin-drain
+                            -> runtime drain -> pod-conductor retire
+``pod:<pod>``               pod failure/restart -> pod recreate ->
+                            scheduler bind -> kubelet start -> connected
+``migrate:<pe>``            pressure verdict -> pod delete -> recovery
+                            chain above -> migration complete
+==========================  =====================================
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+from ..core import CausalTrace
+
+
+class Span:
+    """One timed link of a causal chain."""
+
+    __slots__ = ("span_id", "trace_id", "parent_id", "actor", "name", "key",
+                 "t0", "t1", "attrs")
+
+    def __init__(self, span_id: int, trace_id: int, parent_id: Optional[int],
+                 actor: str, name: str, key: Optional[tuple], t0: float,
+                 attrs: dict):
+        self.span_id = span_id
+        self.trace_id = trace_id
+        self.parent_id = parent_id
+        self.actor = actor
+        self.name = name
+        self.key = key
+        self.t0 = t0
+        self.t1: Optional[float] = None
+        self.attrs = attrs
+
+    @property
+    def open(self) -> bool:
+        return self.t1 is None
+
+    @property
+    def duration_ms(self) -> Optional[float]:
+        return None if self.t1 is None else (self.t1 - self.t0) * 1000.0
+
+    def keystr(self) -> str:
+        return f"{self.key[0]}/{self.key[2]}" if self.key else "-"
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        dur = self.duration_ms
+        tail = "open" if dur is None else f"{dur:.1f}ms"
+        return f"<span {self.span_id} {self.actor}:{self.name}:{self.keystr()} {tail}>"
+
+
+class SpanTracer(CausalTrace):
+    """A ``CausalTrace`` that also records parented, timed spans.
+
+    Drop-in for every ``trace=`` parameter in the platform; actors that only
+    know ``CausalTrace`` keep recording flat entries, instrumented actors
+    call the span API.  All methods are thread-safe.
+    """
+
+    def __init__(self, maxlen: int | None = 100_000,
+                 span_maxlen: int | None = 20_000,
+                 clock=time.monotonic) -> None:
+        super().__init__(maxlen=maxlen)
+        self.clock = clock
+        self._span_lock = threading.Lock()
+        self._spans: deque[Span] = deque(maxlen=span_maxlen)
+        self._next_id = 1
+        self._ctx: dict[str, Span] = {}
+        self._tls = threading.local()
+
+    # ------------------------------------------------------------- lifecycle
+
+    def start_span(self, actor: str, name: str, key: Optional[tuple] = None,
+                   parent: "Span | int | None" = None, **attrs) -> Span:
+        """Open a span.  ``parent`` may be a Span, a span id, or None — in
+        which case the innermost span open on *this thread* (if any) becomes
+        the parent, so synchronous nesting links up automatically."""
+        if parent is None:
+            stack = getattr(self._tls, "stack", None)
+            if stack:
+                parent = stack[-1]
+        parent_id = parent.span_id if isinstance(parent, Span) else parent
+        trace_id = parent.trace_id if isinstance(parent, Span) else None
+        with self._span_lock:
+            sid = self._next_id
+            self._next_id += 1
+            if trace_id is None:
+                trace_id = self._trace_id_of(parent_id) if parent_id else sid
+            span = Span(sid, trace_id, parent_id, actor, name, key,
+                        self.clock(), dict(attrs))
+            self._spans.append(span)
+        return span
+
+    def _trace_id_of(self, span_id: int) -> int:
+        # caller holds _span_lock
+        for s in reversed(self._spans):
+            if s.span_id == span_id:
+                return s.trace_id
+        return span_id  # parent evicted from the ring: start a new tree
+
+    def end_span(self, span: Optional[Span], **attrs) -> None:
+        if span is None or span.t1 is not None:
+            return
+        span.t1 = self.clock()
+        if attrs:
+            span.attrs.update(attrs)
+        if span.key is not None:
+            # mirror the finished span into the flat trace so chain() shows
+            # the timing inline with the observe/modify records around it
+            self.record(span.actor, f"span:{span.name}", span.key,
+                        f"{span.duration_ms:.1f}ms")
+
+    @contextmanager
+    def span(self, actor: str, name: str, key: Optional[tuple] = None,
+             parent: "Span | int | None" = None, **attrs) -> Iterator[Span]:
+        """Scoped span; pushed on the thread-local stack so nested
+        ``start_span``/``span`` calls on the same thread auto-parent."""
+        sp = self.start_span(actor, name, key, parent, **attrs)
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        stack.append(sp)
+        try:
+            yield sp
+        finally:
+            stack.pop()
+            self.end_span(sp)
+
+    # ------------------------------------------- cross-actor context passing
+
+    def attach(self, token: str, span: Span) -> Span:
+        """Publish ``span`` as the causal context for ``token`` so a later
+        actor (on any thread) can parent to it via ``context(token)``."""
+        with self._span_lock:
+            self._ctx[token] = span
+        return span
+
+    def context(self, token: str) -> Optional[Span]:
+        with self._span_lock:
+            return self._ctx.get(token)
+
+    def detach(self, token: str) -> Optional[Span]:
+        with self._span_lock:
+            return self._ctx.pop(token, None)
+
+    # ---------------------------------------------------------------- query
+
+    def spans(self, name: Optional[str] = None, actor: Optional[str] = None,
+              trace_id: Optional[int] = None) -> list[Span]:
+        with self._span_lock:
+            snap = list(self._spans)
+        if name is not None:
+            snap = [s for s in snap if s.name == name]
+        if actor is not None:
+            snap = [s for s in snap if s.actor == actor]
+        if trace_id is not None:
+            snap = [s for s in snap if s.trace_id == trace_id]
+        return snap
+
+    def clear(self) -> None:
+        super().clear()
+        with self._span_lock:
+            self._spans.clear()
+            self._ctx.clear()
+
+    # --------------------------------------------------------------- export
+
+    def chrome_trace(self) -> dict:
+        """Chrome trace-event JSON (load in chrome://tracing or Perfetto).
+
+        Spans become ``X`` complete events (one row per actor); parent links
+        become ``s``/``f`` flow events so cross-actor chains draw as arrows.
+        """
+        snap = self.spans()
+        tids: dict[str, int] = {}
+        events: list[dict] = []
+        for s in snap:
+            tid = tids.setdefault(s.actor, len(tids) + 1)
+            t1 = s.t1 if s.t1 is not None else self.clock()
+            ev = {
+                "name": s.name, "cat": s.key[0] if s.key else "span",
+                "ph": "X", "pid": 1, "tid": tid,
+                "ts": s.t0 * 1e6, "dur": max(t1 - s.t0, 0.0) * 1e6,
+                "args": {"key": s.keystr(), "span_id": s.span_id,
+                         "trace_id": s.trace_id, **s.attrs},
+            }
+            events.append(ev)
+            if s.parent_id is not None:
+                flow = {"cat": "causal", "name": "chain", "pid": 1,
+                        "id": s.span_id}
+                parent = next((p for p in snap if p.span_id == s.parent_id), None)
+                if parent is not None:
+                    ptid = tids.setdefault(parent.actor, len(tids) + 1)
+                    events.append({**flow, "ph": "s", "tid": ptid,
+                                   "ts": parent.t0 * 1e6})
+                    events.append({**flow, "ph": "f", "bp": "e", "tid": tid,
+                                   "ts": s.t0 * 1e6})
+        for actor, tid in tids.items():
+            events.append({"ph": "M", "pid": 1, "tid": tid,
+                           "name": "thread_name", "args": {"name": actor}})
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def export_chrome(self, path: str) -> str:
+        with open(path, "w") as fh:
+            json.dump(self.chrome_trace(), fh, indent=1)
+        return path
+
+    # -------------------------------------------------------------- renderer
+
+    def render(self, root: "Span | int | None" = None) -> str:
+        """Human-readable indented span tree.
+
+        With ``root`` (a Span or span id), render that subtree; without,
+        render every root span's tree in start order.
+        """
+        snap = self.spans()
+        children: dict[Optional[int], list[Span]] = {}
+        for s in snap:
+            children.setdefault(s.parent_id, []).append(s)
+        by_id = {s.span_id: s for s in snap}
+
+        def fmt(s: Span) -> str:
+            dur = s.duration_ms
+            tail = "(open)" if dur is None else f"{dur:.1f}ms"
+            extra = " ".join(f"{k}={v}" for k, v in sorted(s.attrs.items()))
+            return f"{s.name} {s.keystr()} [{s.actor}] {tail}" + (f" {extra}" if extra else "")
+
+        lines: list[str] = []
+
+        def walk(s: Span, depth: int) -> None:
+            lines.append("  " * depth + fmt(s))
+            for c in sorted(children.get(s.span_id, []), key=lambda c: c.t0):
+                walk(c, depth + 1)
+
+        if root is not None:
+            rid = root.span_id if isinstance(root, Span) else root
+            if rid in by_id:
+                walk(by_id[rid], 0)
+        else:
+            roots = [s for s in snap
+                     if s.parent_id is None or s.parent_id not in by_id]
+            for s in sorted(roots, key=lambda s: s.t0):
+                walk(s, 0)
+        return "\n".join(lines)
+
+
+def span_tracer(trace) -> Optional[SpanTracer]:
+    """The span view of a trace, or None when the platform was handed a
+    plain ``CausalTrace`` (instrumentation then degrades to flat records)."""
+    return trace if isinstance(trace, SpanTracer) else None
+
+
+# Context-registry token helpers: one vocabulary for every instrumented path,
+# so the arming actor and the reacting actor agree without importing each
+# other.
+
+def drain_token(pod_name: str) -> str:
+    return f"drain:{pod_name}"
+
+
+def pod_token(pod_name: str) -> str:
+    return f"pod:{pod_name}"
+
+
+def migrate_token(pe_name: str) -> str:
+    return f"migrate:{pe_name}"
+
+
+__all__ = ["Span", "SpanTracer", "span_tracer", "drain_token", "pod_token",
+           "migrate_token"]

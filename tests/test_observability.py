@@ -1,0 +1,420 @@
+"""Observability plane: span tracing, latency watermarks + digests, the
+metrics plane's sample hygiene, and the SLO verdict plane.
+
+Unit layers first (ring bound, P² accuracy, tracer parenting/export, metrics
+dedupe + retired-drop ledger + job-delete pruning, SLO judging), then the
+threaded acceptance runs: a drain and a rebalance must each render a
+parented span chain end to end, and an SLO over a live job must reach a
+verdict with a populated error-budget ledger.
+"""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    CausalTrace,
+    Coordinator,
+    Event,
+    EventType,
+    ResourceStore,
+    wait_for,
+)
+from repro.platform import Platform, crds
+from repro.platform.fabric import LatencyDigest, P2Quantile
+from repro.platform.metrics import MetricsPlane
+from repro.platform.slo import SLOConductor
+from repro.platform.tracing import (
+    SpanTracer,
+    drain_token,
+    migrate_token,
+    span_tracer,
+)
+
+
+# ------------------------------------------------------------ trace ring
+
+
+def test_causal_trace_ring_bound():
+    """Satellite: the flat trace is a ring — unbounded soak runs must not
+    grow it forever, and the chain()/actors_for() API survives eviction."""
+    t = CausalTrace(maxlen=5)
+    for i in range(12):
+        t.record("actor", "act", ("Pod", "default", f"p{i}"), str(i))
+    assert len(t.entries) == 5
+    assert [e[3] for e in t.entries] == ["7", "8", "9", "10", "11"]
+    assert t.actors_for(("Pod", "default", "p11")) == ["actor"]
+    assert t.chain() == [f"actor:act:Pod/p{i}:{i}" for i in range(7, 12)]
+    # default construction stays bounded too
+    assert CausalTrace().entries.maxlen is not None
+
+
+# ---------------------------------------------------------------- P² digest
+
+
+def test_p2_quantile_tracks_known_distribution():
+    # a deterministic shuffle of 1..n: P² must land near the true quantiles
+    n = 5000
+    xs = [((i * 2654435761) % n) + 1 for i in range(n)]  # Knuth hash permute
+    assert len(set(xs)) == n
+    for q in (0.5, 0.95, 0.99):
+        est = P2Quantile(q)
+        for x in xs:
+            est.add(float(x))
+        assert est.value() == pytest.approx(q * n, rel=0.05), f"q={q}"
+
+
+def test_p2_quantile_small_samples_exact():
+    est = P2Quantile(0.5)
+    for x in (5.0, 1.0, 3.0):
+        est.add(x)
+    assert est.value() == 3.0  # n <= 5: exact order statistic, no markers
+
+
+def test_latency_digest_snapshot_shape():
+    d = LatencyDigest()
+    assert d.snapshot_ms() == {}  # no samples yet: no keys published
+    for ms in range(1, 101):
+        d.observe(ms / 1000.0)
+    snap = d.snapshot_ms()
+    assert set(snap) == {"latencyP50", "latencyP95", "latencyP99",
+                        "latencyMax", "latencySamples"}
+    assert snap["latencySamples"] == 100
+    assert snap["latencyMax"] == pytest.approx(100.0, abs=0.01)
+    assert 40 < snap["latencyP50"] < 60
+    assert snap["latencyP50"] < snap["latencyP95"] <= snap["latencyMax"]
+
+
+# -------------------------------------------------------------- span tracer
+
+
+def test_span_tracer_parents_and_renders():
+    now = [100.0]
+    tr = SpanTracer(clock=lambda: now[0])
+    with tr.span("a", "root", ("Pod", "default", "p")) as root:
+        now[0] += 0.010
+        with tr.span("b", "child", ("Pod", "default", "p")) as child:
+            now[0] += 0.005
+    assert child.parent_id == root.span_id  # thread-local auto-parenting
+    assert child.trace_id == root.trace_id
+    assert root.duration_ms == pytest.approx(15.0)
+    assert child.duration_ms == pytest.approx(5.0)
+    text = tr.render(root)
+    assert text.splitlines()[0].startswith("root Pod/p [a] 15.0ms")
+    assert text.splitlines()[1].startswith("  child Pod/p [b] 5.0ms")
+    # finished spans mirror into the flat trace with a distinct action
+    assert "a:span:root:Pod/p:15.0ms" in tr.chain()
+
+
+def test_span_tracer_token_context_crosses_threads():
+    tr = SpanTracer()
+    root = tr.start_span("armer", "drain", ("Pod", "default", "p"))
+    tr.attach(drain_token("p"), root)
+    got = {}
+
+    def reactor():
+        parent = tr.context(drain_token("p"))
+        sp = tr.start_span("reactor", "begin-drain", ("Pod", "default", "p"),
+                           parent=parent)
+        tr.end_span(sp)
+        got["span"] = sp
+
+    th = threading.Thread(target=reactor)
+    th.start()
+    th.join()
+    assert got["span"].parent_id == root.span_id
+    assert tr.detach(drain_token("p")) is root
+    assert tr.context(drain_token("p")) is None  # detach is consuming
+    tr.end_span(root)
+    tr.end_span(root)  # idempotent: second end is a no-op
+    assert len([e for e in tr.entries if e[1] == "span:drain"]) == 1
+
+
+def test_span_tracer_chrome_export(tmp_path):
+    tr = SpanTracer()
+    with tr.span("a", "root", ("Pod", "default", "p")):
+        with tr.span("b", "child", ("Pod", "default", "p")):
+            pass
+    doc = tr.chrome_trace()
+    phases = [e["ph"] for e in doc["traceEvents"]]
+    assert phases.count("X") == 2  # one complete event per span
+    assert "s" in phases and "f" in phases  # the parent link draws an arrow
+    assert phases.count("M") == 2  # actor lanes are named
+    path = tr.export_chrome(str(tmp_path / "trace.json"))
+    assert json.load(open(path))["traceEvents"]
+
+
+def test_span_tracer_degrades_on_plain_trace():
+    assert span_tracer(CausalTrace()) is None
+    tr = SpanTracer()
+    assert span_tracer(tr) is tr
+
+
+# ------------------------------------------------------------ metrics plane
+
+
+def _plane(now):
+    store = ResourceStore()
+    coords = {"metrics": Coordinator(store, crds.METRICS)}
+    return store, MetricsPlane(store, "default", coords,
+                               clock=lambda: now[0])
+
+
+def _pod_with_sample(job, pe_id, sample):
+    pod = crds.make_pod(job, pe_id, {"image": "x"}, 1, 1)
+    pod.status["metrics"] = sample
+    return pod
+
+
+def test_metrics_duplicate_sample_guard():
+    """Unrelated pod-status patches re-deliver the last sample; appending
+    the duplicate at a later t would dilute the window's computed rates."""
+    now = [100.0]
+    _, plane = _plane(now)
+    sample = {"operator": "ch", "kind": "channel", "tuplesIn": 10}
+    plane.ingest("j", 1, sample)
+    now[0] += 1.0
+    plane.ingest("j", 1, dict(sample))  # identical payload, later t
+    assert len(plane._samples[("j", 1)]) == 1
+    now[0] += 1.0
+    plane.ingest("j", 1, {"operator": "ch", "kind": "channel", "tuplesIn": 30})
+    assert len(plane._samples[("j", 1)]) == 2
+    agg = plane.aggregate("j")
+    # rate computed over the real 2 s gap, undiluted by the duplicate
+    assert agg["operators"]["ch"]["rate"] == pytest.approx(10.0)
+
+
+def test_metrics_retired_drop_ledger_fold():
+    """A retiring PE's terminal drop count outlives its pod: the DELETED
+    event folds it into the per-job ledger and aggregate() keeps it."""
+    now = [100.0]
+    store, plane = _plane(now)
+    pod = _pod_with_sample("j", 1, {"operator": "ch", "kind": "channel",
+                                    "region": "par", "tuplesDropped": 7})
+    plane.on_event(Event(seq=1, type=EventType.ADDED, resource=pod))
+    assert ("j", 1) in plane._samples
+    plane.on_event(Event(seq=2, type=EventType.DELETED, resource=pod))
+    assert ("j", 1) not in plane._samples
+    assert plane._retired_drops["j"] == {"par": 7}
+    agg = plane.aggregate("j")
+    assert agg["tuplesDropped"] == 7
+    assert agg["regions"]["par"]["tuplesDropped"] == 7
+
+
+def test_metrics_job_delete_prunes_per_job_state():
+    """Satellite: Job DELETED must drop the retired-drop ledger, the
+    publish throttle stamp, and every sample window for that job."""
+    now = [100.0]
+    store, plane = _plane(now)
+    pod = _pod_with_sample("j", 1, {"operator": "ch", "kind": "channel",
+                                    "region": "par", "tuplesDropped": 3})
+    plane.on_event(Event(seq=1, type=EventType.ADDED, resource=pod))
+    plane.on_event(Event(seq=2, type=EventType.DELETED, resource=pod))
+    plane.ingest("j", 2, {"operator": "sink", "kind": "sink", "tuplesIn": 5})
+    plane.ingest("other", 1, {"operator": "ch", "kind": "channel"})
+    plane._last_publish["j"] = 100.0
+    job = crds.make_job("j", {})
+    plane.on_event(Event(seq=3, type=EventType.DELETED, resource=job))
+    assert "j" not in plane._retired_drops
+    assert "j" not in plane._last_publish
+    assert all(k[0] != "j" for k in plane._samples)
+    assert ("other", 1) in plane._samples  # other jobs untouched
+
+
+def test_metrics_latency_rollup_weighted_mean():
+    now = [100.0]
+    _, plane = _plane(now)
+    plane.ingest("j", 1, {"operator": "sinkA", "kind": "sink", "region": "par",
+                          "latencyP50": 10.0, "latencyP95": 20.0,
+                          "latencyP99": 30.0, "latencyMax": 40.0,
+                          "latencySamples": 100})
+    plane.ingest("j", 2, {"operator": "sinkB", "kind": "sink", "region": "par",
+                          "latencyP50": 30.0, "latencyP95": 40.0,
+                          "latencyP99": 50.0, "latencyMax": 60.0,
+                          "latencySamples": 300})
+    agg = plane.aggregate("j")
+    # sample-weighted: (100*10 + 300*30) / 400
+    assert agg["latencyP50"] == pytest.approx(25.0)
+    assert agg["latencyP95"] == pytest.approx(35.0)
+    assert agg["latencyMax"] == pytest.approx(60.0)
+    assert agg["latencySamples"] == 400
+    assert agg["regions"]["par"]["latencyP50"] == pytest.approx(25.0)
+
+
+# --------------------------------------------------------------- SLO judging
+
+
+def test_slo_judge_dimensions():
+    spec = {"latencyP95Ms": 100.0, "latencyP99Ms": None,
+            "lossBudgetTuples": 5, "recoveryTimeS": 10.0}
+    ok = {"p95Ms": 50.0, "p99Ms": 500.0, "lossTuples": 5, "recoveryS": 9.0,
+          "latencySamples": 10, "recoveries": 1}
+    assert SLOConductor.judge(spec, ok) == []  # p99 disabled; loss at budget
+    assert SLOConductor.judge(spec, {**ok, "p95Ms": 101.0}) == ["latencyP95"]
+    assert SLOConductor.judge(spec, {**ok, "lossTuples": 6}) == ["loss"]
+    assert SLOConductor.judge(spec, {**ok, "recoveryS": 11.0}) == ["recovery"]
+    # no evidence yet: every dimension passes
+    empty = {"p95Ms": None, "p99Ms": None, "lossTuples": 0, "recoveryS": None,
+             "latencySamples": 0, "recoveries": 0}
+    assert SLOConductor.judge(spec, empty) == []
+
+
+def test_slo_counts_open_recovery_spans():
+    """An in-flight recovery that has already blown the bound violates NOW
+    — the judge must not wait for the span to finish."""
+    now = [100.0]
+    store = ResourceStore()
+    tr = SpanTracer(clock=lambda: now[0])
+    coords = {"slo": Coordinator(store, crds.SLO),
+              "metrics": Coordinator(store, crds.METRICS)}
+    cond = SLOConductor(store, "default", coords, tr, clock=lambda: now[0])
+    store.create(crds.make_slo("j", recovery_time_s=5.0))
+    tr.start_span("chaos", "recover", ("Pod", "default", "j-pe-1"),
+                  job="j", pe=1)  # never ended
+    now[0] += 6.0
+    obs = cond.observe("j")
+    assert obs["recoveryS"] == pytest.approx(6.0)
+    assert cond.evaluate("j", force=True)
+    slo = store.get(crds.SLO, crds.slo_name("j"))
+    conds = {c["type"]: c for c in slo.status["conditions"]}
+    assert conds["Violated"]["status"] == "True"
+    assert "recovery" in conds["Violated"]["reason"]
+    assert slo.status["ledger"]["violations"] == 1
+    assert slo.status["ledger"]["worstRecoveryS"] == pytest.approx(6.0)
+
+
+def test_slo_verdict_edits_do_not_feed_back():
+    """The conductor's own verdict edit raises an SLO MODIFIED event; only
+    *spec* changes may force a re-evaluation, else the judge self-triggers
+    an unthrottled event loop."""
+    now = [100.0]
+    store = ResourceStore()
+    coords = {"slo": Coordinator(store, crds.SLO),
+              "metrics": Coordinator(store, crds.METRICS)}
+    cond = SLOConductor(store, "default", coords, clock=lambda: now[0])
+    slo = crds.make_slo("j", latency_p95_ms=100.0)
+    store.create(slo)
+    cond.on_event(Event(seq=1, type=EventType.ADDED, resource=slo))
+    first = store.get(crds.SLO, slo.name).status["ledger"]["evaluations"]
+    assert first == 1  # new spec: judged immediately
+    # the verdict's own MODIFIED echo, same spec, same instant: throttled
+    echo = store.get(crds.SLO, slo.name)
+    for seq in range(2, 12):
+        cond.on_event(Event(seq=seq, type=EventType.MODIFIED, resource=echo))
+    assert store.get(crds.SLO, slo.name).status["ledger"]["evaluations"] == 1
+    # a genuine spec change forces a fresh verdict at the same instant
+    changed = store.get(crds.SLO, slo.name)
+    changed.spec = {**changed.spec, "latencyP95Ms": 50.0}
+    cond.on_event(Event(seq=12, type=EventType.MODIFIED, resource=changed))
+    assert store.get(crds.SLO, slo.name).status["ledger"]["evaluations"] == 2
+
+
+# ------------------------------------------------- threaded acceptance runs
+
+
+@pytest.mark.slow
+def test_drain_renders_parented_span_chain(tmp_path):
+    """Acceptance: a scale-down drain exports a parented span chain — the
+    job controller's drain root with kubelet begin-drain and pod-conductor
+    retire as children — and the Chrome export carries all of it."""
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("j", {"app": {"type": "streams", "width": 2,
+                               "pipeline_depth": 1,
+                               "source": {"rate_sleep": 0.001}},
+                       "drain": {"timeout": 10.0, "grace": 0.2}})
+        assert p.wait_full_health("j", 60)
+        p.set_width("j", "par", 1)
+        assert wait_for(lambda: p.region_width("j", "par") == 1
+                        and p.job_status("j").get("fullHealth"), 60)
+        assert wait_for(lambda: any(
+            s.t1 is not None for s in p.trace.spans(name="drain")), 30)
+        root = next(s for s in p.trace.spans(name="drain")
+                    if s.t1 is not None)
+        tree = {s.name for s in p.trace.spans(trace_id=root.trace_id)}
+        assert {"drain", "begin-drain", "retire"} <= tree
+        retire = next(s for s in p.trace.spans(name="retire")
+                      if s.trace_id == root.trace_id)
+        begin = next(s for s in p.trace.spans(name="begin-drain")
+                     if s.trace_id == root.trace_id)
+        assert begin.parent_id == root.span_id
+        assert retire.parent_id == root.span_id
+        assert root.attrs.get("clean") is True
+        text = p.trace.render(root)
+        assert "drain Pod/" in text and "\n  " in text  # indented children
+        doc = json.load(open(p.export_trace(str(tmp_path / "drain.json"))))
+        names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+        assert {"drain", "begin-drain", "retire"} <= names
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.slow
+def test_rebalance_renders_parented_span_chain():
+    """Acceptance: a hot-node rebalance renders one migrate root owning the
+    whole loss-proofed restart chain — recover under migrate, decide+bind
+    and start-pod under recover."""
+    p = Platform(num_nodes=1, cores_per_node=2, scheduler_profile="pressure",
+                 cpu_model=True, rebalance=True, pressure_interval=0.2)
+    p.rebalancer.sustain_s = 0.5
+    p.rebalancer.cooldown = 1.0
+    try:
+        p.submit("j", {"app": {"type": "streams", "width": 2,
+                               "pipeline_depth": 1,
+                               "source": {"tuples": 600,
+                                          "rate_sleep": 0.002},
+                               "channel": {"work_sleep": 0.002},
+                               "sink": {"report_every": 10}}})
+        assert p.wait_full_health("j", 120)
+        assert wait_for(
+            lambda: p.node_pressure("node0").get("podsPerCore", 0) >= 1.0, 30)
+        p.add_node("relief0", 8)
+        p.add_node("relief1", 8)
+        assert wait_for(lambda: p.rebalancer.migrations >= 1, 60)
+        assert wait_for(lambda: any(
+            s.t1 is not None for s in p.trace.spans(name="migrate")), 60)
+        root = next(s for s in p.trace.spans(name="migrate")
+                    if s.t1 is not None)
+        family = p.trace.spans(trace_id=root.trace_id)
+        names = {s.name for s in family}
+        assert {"migrate", "recover", "decide+bind", "start-pod"} <= names
+        recover = next(s for s in family if s.name == "recover")
+        assert recover.parent_id == root.span_id
+        assert {s.parent_id for s in family if s.name == "start-pod"} \
+            == {recover.span_id}
+        assert root.attrs.get("to", "").startswith("relief")
+        assert p.wait_full_health("j", 120)
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.slow
+def test_slo_verdict_over_live_job():
+    """An SLO over a live job reaches Met with a populated ledger, and the
+    Prometheus exposition carries latency quantiles + the verdict."""
+    p = Platform(num_nodes=4)
+    try:
+        p.submit("j", {"app": {"type": "streams", "width": 2,
+                               "pipeline_depth": 1,
+                               "source": {"rate_sleep": 0.001},
+                               "sink": {"report_every": 10}}})
+        assert p.wait_full_health("j", 60)
+        p.set_slo("j", latency_p95_ms=2000.0, loss_budget=0,
+                  recovery_time_s=60.0)
+        assert p.api.slos.wait_for_condition(crds.slo_name("j"),
+                                             crds.COND_SLO_MET, "True", 60)
+        assert wait_for(
+            lambda: p.job_metrics("j").get("latencySamples", 0) > 0, 60)
+        ledger = p.slo_status("j")["ledger"]
+        assert ledger["evaluations"] >= 1
+        assert ledger["lastVerdict"] == "Met"
+        assert ledger["lossRemainingTuples"] == 0  # budget 0, nothing spent
+        assert wait_for(lambda: "streams_job_delivery_latency_ms"
+                        in p.metrics_text(), 30)
+        text = p.metrics_text()
+        assert 'streams_slo_met{job="j"} 1' in text
+        assert 'quantile="0.95"' in text
+    finally:
+        p.shutdown()
