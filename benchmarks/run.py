@@ -24,6 +24,13 @@
              plugin scheduler spreading it; plus a forced hot-node scenario
              where the rebalance conductor migrates PEs onto freshly added
              nodes with zero tuples lost -> results/BENCH_oversub.json
+  latency    delivery-latency percentiles + pod-kill recovery span + SLO
+             verdict -> results/BENCH_latency.json
+  chaos      the chaos plane's (workload × fault × policy) scenario matrix:
+             every FAULT_KINDS fault injected via the FaultInjection CRD,
+             recovery timed by recover spans, each scenario judged into an
+             SLO verdict with per-scenario seed + loss accounting
+             -> results/BENCH_chaos.json
 
 ``--smoke`` runs only the cheap benchmarks (CI regression guard); it fails
 if the transport, scale-down, teardown or oversub bench does not produce
@@ -936,6 +943,152 @@ def bench_latency(out_path: str | None = None, n_tuples: int = 900) -> dict:
     return report
 
 
+# ------------------------------------------------------------------ chaos
+
+
+#: The chaos matrix's workloads: one long-lived rate-limited job per shape.
+#: ``steady`` opts into the straggler monitor (clock-straggle restarts);
+#: ``wide`` does not, so its straggle scenario exercises the node pressure
+#: plane's Straggling verdict instead.
+CHAOS_WORKLOADS = {
+    "steady": {"app": {"type": "streams", "width": 2, "pipeline_depth": 1,
+                       "source": {"rate_sleep": 0.002}},
+               "drain": {"timeout": 15.0, "grace": 0.3},
+               "stragglerTimeout": 3.0},
+    "wide": {"app": {"type": "streams", "width": 3, "pipeline_depth": 2,
+                     "source": {"rate_sleep": 0.002}},
+             "drain": {"timeout": 15.0, "grace": 0.3}},
+}
+
+#: SLO policies the matrix judges each fault under.
+CHAOS_POLICIES = {
+    "strict": {"loss_budget": 0, "recovery_time_s": 15.0},
+    "relaxed": {"loss_budget": 256, "recovery_time_s": 45.0},
+}
+
+#: The scenario matrix: (workload, fault, policy, scenario kwargs).  Every
+#: seed is pinned and echoed into the report — a scenario replays exactly
+#: (all chaos randomness flows through ``random.Random(seed)``).
+#: kill-mid-drain rows run last per workload (they shrink the region).
+CHAOS_MATRIX = (
+    ("steady", "pod-kill", "strict",
+     dict(seed=101, target={"minPe": 1})),
+    ("steady", "partition", "strict",
+     dict(seed=102, duration=0.6, target={"minPe": 1})),
+    ("steady", "clock-straggle", "strict",
+     dict(seed=103, duration=1.2, params={"offset": 8.0},
+          target={"minPe": 1})),
+    ("steady", "node-flap", "relaxed",
+     dict(seed=104, duration=0.3)),
+    ("steady", "kill-mid-drain", "relaxed",
+     dict(seed=105, duration=0.05)),
+    ("wide", "pod-kill", "relaxed",
+     dict(seed=201, target={"minPe": 1})),
+    ("wide", "partition", "relaxed",
+     dict(seed=202, duration=0.8, target={"minPe": 1})),
+    ("wide", "clock-straggle", "relaxed",
+     dict(seed=203, duration=1.5, params={"offset": 8.0},
+          target={"minPe": 1})),
+    ("wide", "kill-mid-drain", "strict",
+     dict(seed=204, duration=0.05)),
+)
+
+
+def bench_chaos(out_path: str | None = None) -> dict:
+    """The chaos plane end to end: the (workload × fault × policy) scenario
+    matrix, every fault injected through the ``FaultInjection`` CRD and
+    judged by the SLO verdict plane.
+
+    Per scenario: the span ring is cleared and the job's SLO re-created
+    under the scenario's policy (so the verdict judges THIS scenario's
+    recover spans, not the run's history), the fault is injected via
+    ``run_scenario``, the platform recovers, and a forced SLO evaluation
+    folds the evidence into a Met/Violated verdict.  The report carries
+    per-scenario seed, terminal phase, recover-span latency, tuples lost
+    (drop-ledger delta), and the verdict — ``results/BENCH_chaos.json``.
+    """
+    scenarios = []
+    for workload, spec in CHAOS_WORKLOADS.items():
+        p = Platform(num_nodes=4)
+        job = f"chaos-{workload}"
+        try:
+            p.submit(job, spec)
+            assert p.wait_full_health(job, 120)
+            for wl, fault, policy, kw in CHAOS_MATRIX:
+                if wl != workload:
+                    continue
+                # fresh evidence window: this scenario's spans + a fresh
+                # SLO under the scenario's policy (the SLO-delete prune
+                # resets the conductor's throttle/spec state too)
+                p.trace.clear()
+                p.api.slos.delete(crds.slo_name(job))
+                p.set_slo(job, **CHAOS_POLICIES[policy])
+                dropped_before = p.job_metrics(job).get("tuplesDropped", 0)
+                t0 = time.monotonic()
+                st = p.run_scenario(fault=fault, job=job, timeout=90, **kw)
+                wall_s = time.monotonic() - t0
+                assert p.wait_full_health(job, 120), \
+                    f"{job}: no full health after {fault}"
+                p.slo_conductor.evaluate(job, force=True)
+                slo = p.slo_status(job)
+                verdicts = {c["type"]: c["status"]
+                            for c in slo.get("conditions", ())
+                            if c["type"] in ("Met", "Violated")}
+                lost = (p.job_metrics(job).get("tuplesDropped", 0)
+                        - dropped_before)
+                outcome = st.get("outcome") or {}
+                row = {
+                    "workload": workload, "fault": fault, "policy": policy,
+                    "seed": kw["seed"],
+                    "completed": st.get("completed", False),
+                    "phase": st.get("phase"),
+                    "chosen": st.get("chosen"),
+                    "recoverS": st.get("recoverS"),
+                    "recoverSpanMs": outcome.get("recoverSpanMs"),
+                    "wallS": round(wall_s, 4),
+                    "tuplesLost": lost,
+                    "sloVerdicts": verdicts,
+                    "worstRecoveryS": slo.get("ledger", {}).get(
+                        "worstRecoveryS"),
+                }
+                if outcome.get("error"):
+                    row["error"] = outcome["error"]
+                scenarios.append(row)
+                emit(f"chaos.{workload}.{fault}.{policy}",
+                     st.get("recoverS") or 0.0,
+                     f"{row['phase']};lost={lost};"
+                     f"slo={'Met' if verdicts.get('Met') == 'True' else 'Violated'}")
+            p.delete_job(job)
+            assert p.wait_terminated(job, 60)
+        finally:
+            p.shutdown()
+    report = {
+        "benchmark": "chaos",
+        "matrix": {"workloads": sorted(CHAOS_WORKLOADS),
+                   "policies": CHAOS_POLICIES,
+                   "seeds": "per-scenario, recorded (deterministic replay)"},
+        "scenarios": scenarios,
+        "summary": {
+            "total": len(scenarios),
+            "recovered": sum(1 for s in scenarios
+                             if s["phase"] == "Recovered"),
+            "sloMet": sum(1 for s in scenarios
+                          if s["sloVerdicts"].get("Met") == "True"),
+            "zeroLoss": sum(1 for s in scenarios if s["tuplesLost"] == 0),
+        },
+    }
+    out = out_path or os.path.join(os.path.dirname(__file__), "..", "results",
+                                   "BENCH_chaos.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    s = report["summary"]
+    emit("chaos.summary", 0.0,
+         f"recovered={s['recovered']}/{s['total']};"
+         f"sloMet={s['sloMet']};zeroLoss={s['zeroLoss']}")
+    return report
+
+
 BENCHES = {
     "fig7": bench_fig7_job_lifecycle,
     "fig7c": bench_fig7c_gc_vs_bulk,
@@ -951,6 +1104,7 @@ BENCHES = {
     "teardown": bench_teardown,
     "oversub": bench_oversub,
     "latency": bench_latency,
+    "chaos": bench_chaos,
 }
 
 # cheap subset for CI (`--smoke`): seconds not minutes (scale_down and
@@ -958,7 +1112,7 @@ BENCHES = {
 # zero-loss scale-down and pressure-aware scheduling are acceptance
 # criteria, not just trajectories)
 SMOKE = ("fig7c", "table1", "transport", "scale_down", "teardown", "oversub",
-         "latency")
+         "latency", "chaos")
 
 
 def main() -> None:
@@ -986,7 +1140,7 @@ def main() -> None:
     if smoke:  # the CI guard must actually guard
         results_dir = os.path.join(os.path.dirname(__file__), "..", "results")
         for artifact in ("BENCH_transport.json", "BENCH_scaledown.json",
-                         "BENCH_latency.json",
+                         "BENCH_latency.json", "BENCH_chaos.json",
                          "BENCH_teardown.json", "BENCH_oversub.json"):
             if not os.path.exists(os.path.join(results_dir, artifact)):
                 print(f"SMOKE FAIL: results/{artifact} not produced",

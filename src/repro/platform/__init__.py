@@ -17,6 +17,7 @@ from ..core import ResourceStore, Runtime, wait_for
 from . import crds
 from .api import ApiClient
 from .autoscale import AutoscaleConductor
+from .chaos import ChaosConductor, run_scenario
 from .cluster import KubeletController, NodePressureMonitor
 from .fabric import Fabric
 from .metrics import MetricsPlane
@@ -190,6 +191,22 @@ class Platform:
             for i in range(num_nodes):
                 self.api.nodes.create(crds.make_node(f"node{i}", cores_per_node))
 
+        # --- chaos plane: FaultInjection records reach the ChaosConductor
+        # through a dedicated lightweight controller (same pattern as the
+        # metrics/SLO planes); the conductor executes faults through the
+        # typed API + the very actors above — no side doors
+        self.chaos = ChaosConductor(
+            self.store, namespace, coords, self.trace, api=self.api,
+            fabric=self.fabric, kubelet=self.kubelet, rest=self.rest,
+            scheduler=getattr(self, "scheduler", None),
+            straggler=self.straggler_monitor)
+        self.fault_controller = Controller(self.store, crds.FAULT_INJECTION,
+                                           namespace,
+                                           "faultinjection-controller",
+                                           self.trace)
+        self.fault_controller.add_listener(self.chaos)
+        controllers.append(self.fault_controller)
+
         self.runtime = Runtime(self.store, threaded=threaded)
         for c in controllers:
             self.runtime.register(c)
@@ -256,6 +273,20 @@ class Platform:
         (latency targets / loss budget / recovery bound; see ``make_slo``)."""
         res = crds.make_slo(job, namespace=self.namespace, **kw)
         return self.api.slos.apply(res, requester="user")
+
+    def inject_fault(self, fault: str, job: str | None = None, **kw):
+        """kubectl create faultinjection ... — fire-and-forget chaos: the
+        ChaosConductor picks the record up and executes it.  The record is
+        NOT auto-deleted; prefer ``run_scenario`` for scripted runs."""
+        tag = kw.pop("tag", fault)
+        name = kw.pop("name", crds.fault_name(job or "cluster", tag))
+        return self.api.fault_injections.create(crds.make_fault_injection(
+            name, fault=fault, job=job, namespace=self.namespace, **kw))
+
+    def run_scenario(self, **kw) -> dict:
+        """One chaos scenario end to end (inject -> recover -> verdict
+        evidence -> record cleanup); see ``chaos.run_scenario``."""
+        return run_scenario(self, **kw)
 
     def slo_status(self, job: str) -> dict:
         """The SLO conductor's published verdict + error-budget ledger."""

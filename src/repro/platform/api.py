@@ -50,6 +50,7 @@ HANDLES = {
     "metrics": (crds.METRICS, "metrics"),
     "scaling_policies": (crds.SCALING_POLICY, "policy"),
     "slos": (crds.SLO, "slo"),
+    "fault_injections": (crds.FAULT_INJECTION, "fault"),
     "config_maps": (crds.CONFIG_MAP, "cm"),
     "services": (crds.SERVICE, "svc"),
     "imports": (crds.IMPORT, "import"),
@@ -209,6 +210,7 @@ class ApiClient:
     metrics: KindApi
     scaling_policies: KindApi
     slos: KindApi
+    fault_injections: KindApi
     config_maps: KindApi
     services: KindApi
     imports: KindApi

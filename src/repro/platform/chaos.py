@@ -1,0 +1,498 @@
+"""Chaos plane: fault injection through the platform's own surfaces.
+
+The paper's §8 war stories (pod churn, stragglers, partitions, flapping
+nodes) are pathologies the platform *claims* to absorb.  This module makes
+the claim falsifiable: a ``FaultInjection`` CRD states a fault
+declaratively, the ``ChaosConductor`` executes it through the SAME typed
+API and actors everything else uses (no side doors into the store), and
+the recovery is measured by the observability plane that already exists —
+every injection opens a ``fault`` root span, every expected recovery rides
+the ``recover`` spans the SLO conductor judges, and the error-budget
+ledger turns each run into a machine-checkable verdict.
+
+Fault taxonomy (``crds.FAULT_KINDS``):
+
+- ``pod-kill``        kill a healthy PE's runtime; recovery = the restart
+                      causal chain (launchCount++ -> recreate -> bind ->
+                      start -> connected).
+- ``kill-mid-drain``  shrink a parallel region, then kill the retiring pod
+                      *while its drain is in flight* — racing the
+                      ``streams/drain`` finalizer.  Recovery = the
+                      retirement converging anyway (resources reaped,
+                      delivery-path holds released).
+- ``clock-straggle``  skew one pod's reported heartbeat via the REST
+                      facade's straggle window: trips the node pressure
+                      plane's ``Straggling`` condition, and — past the
+                      job's ``stragglerTimeout`` — the straggler monitor's
+                      restart chain.
+- ``partition``       cut a PE's fabric reach for a window (the PE stays
+                      alive).  The operator *quarantines* it
+                      (``Quarantined`` condition: no restart, no straggler
+                      verdict) while senders back off and re-buffer;
+                      recovery = heal + the pod still healthy, zero loss.
+- ``node-flap``       delete a node (taking its hosted pods down) and
+                      re-add it; the node controller's scheduler kick
+                      revives anything stranded Unschedulable.
+
+Determinism: ALL chaos randomness — target draws, race-point jitter —
+flows through one ``random.Random(spec.seed)`` per injection; the seed is
+echoed in the FaultInjection status and the benchmark report, so any run
+replays exactly.
+
+Scenario harness: ``run_scenario`` is the one entry point benchmarks and
+tests share — create the record, let the conductor execute it, wait for
+the terminal phase, collect the status, delete the record (fault records
+are harness artifacts, not durable state).
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+from ..core import Conductor, Event, EventType, set_condition, wait_for
+from . import crds
+from .api import ensure_api
+from .tracing import fault_token, pod_token, span_tracer
+
+#: Terminal FaultInjection phases (the harness waits for either).
+TERMINAL_PHASES = ("Recovered", "Failed")
+
+
+class ChaosConductor(Conductor):
+    """Executes ``FaultInjection`` resources against the live platform.
+
+    Reacts to ADDED events only (status writes echo back as MODIFIED and
+    must not re-fire); each injection runs on its own daemon thread so the
+    control loop stays responsive while an executor sleeps through its
+    fault window or waits out a recovery chain.  ``execute`` is idempotent
+    (phase-gated), so WAL replays of completed injections are no-ops and
+    tests may call it synchronously.
+    """
+
+    kinds = (crds.FAULT_INJECTION,)
+
+    def __init__(self, store, namespace, coords=None, trace=None, *, api=None,
+                 fabric=None, kubelet=None, rest=None, scheduler=None,
+                 straggler=None, clock=time.monotonic):
+        super().__init__(store, "chaos-conductor", trace)
+        self.namespace = namespace
+        self.api = ensure_api(api, store, namespace, coords, trace)
+        self.fabric = fabric
+        self.kubelet = kubelet
+        self.rest = rest
+        self.scheduler = scheduler
+        self.straggler = straggler
+        self.clock = clock
+        self.injected = 0
+        self._threads: list = []
+
+    # ----------------------------------------------------------------- events
+
+    def on_event(self, event: Event) -> None:
+        if event.type != EventType.ADDED:
+            return
+        t = threading.Thread(target=self.execute, args=(event.resource.name,),
+                             name=f"chaos-{event.resource.name}", daemon=True)
+        self._threads.append(t)
+        t.start()
+
+    def join(self, timeout: float = 30.0) -> None:
+        """Wait for every in-flight injection to reach a terminal phase."""
+        deadline = time.monotonic() + timeout
+        for t in self._threads:
+            t.join(timeout=max(deadline - time.monotonic(), 0.0))
+
+    # -------------------------------------------------------------- execution
+
+    def execute(self, name: str) -> dict | None:
+        """Run one injection to its terminal phase; returns the outcome."""
+        res = self.api.fault_injections.try_get(name)
+        if res is None or res.status.get("phase") not in (None, "Pending"):
+            return None  # replay / double delivery: already executed
+        spec = dict(res.spec)
+        fault = spec["fault"]
+        # satellite of the chaos plane's determinism contract: this is the
+        # ONLY source of chaos randomness, and the seed is already echoed
+        # in the record's status by make_fault_injection
+        rng = random.Random(int(spec.get("seed", 0)))
+        if spec.get("delay"):
+            time.sleep(float(spec["delay"]))
+        sp = span_tracer(self.trace)
+        root = None
+        if sp is not None:
+            root = sp.attach(fault_token(name),
+                             sp.start_span("chaos", "fault", res.key,
+                                           fault=fault,
+                                           job=spec.get("job") or "-"))
+        t0 = self.clock()
+
+        def mark_injected(r) -> None:
+            r.status.update(phase="Injected", injectedAt=t0)
+            set_condition(r, crds.COND_FAULT_INJECTED, "True", reason=fault)
+
+        self.api.fault_injections.edit(name, mark_injected,
+                                       requester=self.name)
+        self.injected += 1
+        self._record("inject", res.key, fault)
+        try:
+            outcome = self._EXECUTORS[fault](self, spec, rng, root)
+            ok = True
+        except Exception as exc:  # noqa: BLE001 — a blown injection is a
+            #   Failed verdict on the record, not a dead conductor thread
+            outcome = {"error": repr(exc)}
+            ok = False
+        t1 = self.clock()
+
+        def finish(r) -> None:
+            r.status.update(phase="Recovered" if ok else "Failed",
+                            recoveredAt=t1, recoverS=round(t1 - t0, 4),
+                            outcome=outcome)
+            if outcome.get("chosen") is not None:
+                r.status["chosen"] = outcome["chosen"]
+            set_condition(r, crds.COND_FAULT_RECOVERED,
+                          "True" if ok else "False",
+                          reason="Healed" if ok else "RecoveryFailed",
+                          message=str(outcome.get("error", ""))[:200])
+
+        self.api.fault_injections.edit(name, finish, requester=self.name)
+        if sp is not None:
+            sp.end_span(sp.detach(fault_token(name)), ok=ok)
+        self._record("recovered" if ok else "failed", res.key,
+                     f"{t1 - t0:.3f}s")
+        return outcome
+
+    # ------------------------------------------------------------- targeting
+
+    def _pick_pe(self, job: str, rng: random.Random, target: dict) -> int:
+        """The seeded target draw: an explicit ``target.pe`` wins; otherwise
+        a uniform draw over the job's running, non-draining pods (sorted
+        before the draw so equal seeds pick equal victims)."""
+        if target.get("pe") is not None:
+            return int(target["pe"])
+        floor = int(target.get("minPe", 0))
+        pods = sorted((p for p in self.store.list(crds.POD, self.namespace,
+                                                  crds.job_labels(job))
+                       if p.status.get("phase") == "Running"
+                       and not p.terminating
+                       and not p.status.get("draining")
+                       and p.spec["peId"] >= floor),
+                      key=lambda p: p.spec["peId"])
+        if not pods:
+            raise RuntimeError(f"job {job!r}: no running pod to target")
+        return rng.choice(pods).spec["peId"]
+
+    # --------------------------------------------------------- recovery gates
+
+    def _pod_recovered(self, job: str, pe: int, before_launch: int) -> bool:
+        """A *replacement* incarnation is serving: later launch, Running,
+        and its runtime reported connected."""
+        pod = self.api.pods.try_get(crds.pod_name(job, pe))
+        return (pod is not None
+                and pod.spec.get("launchCount", 0) > before_launch
+                and pod.status.get("phase") == "Running"
+                and bool(pod.status.get("connected")))
+
+    def _pod_healthy(self, job: str, pe: int) -> bool:
+        pod = self.api.pods.try_get(crds.pod_name(job, pe))
+        return (pod is not None and pod.status.get("phase") == "Running"
+                and bool(pod.status.get("connected")))
+
+    def _open_recover(self, pod, root, cause: str):
+        """Pre-attach the recovery span under the pod token BEFORE injecting,
+        parented to the fault root: the kubelet's ``kill_pod`` and the pod
+        controller's ``_bump`` both skip their own attach when a context
+        already stands, and ``notify_connected`` ends whatever is attached —
+        so the platform's own recovery chain closes OUR span, and the SLO
+        conductor's ``recover``-span judgement covers injected faults for
+        free."""
+        sp = span_tracer(self.trace)
+        if sp is None or sp.context(pod_token(pod.name)) is not None:
+            return None
+        return sp.attach(pod_token(pod.name),
+                         sp.start_span("chaos", "recover", pod.key,
+                                       parent=root, job=pod.spec["job"],
+                                       pe=pod.spec["peId"], cause=cause))
+
+    def _abort_recover(self, pod_name: str, rec) -> None:
+        """Recovery never came: close + detach the span so it cannot sit
+        open forever poisoning every later SLO recovery judgement."""
+        sp = span_tracer(self.trace)
+        if sp is not None and rec is not None \
+                and sp.context(pod_token(pod_name)) is rec:
+            sp.end_span(sp.detach(pod_token(pod_name)), aborted=True)
+
+    def _span_ms(self, rec) -> dict:
+        if rec is None or rec.t1 is None:
+            return {}
+        return {"recoverSpanMs": round(rec.duration_ms, 2)}
+
+    # -------------------------------------------------------------- executors
+
+    def _fault_pod_kill(self, spec: dict, rng: random.Random, root) -> dict:
+        job = spec["job"]
+        pe = self._pick_pe(job, rng, spec.get("target") or {})
+        pod_name = crds.pod_name(job, pe)
+        pod = self.api.pods.get(pod_name)
+        before = pod.spec.get("launchCount", 0)
+        rec = self._open_recover(pod, root, "pod-kill")
+        try:
+            if not self.kubelet.kill_pod(pod_name):
+                raise RuntimeError(f"{pod_name}: no running runtime to kill")
+            bound = float((spec.get("params") or {}).get("recoveryTimeout",
+                                                         30.0))
+            if not wait_for(lambda: self._pod_recovered(job, pe, before),
+                            bound):
+                raise RuntimeError(f"{pod_name}: not recovered in {bound}s")
+        except Exception:
+            self._abort_recover(pod_name, rec)
+            raise
+        return {"chosen": {"pe": pe}, **self._span_ms(rec)}
+
+    def _fault_kill_mid_drain(self, spec: dict, rng: random.Random,
+                              root) -> dict:
+        """Shrink a region by one, then kill the retiring pod *inside* its
+        drain window — the injected race against the ``streams/drain``
+        finalizer.  Either outcome of the race (kill lands mid-drain, or
+        the drain finishes first and the kill whiffs) must converge to the
+        same terminal state: the retiring resource set fully reaped."""
+        job = spec["job"]
+        params = spec.get("params") or {}
+        region = params.get("region")
+        if region is None:
+            prs = sorted(self.api.parallel_regions.list(crds.job_labels(job)),
+                         key=lambda r: r.name)
+            if not prs:
+                raise RuntimeError(f"job {job!r}: no parallel region to shrink")
+            region = rng.choice(prs).spec["region"]
+        pr_name = crds.pr_name(job, region)
+        width = self.api.parallel_regions.get(pr_name).spec["width"]
+        if width < 2:
+            raise RuntimeError(f"{pr_name}: width {width} cannot scale down")
+        self.api.parallel_regions.patch(pr_name, {"width": width - 1},
+                                        requester=self.name)
+        found: dict = {}
+
+        def drain_began() -> bool:
+            for p in self.store.list(crds.POD, self.namespace,
+                                     crds.job_labels(job)):
+                if p.status.get("draining") and not p.status.get("drained"):
+                    found.setdefault("pod", p)
+                    return True
+            return "pod" in found  # drained so fast we only see the wake
+
+        if not wait_for(drain_began, float(params.get("drainTimeout", 10.0))):
+            raise RuntimeError(f"{pr_name}: no drain began after width cut")
+        victim = found["pod"]
+        pe = victim.spec["peId"]
+        # land the kill at a seeded point inside the drain window
+        time.sleep(rng.uniform(0.0, float(spec.get("duration", 0.05))))
+        killed = self.kubelet.kill_pod(victim.name)
+        bound = float(params.get("recoveryTimeout", 30.0))
+        reaped = (self.api.pods.wait_deleted(victim.name, timeout=bound)
+                  and self.api.pes.wait_deleted(crds.pe_name(job, pe),
+                                                timeout=bound))
+        if not reaped:
+            raise RuntimeError(f"{victim.name}: retirement did not converge")
+        return {"chosen": {"pe": pe, "region": region},
+                "killedMidDrain": bool(killed)}
+
+    def _fault_clock_straggle(self, spec: dict, rng: random.Random,
+                              root) -> dict:
+        job = spec["job"]
+        pe = self._pick_pe(job, rng, spec.get("target") or {})
+        pod_name = crds.pod_name(job, pe)
+        pod = self.api.pods.get(pod_name)
+        node = pod.spec.get("nodeName")
+        params = spec.get("params") or {}
+        offset = float(params.get("offset", 8.0))
+        duration = float(spec.get("duration", 0.5))
+        bound = float(params.get("recoveryTimeout", 30.0))
+        job_res = self.api.jobs.try_get(job)
+        straggler_timeout = (job_res.spec.get("stragglerTimeout")
+                             if job_res is not None else None)
+        expect_restart = (straggler_timeout is not None
+                          and offset > float(straggler_timeout))
+        before = pod.spec.get("launchCount", 0)
+        rec = (self._open_recover(pod, root, "clock-straggle")
+               if expect_restart else None)
+        self.rest.straggle_heartbeat(job, pe, offset, duration)
+        try:
+            if expect_restart:
+                # the straggler monitor marks the pod Failed -> the same
+                # restart chain as a crash; recovery = replacement connected.
+                # The monitor's scans are explicitly driven (its documented
+                # deterministic mode) — and the window is cleared the moment
+                # the verdict lands, or the REPLACEMENT pod (same name)
+                # would report straggled heartbeats too and be re-killed.
+                def tripped() -> bool:
+                    if self.straggler is not None:
+                        if pod_name in self.straggler.scan():
+                            self.rest.clear_straggle(job, pe)
+                    return self._pod_recovered(job, pe, before)
+
+                if not wait_for(tripped, bound):
+                    raise RuntimeError(f"{pod_name}: straggler restart "
+                                       f"did not complete in {bound}s")
+                return {"chosen": {"pe": pe}, "restarted": True,
+                        **self._span_ms(rec)}
+            # below the restart threshold: only the node pressure plane
+            # trips — Straggling must rise, then clear once the window
+            # closes and a fresh heartbeat lands
+            if node is None:
+                raise RuntimeError(f"{pod_name}: not bound to a node")
+            if not wait_for(lambda: self.api.nodes.condition_is(
+                    node, crds.COND_STRAGGLING), duration + bound):
+                raise RuntimeError(f"{node}: Straggling never tripped")
+            self.rest.clear_straggle(job, pe)
+            if not wait_for(lambda: self.api.nodes.condition_is(
+                    node, crds.COND_STRAGGLING, "False"), bound):
+                raise RuntimeError(f"{node}: Straggling never cleared")
+            return {"chosen": {"pe": pe, "node": node}, "restarted": False}
+        except Exception:
+            self.rest.clear_straggle(job, pe)
+            self._abort_recover(pod_name, rec)
+            raise
+
+    def _fault_partition(self, spec: dict, rng: random.Random, root) -> dict:
+        """Cut a live PE's fabric reach for a window.  The PE is quarantined
+        first (restart + straggler verdicts gated, senders route around by
+        backing off into their widened partition buffers), the fabric
+        partition is healed at the deadline, and the quarantine lift
+        re-kicks the launch chain only if the pod really died meanwhile."""
+        job = spec["job"]
+        pe = self._pick_pe(job, rng, spec.get("target") or {})
+        pe_name = crds.pe_name(job, pe)
+        pod_name = crds.pod_name(job, pe)
+        pod = self.api.pods.get(pod_name)
+        duration = float(spec.get("duration", 0.5))
+        sp = span_tracer(self.trace)
+        # no restart is expected, so notify_connected will never close this
+        # span — it is NOT attached under the pod token; the conductor ends
+        # it itself at heal (the SLO plane still judges it by job attr)
+        rec = (sp.start_span("chaos", "recover", pod.key, parent=root,
+                             job=job, pe=pe, cause="partition")
+               if sp is not None else None)
+        # quarantine BEFORE the cut: the operator must already be routing
+        # around the PE when senders start hitting Unreachable
+        self.api.pes.set_condition(pe_name, crds.COND_QUARANTINED, "True",
+                                   reason="Partitioned",
+                                   message=f"window={duration}s",
+                                   requester=self.name)
+        try:
+            self.fabric.partition(job, pe, duration)
+            time.sleep(duration)
+        finally:
+            self.fabric.heal(job, pe)  # idempotent with the lazy expiry
+            self.api.pes.set_condition(pe_name, crds.COND_QUARANTINED,
+                                       "False", reason="Healed",
+                                       requester=self.name)
+        # quarantine lift: the gated restart chain never ran — if the pod
+        # is actually gone, re-kick the launch chain now
+        pod_now = self.api.pods.try_get(pod_name)
+        if pod_now is None or pod_now.status.get("phase") == "Failed":
+            self.api.pes.edit(
+                pe_name,
+                lambda r: r.status.update(
+                    launchCount=r.status.get("launchCount", 0) + 1),
+                requester=self.name)
+        bound = float((spec.get("params") or {}).get("recoveryTimeout", 30.0))
+        healthy = wait_for(lambda: self._pod_healthy(job, pe), bound)
+        if sp is not None:
+            sp.end_span(rec, healed=healthy)
+        if not healthy:
+            raise RuntimeError(f"{pod_name}: unhealthy after heal")
+        return {"chosen": {"pe": pe}, **self._span_ms(rec)}
+
+    def _fault_node_flap(self, spec: dict, rng: random.Random, root) -> dict:
+        """Delete a node (its hosted pods of the target job die with it),
+        wait the flap window, re-add it; the node controller's scheduler
+        kick revives anything stranded Unschedulable."""
+        job = spec.get("job")
+        target = spec.get("target") or {}
+        selector = crds.job_labels(job) if job else None
+        pods = [p for p in self.store.list(crds.POD, self.namespace, selector)
+                if p.status.get("phase") == "Running"
+                and p.spec.get("nodeName") and not p.terminating]
+        node_name = target.get("node")
+        if node_name is None:
+            hosts = sorted({p.spec["nodeName"] for p in pods})
+            if not hosts:
+                raise RuntimeError("no node hosting a running pod to flap")
+            node_name = rng.choice(hosts)
+        node = self.store.try_get(crds.NODE, node_name)
+        if node is None:
+            raise RuntimeError(f"node {node_name!r} not found")
+        cores, labels = node.spec.get("cores", 8), dict(node.labels)
+        victims = [p for p in pods if p.spec["nodeName"] == node_name]
+        before = {p.name: (p.spec["job"], p.spec["peId"],
+                           p.spec.get("launchCount", 0)) for p in victims}
+        recs = [self._open_recover(p, root, "node-flap") for p in victims]
+        self.api.nodes.delete(node_name)
+        try:
+            for p in victims:
+                self.kubelet.kill_pod(p.name)  # the node takes its pods down
+            time.sleep(float(spec.get("duration", 0.2)))
+        finally:
+            self.api.nodes.create(crds.make_node(node_name, cores,
+                                                 labels or None))
+        bound = float((spec.get("params") or {}).get("recoveryTimeout", 30.0))
+
+        def all_back() -> bool:
+            return all(self._pod_recovered(j, p, launch)
+                       for j, p, launch in before.values())
+
+        if not wait_for(all_back, bound):
+            for p, rec in zip(victims, recs):
+                self._abort_recover(p.name, rec)
+            raise RuntimeError(f"{node_name}: pods not re-placed in {bound}s")
+        return {"chosen": {"node": node_name,
+                           "pes": sorted(v[1] for v in before.values())},
+                "flapped": len(victims)}
+
+    _EXECUTORS = {
+        "pod-kill": _fault_pod_kill,
+        "kill-mid-drain": _fault_kill_mid_drain,
+        "clock-straggle": _fault_clock_straggle,
+        "partition": _fault_partition,
+        "node-flap": _fault_node_flap,
+    }
+
+
+# ------------------------------------------------------------------ harness
+
+
+def run_scenario(platform, *, fault: str, job: str | None = None,
+                 tag: str | None = None, seed: int = 0,
+                 target: dict | None = None, delay: float = 0.0,
+                 duration: float = 0.5, params: dict | None = None,
+                 timeout: float = 60.0) -> dict:
+    """One scenario, end to end, through the declarative surface:
+
+    create the ``FaultInjection`` record -> the ChaosConductor executes it
+    -> wait for the terminal phase -> collect status -> delete the record
+    (it is a harness artifact; leaving it would hold ``wait_terminated``
+    open on the job's label set forever).  Returns the record's final
+    status plus a ``completed`` flag."""
+    name = crds.fault_name(job or "cluster", tag or fault)
+    platform.api.fault_injections.create(crds.make_fault_injection(
+        name, fault=fault, job=job, target=target, delay=delay,
+        duration=duration, seed=seed, params=params,
+        namespace=platform.namespace))
+
+    def terminal() -> bool:
+        res = platform.api.fault_injections.try_get(name)
+        return res is not None and res.status.get("phase") in TERMINAL_PHASES
+
+    completed = wait_for(terminal, timeout)
+    res = platform.api.fault_injections.try_get(name)
+    status = dict(res.status) if res is not None else {}
+    platform.api.fault_injections.delete(name)
+    status["name"] = name
+    status["fault"] = fault
+    status["completed"] = completed and status.get("phase") == "Recovered"
+    return status
+
+
+__all__ = ["ChaosConductor", "run_scenario", "TERMINAL_PHASES"]

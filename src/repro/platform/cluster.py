@@ -63,6 +63,12 @@ class KubeletController(Controller):
         self.handles: dict = {}
         self._hlock = threading.Lock()
         self._shares: dict = {}  # node -> cpu share in (0, 1]; lock-free reads
+        # start-pod retry envelope: a failed start (transient fabric/config
+        # trouble under chaos) backs off with a capped exponential delay
+        # instead of either crashing the kubelet thread or retrying hot on
+        # every pod event; the next event after the deadline re-attempts
+        self._start_backoff: dict = {}  # pod name -> (attempt, retry_at)
+        self.start_retries = 0
 
     def cpu_share(self, node: str | None) -> float:
         """Current CPU share of one PE on ``node`` (1.0 without the model)."""
@@ -146,24 +152,36 @@ class KubeletController(Controller):
         if not pod.spec.get("nodeName") or pod.status.get("phase") != "Pending" \
                 or pod.terminating:
             return
-        with self._hlock:
-            if pod.name in self.handles:
-                return
-            cm = self.store.try_get(crds.CONFIG_MAP,
-                                    crds.cm_name(pod.spec["job"], pod.spec["peId"]),
-                                    pod.namespace)
-            if cm is None:  # pod conductor guarantees this; guard anyway
-                return
-            stop = threading.Event()
-            node = pod.spec.get("nodeName")
-            runtime = PERuntime(
-                job=pod.spec["job"], pe_id=pod.spec["peId"],
-                metadata=cm.spec["data"], fabric=self.fabric, rest=self.rest,
-                launch_count=pod.spec.get("launchCount", 0), stop_event=stop,
-                on_exit=self._on_runtime_exit,
-                cpu_share=(lambda n=node: self.cpu_share(n)))
-            self.handles[pod.name] = PodHandle(runtime, stop, node)
-            self._recompute_shares()
+        backoff = self._start_backoff.get(pod.name)
+        if backoff is not None and time.monotonic() < backoff[1]:
+            return  # inside the retry envelope: wait for the deadline
+        try:
+            with self._hlock:
+                if pod.name in self.handles:
+                    return
+                cm = self.store.try_get(crds.CONFIG_MAP,
+                                        crds.cm_name(pod.spec["job"], pod.spec["peId"]),
+                                        pod.namespace)
+                if cm is None:  # pod conductor guarantees this; guard anyway
+                    return
+                stop = threading.Event()
+                node = pod.spec.get("nodeName")
+                runtime = PERuntime(
+                    job=pod.spec["job"], pe_id=pod.spec["peId"],
+                    metadata=cm.spec["data"], fabric=self.fabric, rest=self.rest,
+                    launch_count=pod.spec.get("launchCount", 0), stop_event=stop,
+                    on_exit=self._on_runtime_exit,
+                    cpu_share=(lambda n=node: self.cpu_share(n)))
+                self.handles[pod.name] = PodHandle(runtime, stop, node)
+                self._recompute_shares()
+        except Exception:  # noqa: BLE001 — transient start failure: back off
+            attempt = backoff[0] + 1 if backoff is not None else 1
+            delay = min(0.1 * (2 ** (attempt - 1)), 2.0)
+            self._start_backoff[pod.name] = (attempt, time.monotonic() + delay)
+            self.start_retries += 1
+            self._record("start-pod-backoff", pod.key, f"attempt={attempt}")
+            return
+        self._start_backoff.pop(pod.name, None)
         sp = span_tracer(self.trace)
         if sp is not None:
             with sp.span(self.name, "start-pod", pod.key,

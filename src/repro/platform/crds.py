@@ -56,9 +56,11 @@ TEST_SUITE = "TestSuite"
 METRICS = "Metrics"
 SCALING_POLICY = "ScalingPolicy"
 SLO = "SLO"
+FAULT_INJECTION = "FaultInjection"
 
 CUSTOM_KINDS = (JOB, PE, PARALLEL_REGION, HOSTPOOL, IMPORT, EXPORT,
-                CONSISTENT_REGION, TEST_SUITE, METRICS, SCALING_POLICY, SLO)
+                CONSISTENT_REGION, TEST_SUITE, METRICS, SCALING_POLICY, SLO,
+                FAULT_INJECTION)
 K8S_KINDS = (CONFIG_MAP, POD, SERVICE, NODE)
 
 
@@ -105,6 +107,20 @@ COND_SLO_MET = "Met"
 #: SLO: at least one objective dimension is out of budget; the condition
 #: reason names the failing dimensions.
 COND_SLO_VIOLATED = "Violated"
+#: FaultInjection: the chaos conductor has fired the fault (the injection
+#: timestamp rides in the condition; the ``chaos``-rooted span starts here).
+COND_FAULT_INJECTED = "Injected"
+#: FaultInjection: the platform healed — the fault's recovery signal (full
+#: health back, drain finalized, partition window closed) was observed and
+#: the chaos span ended.  Reason carries the outcome summary.
+COND_FAULT_RECOVERED = "Recovered"
+#: PE: the PE is alive but unreachable through the fabric (a network
+#: partition, not a crash).  The operator routes around it — established
+#: senders fall back to sibling handoff — instead of restarting it; the
+#: condition lifts when the partition heals.  The pod controller will not
+#: bump launchCount (and the straggler monitor will not mark the pod
+#: Failed) while this stands.
+COND_QUARANTINED = "Quarantined"
 
 #: Finalizer a retiring PE/Pod carries while draining: deletion only stamps
 #: ``deletion_timestamp``; the drained report removes the finalizer and the
@@ -156,6 +172,10 @@ def policy_name(job: str, region: str) -> str:
 
 def slo_name(job: str) -> str:
     return f"{job}-slo"
+
+
+def fault_name(job: str, tag: str) -> str:
+    return f"{job}-fault-{tag}"
 
 
 def job_labels(job: str) -> dict:
@@ -495,6 +515,74 @@ def make_slo(job: str, *, latency_p95_ms: float | None = None,
         labels=job_labels(job),
         owner_refs=(OwnerRef(JOB, job),),
         status={"ledger": {}},
+    )
+
+
+#: Fault kinds the chaos conductor knows how to execute (see
+#: ``src/repro/platform/chaos.py`` for the per-fault walkthroughs).
+FAULT_KINDS = ("pod-kill", "kill-mid-drain", "clock-straggle",
+               "partition", "node-flap")
+
+
+def make_fault_injection(name: str, *, fault: str, job: str | None = None,
+                         target: dict | None = None, delay: float = 0.0,
+                         duration: float = 0.5, seed: int = 0,
+                         params: dict | None = None,
+                         namespace: str = "default") -> Resource:
+    """FaultInjection CRD: one declared fault, executed by the ChaosConductor.
+
+    Chaos is injected through the platform's own declarative surfaces: the
+    conductor watches this kind and fires the fault via the ``ApiClient``
+    and the existing actors — never by reaching into runtime internals a
+    real operator could not touch.
+
+    spec:   ``fault`` — one of ``FAULT_KINDS``:
+
+            - "pod-kill":        fail a Running pod (the §8 pod-recovery
+                                 pathology; the recover span times it);
+            - "kill-mid-drain":  arm a drain (width decrease), then kill the
+                                 draining pod mid-pull — racing the
+                                 ``streams/drain`` finalizer;
+            - "clock-straggle":  freeze a pod's heartbeat for ``duration``
+                                 seconds so the node trips ``Straggling``
+                                 and the straggler monitor's timeout path
+                                 is exercised;
+            - "partition":       make the fabric unreachable for the target
+                                 PE's endpoints for ``duration`` seconds —
+                                 resolve times out, established flushes
+                                 fail; senders must retry/re-buffer and the
+                                 operator quarantines instead of restarting;
+            - "node-flap":       delete the target node and re-add it after
+                                 ``duration`` seconds (the scheduler's
+                                 re-kick path re-binds evicted pods).
+
+            ``job`` — target job (None only for pure node faults);
+            ``target`` — selector: ``{"peId": n}``, ``{"node": name}``, or
+            ``{"random": true}`` to let the seeded RNG choose (sources are
+            never chosen at random — their counters anchor loss accounting);
+            ``delay`` — seconds after activation before injecting;
+            ``duration`` — fault window / flap gap in seconds;
+            ``seed`` — the scenario RNG seed (all chaos randomness flows
+            through one ``random.Random(seed)``);
+            ``params`` — per-fault extras (e.g. drain width for
+            kill-mid-drain).
+
+    status: ``phase`` (Pending|Injected|Recovered|Failed), ``seed`` (echoed
+            so a red run replays deterministically), ``chosen`` (what the
+            RNG picked), ``injectedAt``/``recoveredAt`` (monotonic stamps),
+            ``recoverS`` (injection -> healed, from the chaos span), and the
+            ``Injected`` / ``Recovered`` conditions.
+    """
+    if fault not in FAULT_KINDS:
+        raise ValueError(f"fault injection {name!r}: unknown fault kind "
+                         f"{fault!r} (want one of {FAULT_KINDS})")
+    return Resource(
+        kind=FAULT_INJECTION, name=name, namespace=namespace,
+        spec={"fault": fault, "job": job, "target": target or {},
+              "delay": float(delay), "duration": float(duration),
+              "seed": int(seed), "params": params or {}},
+        labels=job_labels(job) if job else {},
+        status={"phase": "Pending", "seed": int(seed)},
     )
 
 

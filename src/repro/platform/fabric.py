@@ -61,6 +61,7 @@ Drain endpoint state machine::
 from __future__ import annotations
 
 import queue
+import random
 import threading
 import time
 from collections import deque
@@ -76,6 +77,16 @@ class EpochAborted(Exception):
 
 class ShutDown(Exception):
     pass
+
+
+class Unreachable(TimeoutError):
+    """Resolution failed because the peer is *partitioned*, not retired.
+
+    Subclasses ``TimeoutError`` so unhardened callers degrade to the old
+    behaviour, but a partition-aware sender can tell the two apart: an
+    unreachable peer is alive behind a network fault and will come back —
+    re-buffer and retry — while a retired peer is gone for good and the
+    buffered tail is a legitimate counted drop."""
 
 
 class P2Quantile:
@@ -462,6 +473,7 @@ class Fabric:
         self._endpoints: dict = {}  # (job, pe_id, port_id) -> TupleQueue
         self._published_at: dict = {}
         self._draining: set = set()  # (job, pe_id, port_id) drain-only keys
+        self._partitioned: dict = {}  # (job, pe_id) -> heal deadline (monotonic)
         self._residuals: dict = {}  # key -> (stashed_at, [tuples])
         self._publish_counts: dict = {}  # (job, pe_id) -> cumulative publishes
         self._collectives: dict = {}  # (job, region) -> CollectiveGroup
@@ -545,6 +557,67 @@ class Fabric:
                     if now - t > self.residual_ttl]:
             del self._residuals[key]
 
+    # ------------------------------------------------- partitions (chaos)
+
+    def partition(self, job: str, pe_id: int, duration: float) -> None:
+        """Make a PE's endpoints unreachable for ``duration`` seconds.
+
+        Models a network partition of an *alive* peer: the queues stay
+        bound (the PE keeps draining its own ring), but ``resolve`` treats
+        them as absent and raises ``Unreachable`` on timeout.  The epoch
+        bump drops every sender cache, so established senders fall off
+        their cached references onto the failing resolve path immediately —
+        their flushes fail for the window and they must re-buffer.  Heals
+        by deadline (lazily, or eagerly via ``heal``)."""
+        with self._cond:
+            self._partitioned[(job, pe_id)] = time.monotonic() + duration
+            self.epoch += 1
+            self._cond.notify_all()
+
+    def heal(self, job: str, pe_id: int) -> bool:
+        """End a partition early; True if one was in force."""
+        with self._cond:
+            was = self._partitioned.pop((job, pe_id), None) is not None
+            if was:
+                self.epoch += 1
+                self._cond.notify_all()
+            return was
+
+    def _partition_deadline(self, job: str, pe_id: int) -> float | None:
+        """Caller holds the lock.  The heal deadline if a partition is in
+        force, expiring (and bumping the epoch) lazily when passed."""
+        deadline = self._partitioned.get((job, pe_id))
+        if deadline is None:
+            return None
+        if time.monotonic() >= deadline:
+            del self._partitioned[(job, pe_id)]
+            self.epoch += 1
+            self._cond.notify_all()
+            return None
+        return deadline
+
+    def partitioned(self, job: str, pe_id: int) -> bool:
+        with self._cond:
+            return self._partition_deadline(job, pe_id) is not None
+
+    def endpoint_state(self, job: str, pe_id: int) -> str:
+        """Classify a peer: ``partitioned`` | ``draining`` | ``published`` |
+        ``retired`` (was bound once, gone now) | ``unknown`` (never seen).
+
+        The retired-vs-unreachable distinction is what lets a sender decide
+        between re-buffering (the peer will come back) and counting its
+        tail as dropped (the peer is gone for good)."""
+        with self._cond:
+            if self._partition_deadline(job, pe_id) is not None:
+                return "partitioned"
+            keys = [k for k in self._endpoints if k[:2] == (job, pe_id)]
+            if keys:
+                return "draining" if all(k in self._draining for k in keys) \
+                    else "published"
+            if self._publish_counts.get((job, pe_id), 0) > 0:
+                return "retired"
+            return "unknown"
+
     def resolve(self, job: str, pe_id: int, port_id: int,
                 timeout: float = 30.0, include_draining: bool = False):
         """Name resolution with propagation delay (paper §8: DNS latency).
@@ -559,7 +632,9 @@ class Fabric:
         deadline = time.monotonic() + timeout
         with self._cond:
             while True:
-                q = self._endpoints.get(key)
+                partition_ends = self._partition_deadline(job, pe_id)
+                q = None if partition_ends is not None \
+                    else self._endpoints.get(key)
                 if q is not None and not include_draining and \
                         key in self._draining:
                     q = None  # drain-only: invisible to fresh resolution
@@ -570,8 +645,15 @@ class Fabric:
                         return q
                     wait = min(deadline, ready_at) - now
                 else:
-                    wait = deadline - now
+                    # a partitioned peer wakes us at its heal deadline even
+                    # if nobody publishes in between
+                    wait = (min(deadline, partition_ends)
+                            if partition_ends is not None else deadline) - now
                 if wait <= 0:
+                    if partition_ends is not None:
+                        raise Unreachable(
+                            f"resolve({job}, pe {pe_id}, port {port_id}): "
+                            f"partitioned")
                     raise TimeoutError(f"resolve({job}, pe {pe_id}, port {port_id})")
                 self._cond.wait(wait)
 
@@ -600,15 +682,35 @@ class EndpointCache:
     the whole cache drops and the next send re-resolves — which is exactly
     how a restarted peer's fresh endpoint is picked up without the sender
     ever holding a stale reference past one epoch.
+
+    The miss path carries a retry envelope (capped exponential backoff with
+    deterministic jitter): a failed resolve of a *partitioned or recently
+    bound* peer is retried ``max_retries`` times before the failure
+    surfaces, because the peer is expected back; a peer the fabric
+    classifies ``retired`` fails fast — no amount of retrying resurrects a
+    drained PE, and the sender's tail is a legitimate counted drop.
     """
 
-    def __init__(self, fabric: Fabric):
+    def __init__(self, fabric: Fabric, *, max_retries: int = 2,
+                 backoff_base: float = 0.05, backoff_cap: float = 0.5,
+                 rng: random.Random | None = None):
         self.fabric = fabric
         self._epoch = fabric.epoch
         self._queues: dict = {}
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        # jitter decorrelates senders without breaking deterministic replay:
+        # the stream is seeded, never wall-clock
+        self._rng = rng if rng is not None else random.Random(0x5EED)
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
+        self.retries = 0
+
+    def _backoff(self, attempt: int) -> float:
+        step = min(self.backoff_base * (2 ** attempt), self.backoff_cap)
+        return step * (0.5 + 0.5 * self._rng.random())
 
     def get(self, job: str, pe_id: int, port_id: int,
             timeout: float = 0.2) -> TupleQueue:
@@ -626,8 +728,27 @@ class EndpointCache:
         self.misses += 1
         # an established sender may still reach a drain-only endpoint: the
         # retiring PE is pulling its ring dry and wants our buffered tail
-        q = self.fabric.resolve(job, pe_id, port_id, timeout=timeout,
-                                include_draining=True)
+        attempt = 0
+        while True:
+            try:
+                q = self.fabric.resolve(job, pe_id, port_id, timeout=timeout,
+                                        include_draining=True)
+                break
+            except Unreachable:
+                if attempt >= self.max_retries:
+                    raise
+                self.retries += 1
+                attempt += 1
+                time.sleep(self._backoff(attempt - 1))
+            except TimeoutError:
+                # retired peers fail fast; anything else may just be slow to
+                # (re)publish — retry inside the envelope
+                if attempt >= self.max_retries or \
+                        self.fabric.endpoint_state(job, pe_id) == "retired":
+                    raise
+                self.retries += 1
+                attempt += 1
+                time.sleep(self._backoff(attempt - 1))
         if self.fabric.epoch == self._epoch:
             # only cache if no binding moved while we resolved
             self._queues[key] = q
@@ -636,4 +757,5 @@ class EndpointCache:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "invalidations": self.invalidations,
+                "retries": self.retries,
                 "entries": len(self._queues)}

@@ -47,6 +47,7 @@ from ..core import (
     EventType,
     Resource,
     ResourceStore,
+    condition_is,
     set_condition,
 )
 from . import crds
@@ -77,9 +78,46 @@ class RestFacade:
         self.cr_operator = None  # wired by Platform
         self.broker = None
         self._last_metric: dict = {}
+        # chaos clock-straggle windows: pod name -> (offset s, until monotonic).
+        # While a window stands, the heartbeat this facade stamps on the
+        # pod's metric reports lags wall clock by ``offset`` — the injected
+        # equivalent of a kubelet whose clock (or report loop) straggles.
+        self._straggle: dict = {}
+
+    # ------------------------------------------------- chaos injection taps
+
+    def straggle_heartbeat(self, job: str, pe_id: int, offset: float,
+                           duration: float) -> None:
+        """Arm a heartbeat-straggle window (chaos plane): for ``duration``
+        seconds this pod's reported heartbeat lags by ``offset``, tripping
+        the node pressure monitor's ``Straggling`` verdict and — past the
+        job's ``stragglerTimeout`` — the straggler monitor."""
+        self._straggle[crds.pod_name(job, pe_id)] = (
+            float(offset), time.monotonic() + float(duration))
+
+    def clear_straggle(self, job: str, pe_id: int) -> None:
+        self._straggle.pop(crds.pod_name(job, pe_id), None)
+
+    def _heartbeat(self, pod_name: str) -> float:
+        entry = self._straggle.get(pod_name)
+        if entry is not None:
+            offset, until = entry
+            if time.monotonic() < until:
+                return time.time() - offset
+            self._straggle.pop(pod_name, None)
+        return time.time()
 
     def notify_connected(self, job: str, pe_id: int) -> None:
-        self.pod_coord.submit_status(crds.pod_name(job, pe_id),
+        pod_name = crds.pod_name(job, pe_id)
+        # connect envelope: a replacement runtime can announce itself a
+        # beat before the pod write that created it is observable on this
+        # side — absorb that race with a short bounded backoff instead of
+        # dropping the connected mark (which would wedge fullHealth)
+        for attempt in range(3):
+            if self.store.exists(crds.POD, pod_name, self.namespace):
+                break
+            time.sleep(0.02 * (attempt + 1))
+        self.pod_coord.submit_status(pod_name,
                                      {"connected": True}, requester="pe-rest")
         sp = span_tracer(self.trace)
         if sp is not None:
@@ -102,9 +140,11 @@ class RestFacade:
                 now - self._last_metric.get(key, 0.0) < 0.2:
             return
         self._last_metric[key] = now
+        pod_name = crds.pod_name(job, pe_id)
         self.pod_coord.submit_status(
-            crds.pod_name(job, pe_id),
-            {"metrics": metrics, "heartbeat": time.time()}, requester="pe-rest")
+            pod_name,
+            {"metrics": metrics, "heartbeat": self._heartbeat(pod_name)},
+            requester="pe-rest")
 
     def report_sink(self, job: str, pe_id: int, seen: int, maxseq: int) -> None:
         self.pod_coord.submit_status(
@@ -142,6 +182,8 @@ class RestFacade:
         "streams_slo_met": ("gauge", "1 when every SLO objective is within budget"),
         "streams_slo_violations": ("counter", "SLO evaluations that returned Violated"),
         "streams_slo_burn_rate": ("gauge", "violations / evaluations"),
+        "streams_pe_resolve_retries": ("counter", "Endpoint resolves retried after partition timeouts"),
+        "streams_pe_flush_retries": ("counter", "Peer flushes deferred into partition backoff"),
     }
 
     def metrics_text(self) -> str:
@@ -186,6 +228,14 @@ class RestFacade:
             add("streams_slo_violations", {"job": job},
                 ledger.get("violations"))
             add("streams_slo_burn_rate", {"job": job}, ledger.get("burnRate"))
+        for res in self.store.list(crds.POD, self.namespace):
+            m = res.status.get("metrics") or {}
+            if "resolveRetries" not in m and "flushRetries" not in m:
+                continue
+            labels = {"job": res.spec.get("job", ""),
+                      "pe": res.spec.get("peId", "")}
+            add("streams_pe_resolve_retries", labels, m.get("resolveRetries"))
+            add("streams_pe_flush_retries", labels, m.get("flushRetries"))
         lines = []
         for metric, (mtype, help_text) in self._PROM_HELP.items():
             if not samples[metric]:
@@ -647,6 +697,14 @@ class PodController(Controller):
             retire_pe(self.api, pod.spec["job"], pod.spec["peId"])
             self._record("retire-failed-drain", pod.key)
             return
+        if pe is not None and condition_is(pe, crds.COND_QUARANTINED):
+            # partitioned-but-alive: the runtime is healthy, only its
+            # fabric reach is cut.  Restarting it would turn a transient
+            # partition into real data loss — senders are already backing
+            # off and re-buffering.  The quarantine lift re-kicks the
+            # launch chain if the pod really is gone by then.
+            self._record("skip-bump-quarantined", pod.key)
+            return
         sp = span_tracer(self.trace)
         if sp is not None and sp.context(pod_token(pod.name)) is None:
             # recovery span root (unless chaos already opened one at the
@@ -986,6 +1044,11 @@ class StragglerMonitor:
             hb = pod.status.get("heartbeat")
             if not timeout or hb is None:
                 continue
+            pe = self.store.try_get(
+                crds.PE, crds.pe_name(pod.spec["job"], pod.spec["peId"]),
+                self.namespace)
+            if pe is not None and condition_is(pe, crds.COND_QUARANTINED):
+                continue  # partitioned, not dead: routed around, not failed
             if now - hb > timeout:
                 self.pod_coord.submit_status(pod.name, {"phase": "Failed"},
                                              requester="straggler-monitor")

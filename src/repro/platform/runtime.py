@@ -58,6 +58,7 @@ A PE with multiple fused operators executes them as an in-process chain
 
 from __future__ import annotations
 
+import random
 import threading
 import time
 import traceback
@@ -67,7 +68,7 @@ import numpy as np
 
 from ..data.stream import StreamSource
 from .fabric import (EndpointCache, EpochAborted, Fabric, LatencyDigest,
-                     ShutDown, TupleQueue)
+                     ShutDown, TupleQueue, Unreachable)
 
 
 class AdaptiveBatcher:
@@ -215,8 +216,19 @@ class PERuntime(threading.Thread):
         self.drain_stats: dict | None = None
         self._out_buf: dict = {}  # (peer pe, peer port) -> list[tuple]
         # a flush that fails against a restarting peer re-buffers instead of
-        # dropping; the cap bounds memory while the peer is away
+        # dropping; the cap bounds memory while the peer is away.  A peer
+        # that is *partitioned* (alive behind a network fault, coming back)
+        # earns a wider cap: shedding during a bounded window turns a
+        # latency blip into permanent loss
         self._buffer_cap = max(8192, 4 * self.batcher.hi)
+        self._partition_cap = 4 * self._buffer_cap
+        # per-peer retry envelope for unreachable peers: capped exponential
+        # backoff with deterministic jitter (seeded per PE, never wall
+        # clock) so senders neither spin on the failing resolve path nor
+        # stampede the peer the instant it heals
+        self._peer_backoff: dict = {}  # peer -> (attempt, retry_at)
+        self._backoff_rng = random.Random(0x9E3779B1 ^ (pe_id + 1))
+        self.flush_retries = 0
         self._route_buf: list = []
         self._buf_since: float | None = None  # oldest unflushed append
         self._route_cache: list = []
@@ -308,9 +320,20 @@ class PERuntime(threading.Thread):
     def _flush_peer(self, peer: tuple, buf: list) -> None:
         if not buf:
             return
+        give_up = self.stop_event.is_set() or self._drain_expired()
+        now = time.monotonic()
+        backoff = self._peer_backoff.get(peer)
+        if backoff is not None and now < backoff[1] and not give_up:
+            # the peer is known-unreachable and inside its backoff window:
+            # keep buffering (partition cap) instead of paying the failing
+            # resolve path on every single emit batch
+            excess = len(buf) - self._partition_cap
+            if excess > 0:
+                del buf[:excess]
+                self.counts["dropped"] += excess
+            return
         items = buf[:]
         del buf[:]
-        give_up = self.stop_event.is_set() or self._drain_expired()
         # a stopping PE (voluntary restart) still gets a real chance to
         # land its tail on a live-but-full peer — only an expired drain is
         # in a hurry; an unbounded wait would stall pod teardown
@@ -326,6 +349,7 @@ class PERuntime(threading.Thread):
             # throughput rollup (what the autoscaler scales on) tracks
             # delivery, not buffering toward a possibly-dead peer
             self.counts["out"] += len(items)
+            self._peer_backoff.pop(peer, None)
             if time.monotonic() - t0 > max(self.emit_linger_max, 0.002):
                 # the put had to wait for room: downstream backpressure —
                 # the batcher's grow signal for PEs with no input ring
@@ -336,6 +360,18 @@ class PERuntime(threading.Thread):
             # peer restarts, but it is not counted as delivered here
             self._requeue(peer, buf, items[getattr(e, "admitted", 0):],
                           give_up)
+        except Unreachable:
+            # alive-but-partitioned peer: resolution failed before any put,
+            # so nothing was admitted.  Re-buffer the whole batch under the
+            # partition cap and arm the capped-exponential backoff — the
+            # window is bounded and the peer is coming back, so shedding
+            # here would turn a latency blip into loss
+            self.flush_retries += 1
+            attempt = backoff[0] + 1 if backoff is not None else 1
+            delay = min(0.05 * (2 ** (attempt - 1)), 0.5)
+            jitter = 0.5 + 0.5 * self._backoff_rng.random()
+            self._peer_backoff[peer] = (attempt, now + delay * jitter)
+            self._requeue(peer, buf, items, give_up, partitioned=True)
         except Exception as e:
             # peer down/restarting: a timed-out put to a live peer still
             # admitted a prefix that is genuinely in flight — count it;
@@ -346,18 +382,21 @@ class PERuntime(threading.Thread):
             self._requeue(peer, buf, items[admitted:], give_up)
 
     def _requeue(self, peer: tuple, buf: list, leftover: list,
-                 give_up: bool) -> None:
+                 give_up: bool, partitioned: bool = False) -> None:
         """Re-buffer undelivered tuples for a later flush (bounded), unless
         the runtime is stopping/expired — then they are accounted drops, not
         silently lost.  Outside a consistent region this turns the restart
-        window of a surviving peer from tuple loss into added latency."""
+        window of a surviving peer from tuple loss into added latency.  A
+        partitioned peer gets the wider cap: its window is bounded and it
+        is coming back, so the eager shed would be a self-inflicted drop."""
         if not leftover:
             return
         if give_up:
             self.counts["dropped"] += len(leftover)
             return
         buf[:0] = leftover
-        excess = len(buf) - self._buffer_cap
+        cap = self._partition_cap if partitioned else self._buffer_cap
+        excess = len(buf) - cap
         if excess > 0:  # peer gone too long: shed oldest, keep bounded
             del buf[:excess]
             self.counts["dropped"] += excess
@@ -577,6 +616,8 @@ class PERuntime(threading.Thread):
             "avgPullBatch": dequeued / batches if batches else 0.0,
             "resolveHits": cache["hits"], "resolveMisses": cache["misses"],
             "resolveInvalidations": cache["invalidations"],
+            "resolveRetries": cache["retries"],
+            "flushRetries": self.flush_retries,
             "monotonic": time.monotonic(),
         }
         if self._lat.count:

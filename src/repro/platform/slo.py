@@ -64,6 +64,13 @@ class SLOConductor(Conductor):
         if job is None:
             return
         if event.type == EventType.DELETED:
+            if res.kind == crds.SLO:
+                # the contract is gone: drop the throttle + spec-signature
+                # state too, or a long-lived conductor leaks one entry per
+                # retired SLO (and a re-created SLO would inherit a stale
+                # spec signature and skip its immediate first verdict)
+                self._last_eval.pop(job, None)
+                self._last_spec.pop(job, None)
             return
         # a freshly created or reconfigured SLO gets an immediate verdict.
         # Our own verdict edits also raise SLO MODIFIED events, so force only

@@ -34,6 +34,8 @@ token                       causal chain covered
                             scheduler bind -> kubelet start -> connected
 ``migrate:<pe>``            pressure verdict -> pod delete -> recovery
                             chain above -> migration complete
+``fault:<name>``            chaos injection -> fault executed -> the
+                            platform's recovery chain -> healed
 ==========================  =====================================
 """
 
@@ -302,5 +304,9 @@ def migrate_token(pe_name: str) -> str:
     return f"migrate:{pe_name}"
 
 
+def fault_token(fault_name: str) -> str:
+    return f"fault:{fault_name}"
+
+
 __all__ = ["Span", "SpanTracer", "span_tracer", "drain_token", "pod_token",
-           "migrate_token"]
+           "migrate_token", "fault_token"]

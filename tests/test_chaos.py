@@ -1,0 +1,246 @@
+"""Chaos plane: FaultInjection CRD validation, the partition-tolerant
+fabric units (partition window, retry envelope, retired fail-fast), the
+clock-straggle window and quarantine gates, the kill-mid-drain race against
+the ``streams/drain`` finalizer, and threaded scenario-harness runs judged
+end to end by the SLO verdict plane.
+"""
+
+import random
+import time
+
+import pytest
+
+from repro.core import Coordinator, ResourceStore, set_condition, wait_for
+from repro.platform import Platform, crds
+from repro.platform.fabric import (
+    EndpointCache,
+    Fabric,
+    TupleQueue,
+    Unreachable,
+)
+from repro.platform.operator import RestFacade, StragglerMonitor
+
+
+# ------------------------------------------------------------- CRD contract
+
+
+def test_fault_injection_crd_validation():
+    with pytest.raises(ValueError):
+        crds.make_fault_injection("x", fault="cosmic-ray")
+    fi = crds.make_fault_injection(crds.fault_name("app", "k1"),
+                                   fault="pod-kill", job="app", seed=42)
+    # the determinism contract: the seed is echoed in status from birth,
+    # so a collected record always says how to replay it
+    assert fi.status == {"phase": "Pending", "seed": 42}
+    assert fi.spec["seed"] == 42 and fi.spec["fault"] == "pod-kill"
+    assert fi.labels == crds.job_labels("app")
+    # cluster-scoped faults (no job) carry no job labels — they must not
+    # hold any job's wait_terminated open
+    flap = crds.make_fault_injection("cluster-fault-n", fault="node-flap")
+    assert flap.labels == {}
+
+
+# ------------------------------------------- fabric partition window (unit)
+
+
+def test_fabric_partition_window():
+    f = Fabric()
+    q = TupleQueue(8)
+    f.publish("j", 1, 0, q)
+    assert f.resolve("j", 1, 0, timeout=0.5) is q
+    assert f.endpoint_state("j", 1) == "published"
+    f.partition("j", 1, 10.0)
+    assert f.partitioned("j", 1)
+    assert f.endpoint_state("j", 1) == "partitioned"
+    # the queue stays bound (the PE is alive) but resolution refuses it
+    # with the typed failure a partition-aware sender can branch on
+    with pytest.raises(Unreachable):
+        f.resolve("j", 1, 0, timeout=0.05)
+    assert f.heal("j", 1)
+    assert not f.partitioned("j", 1)
+    assert f.resolve("j", 1, 0, timeout=0.5) is q
+
+
+def test_fabric_partition_lazy_expiry():
+    """A partition window expires on its own deadline even if nobody calls
+    heal() — the conductor's heal is idempotent cleanup, not load-bearing."""
+    f = Fabric()
+    q = TupleQueue(8)
+    f.publish("j", 2, 0, q)
+    f.partition("j", 2, 0.1)
+    with pytest.raises(Unreachable):
+        f.resolve("j", 2, 0, timeout=0.02)
+    time.sleep(0.12)
+    assert f.resolve("j", 2, 0, timeout=0.5) is q
+    assert not f.heal("j", 2)  # already lazily expired
+
+
+def test_endpoint_cache_retry_envelope_and_retired_fail_fast():
+    f = Fabric()
+    q = TupleQueue(8)
+    f.publish("j", 1, 0, q)
+    cache = EndpointCache(f, max_retries=2, backoff_base=0.005,
+                          rng=random.Random(1))
+    assert cache.get("j", 1, 0, timeout=0.2) is q
+    # partitioned peer: the envelope is spent retrying (the peer is
+    # expected back), then the failure surfaces as Unreachable
+    f.partition("j", 1, 10.0)
+    with pytest.raises(Unreachable):
+        cache.get("j", 1, 0, timeout=0.01)
+    assert cache.retries == 2
+    f.heal("j", 1)
+    assert cache.get("j", 1, 0, timeout=0.2) is q
+    # retired peer: fail fast, zero retries — no amount of retrying
+    # resurrects a drained PE, the sender's tail is a counted drop
+    f.unpublish_pe("j", 1)
+    assert f.endpoint_state("j", 1) == "retired"
+    before = cache.retries
+    with pytest.raises(TimeoutError) as err:
+        cache.get("j", 1, 0, timeout=0.01)
+    assert not isinstance(err.value, Unreachable)
+    assert cache.retries == before
+
+
+def test_endpoint_cache_backoff_is_seeded():
+    f = Fabric()
+    c1 = EndpointCache(f, rng=random.Random(7))
+    c2 = EndpointCache(f, rng=random.Random(7))
+    assert [c1._backoff(i) for i in range(4)] == \
+           [c2._backoff(i) for i in range(4)]
+
+
+# -------------------------------------- clock-straggle + quarantine (unit)
+
+
+def test_rest_facade_straggle_window():
+    store = ResourceStore()
+    rest = RestFacade(store, Coordinator(store, crds.POD), None)
+    pod = crds.pod_name("j", 1)
+    rest.straggle_heartbeat("j", 1, offset=5.0, duration=0.15)
+    assert rest._heartbeat(pod) <= time.time() - 4.5  # lagging inside window
+    time.sleep(0.16)
+    assert time.time() - rest._heartbeat(pod) < 1.0  # expired on its own
+    rest.straggle_heartbeat("j", 1, 5.0, 10.0)
+    rest.clear_straggle("j", 1)
+    assert time.time() - rest._heartbeat(pod) < 1.0  # cleared early
+    # pods without a window are untouched
+    assert time.time() - rest._heartbeat(crds.pod_name("j", 2)) < 1.0
+
+
+def test_quarantine_gates_straggler_verdict():
+    """A quarantined PE (partitioned, not dead) must not be marked Failed by
+    the straggler monitor, however stale its heartbeat; lifting the
+    quarantine re-arms the verdict."""
+    store = ResourceStore()
+    store.create(crds.make_job("j", {"stragglerTimeout": 1.0}))
+    store.create(crds.make_pe("j", 1, {"job": "j", "peId": 1}))
+    store.create(crds.make_pod("j", 1, {}, launch_count=1, generation=1))
+    pod_coord = Coordinator(store, crds.POD)
+    pe_coord = Coordinator(store, crds.PE)
+    pod_name = crds.pod_name("j", 1)
+    pod_coord.submit_status(pod_name, {"phase": "Running",
+                                       "heartbeat": time.time() - 60.0},
+                            requester="test")
+    pe_coord.submit(crds.pe_name("j", 1),
+                    lambda r: set_condition(r, crds.COND_QUARANTINED, "True",
+                                            reason="Partitioned"),
+                    requester="test")
+    mon = StragglerMonitor(store, "default", pod_coord)
+    assert mon.scan() == []  # gated: routed around, not failed
+    pe_coord.submit(crds.pe_name("j", 1),
+                    lambda r: set_condition(r, crds.COND_QUARANTINED, "False",
+                                            reason="Healed"),
+                    requester="test")
+    assert mon.scan() == [pod_name]  # quarantine lifted: verdict lands
+    assert store.get(crds.POD, pod_name).status["phase"] == "Failed"
+
+
+# --------------------------------------------- scenario harness (threaded)
+
+
+@pytest.fixture
+def platform():
+    p = Platform(num_nodes=4)
+    yield p
+    p.shutdown()
+
+
+def test_kill_mid_drain_race_converges(platform):
+    """The injected race against the ``streams/drain`` finalizer: shrink a
+    region, kill the retiring pod inside its drain window.  Whichever side
+    wins the race, the retirement must converge — pod and PE reaped, the
+    survivors healthy at the new width."""
+    p = platform
+    p.submit("drainrace", {"app": {"type": "streams", "width": 2,
+                                   "pipeline_depth": 1,
+                                   "source": {"rate_sleep": 0.002}},
+                           "drain": {"timeout": 15.0, "grace": 0.3}})
+    assert p.wait_full_health("drainrace", 60)
+    st = p.run_scenario(fault="kill-mid-drain", job="drainrace", seed=5,
+                        duration=0.05, timeout=60)
+    assert st["completed"], st
+    assert st["phase"] == "Recovered"
+    assert isinstance(st["outcome"].get("killedMidDrain"), bool)
+    pe = st["chosen"]["pe"]
+    assert p.store.try_get(crds.POD, crds.pod_name("drainrace", pe)) is None
+    assert p.store.try_get(crds.PE, crds.pe_name("drainrace", pe)) is None
+    assert p.wait_full_health("drainrace", 30)  # healthy at width-1
+    # the record is a harness artifact: reaped, so it can never wedge the
+    # job's terminated wait
+    assert p.api.fault_injections.try_get(st["name"]) is None
+    p.delete_job("drainrace")
+    assert p.wait_terminated("drainrace", 30)
+
+
+def test_node_flap_revives_stranded_pods(platform):
+    p = platform
+    p.submit("flap", {"app": {"type": "streams", "width": 1,
+                              "pipeline_depth": 1,
+                              "source": {"rate_sleep": 0.002}}})
+    assert p.wait_full_health("flap", 60)
+    st = p.run_scenario(fault="node-flap", job="flap", seed=3, duration=0.2,
+                        timeout=60)
+    assert st["completed"], st
+    node = st["chosen"]["node"]
+    assert p.store.try_get(crds.NODE, node) is not None  # re-added
+    assert st["outcome"]["flapped"] >= 1
+    assert p.wait_full_health("flap", 60)
+    for pe in st["chosen"]["pes"]:
+        pod = p.store.get(crds.POD, crds.pod_name("flap", pe))
+        assert pod.spec["launchCount"] >= 2  # replaced through the chain
+
+
+def test_smallest_matrix_row_reaches_slo_verdict(platform):
+    """The benchmark matrix's smallest row (steady / pod-kill / strict),
+    end to end: inject through the declarative surface, recover through the
+    platform's own causal chain, and let the SLO plane deliver the verdict
+    — Met, zero loss, recovery span inside the bound."""
+    p = platform
+    job = "row0"
+    p.submit(job, {"app": {"type": "streams", "width": 2, "pipeline_depth": 1,
+                           "source": {"rate_sleep": 0.002}}})
+    assert p.wait_full_health(job, 60)
+    p.set_slo(job, loss_budget=0, recovery_time_s=15.0)
+    st = p.run_scenario(fault="pod-kill", job=job, seed=101,
+                        target={"minPe": 1}, timeout=60)
+    assert st["completed"], st
+    assert st["seed"] == 101  # replayable: the status says how
+    assert st["outcome"].get("recoverSpanMs", 0) > 0  # span chain closed
+    assert p.wait_full_health(job, 60)
+    # equal seeds pick equal victims over the same pod set
+    again = p.run_scenario(fault="pod-kill", job=job, seed=101,
+                           target={"minPe": 1}, timeout=60)
+    assert again["completed"] and again["chosen"] == st["chosen"]
+    assert p.wait_full_health(job, 60)
+    p.slo_conductor.evaluate(job, force=True)
+    slo = p.store.get(crds.SLO, crds.slo_name(job))
+    conds = {c["type"]: c["status"] for c in slo.status["conditions"]}
+    assert conds[crds.COND_SLO_MET] == "True"
+    assert conds[crds.COND_SLO_VIOLATED] == "False"
+    assert slo.status["ledger"]["recoveries"] >= 2
+    assert slo.status["ledger"]["lossSpentTuples"] == 0  # drain-safe: 0 lost
+    # the partition-hardening retry counters are first-class metrics
+    assert wait_for(lambda: "streams_pe_resolve_retries" in p.metrics_text()
+                    and "streams_pe_flush_retries" in p.metrics_text(), 15)
+    p.delete_job(job)
+    assert p.wait_terminated(job, 30)

@@ -13,7 +13,10 @@ from repro.platform.legacy import LegacyPlatform
 
 def test_scenario_kill_random_pes_streams():
     """Paper §6.6: 'randomly killing critical processes' — the app must
-    return to full health after each kill and keep processing.
+    return to full health after each kill and keep processing.  The kills
+    ride the chaos plane's scenario harness (seeded FaultInjection records
+    executed by the ChaosConductor), so each round is a replayable record
+    with its own recovery verdict, not a raw side-door kill.
 
     Budgeted for degraded timers (sub-ms sleeps cost up to ~10 ms under
     suite load): the source is throttled at 5 ms — comfortably above the
@@ -26,13 +29,17 @@ def test_scenario_kill_random_pes_streams():
                                    "pipeline_depth": 2,
                                    "source": {"rate_sleep": 0.005}}})
         assert p.wait_full_health("chaos", 120)
-        import random
-        rng = random.Random(0)
         n_pes = len(p.pods("chaos"))
-        for _ in range(3):
-            victim = rng.randrange(1, n_pes)  # keep the source alive
-            p.kill_pod("chaos", victim)
-            assert p.wait_full_health("chaos", 120), f"no recovery after pe {victim}"
+        for round_ in range(3):
+            st = p.run_scenario(fault="pod-kill", job="chaos", seed=round_,
+                                tag=f"kill-{round_}",
+                                target={"minPe": 1},  # keep the source alive
+                                params={"recoveryTimeout": 120.0},
+                                timeout=150)
+            assert st["completed"], f"no recovery in round {round_}: {st}"
+            assert 1 <= st["chosen"]["pe"] < n_pes
+            assert p.wait_full_health("chaos", 120), \
+                f"no full health after pe {st['chosen']['pe']}"
 
         def sink_seen():
             for x in p.pods("chaos"):
