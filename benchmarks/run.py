@@ -481,6 +481,83 @@ def bench_scaledown(out_path: str | None = None, n_tuples: int = 600) -> dict:
     return report
 
 
+# --------------------------------------------------------------- scaleout
+
+
+def bench_scaleout(out_path: str | None = None, n_tuples: int = 600) -> dict:
+    """Cross-process scale-out: end-to-end throughput of a sleep-bound
+    streams job as channel width grows 1 -> 2 -> 4, with every PE hosted
+    in a per-node worker OS process (``process_isolation=True``) so tuple
+    batches cross real length-prefixed socket frames.  Two payload sizes
+    exercise the wire codec's small-frame and bulk paths.
+
+    Each channel sleeps ``work_sleep`` per tuple, so aggregate service
+    rate — not core count — bounds throughput and the sweep measures
+    pipeline parallelism across worker processes honestly even on a
+    single-core runner.  One Platform (and its four spawned workers) is
+    reused across all six rows; a warmup job pays the fork + handshake
+    cost once, outside the measurement.
+
+    Writes ``results/BENCH_scaleout.json`` (``--smoke`` fails without
+    it); the headline is ``scaling_1_to_4`` at the large-payload row,
+    with 1.5x as the acceptance floor.
+    """
+    p = Platform(num_nodes=4, process_isolation=True)
+    rows = []
+    try:
+        # warmup: touch all four nodes once so no sweep row pays the
+        # worker-process spawn + handshake cost
+        p.submit("warm", {"app": {"type": "streams", "width": 4,
+                                  "pipeline_depth": 1,
+                                  "source": {"tuples": 50}}})
+        assert wait_for(lambda: _sink_seen(p, "warm") >= 50, 60)
+        p.delete_job("warm")
+        assert p.wait_terminated("warm", 30)
+        assert p.rest.workers, "no worker processes spawned"
+        for payload in (64, 4096):
+            for width in (1, 2, 4):
+                job = f"so-w{width}-p{payload}"
+                spec = {"app": {"type": "streams", "width": width,
+                                "pipeline_depth": 1,
+                                "source": {"tuples": n_tuples,
+                                           "rate_sleep": 0.0,
+                                           "payload_bytes": payload},
+                                "channel": {"work_sleep": 0.004},
+                                "sink": {"report_every": 25}}}
+                t0 = time.monotonic()
+                p.submit(job, spec)
+                assert wait_for(
+                    lambda j=job: _sink_seen(p, j) >= n_tuples, 120)
+                dt = time.monotonic() - t0
+                tps = n_tuples / dt
+                rows.append({"workers": width, "payload": payload,
+                             "tuples": n_tuples, "seconds": dt,
+                             "tuples_per_sec": tps})
+                emit(f"scaleout.w{width}.p{payload}", dt / n_tuples,
+                     f"{tps:.0f} tuples/s")
+                p.delete_job(job)
+                assert p.wait_terminated(job, 30)
+    finally:
+        p.shutdown()
+
+    def tps(width: int, payload: int) -> float:
+        return next(r["tuples_per_sec"] for r in rows
+                    if r["workers"] == width and r["payload"] == payload)
+
+    scaling = {f"p{pl}": tps(4, pl) / tps(1, pl) for pl in (64, 4096)}
+    report = {"benchmark": "scaleout", "rows": rows,
+              "scaling_1_to_4": scaling,
+              "meets_floor": scaling["p4096"] >= 1.5}
+    out = out_path or os.path.join(os.path.dirname(__file__), "..", "results",
+                                   "BENCH_scaleout.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("scaleout.scaling_1_to_4", 0.0,
+         f"p64={scaling['p64']:.2f}x;p4096={scaling['p4096']:.2f}x")
+    return report
+
+
 # --------------------------------------------------------------- oversub
 
 
@@ -1101,6 +1178,7 @@ BENCHES = {
     "autoscale": bench_autoscale_rampup,
     "transport": bench_transport,
     "scale_down": bench_scaledown,
+    "scaleout": bench_scaleout,
     "teardown": bench_teardown,
     "oversub": bench_oversub,
     "latency": bench_latency,
@@ -1111,8 +1189,8 @@ BENCHES = {
 # oversub are the Platform spin-ups — a few seconds per mode — because
 # zero-loss scale-down and pressure-aware scheduling are acceptance
 # criteria, not just trajectories)
-SMOKE = ("fig7c", "table1", "transport", "scale_down", "teardown", "oversub",
-         "latency", "chaos")
+SMOKE = ("fig7c", "table1", "transport", "scale_down", "scaleout", "teardown",
+         "oversub", "latency", "chaos")
 
 
 def main() -> None:
@@ -1140,8 +1218,9 @@ def main() -> None:
     if smoke:  # the CI guard must actually guard
         results_dir = os.path.join(os.path.dirname(__file__), "..", "results")
         for artifact in ("BENCH_transport.json", "BENCH_scaledown.json",
-                         "BENCH_latency.json", "BENCH_chaos.json",
-                         "BENCH_teardown.json", "BENCH_oversub.json"):
+                         "BENCH_scaleout.json", "BENCH_latency.json",
+                         "BENCH_chaos.json", "BENCH_teardown.json",
+                         "BENCH_oversub.json"):
             if not os.path.exists(os.path.join(results_dir, artifact)):
                 print(f"SMOKE FAIL: results/{artifact} not produced",
                       flush=True)

@@ -4,8 +4,11 @@
 # The tier-1 suite runs ~10 minutes serially, so CI splits it into two
 # parallel shards via TIER1_SHARD=1|2 (unset = run everything — the local
 # default).  Shard 2 names the heavy threaded files explicitly; shard 1 is
-# *everything else*, so a newly added test file always lands in shard 1
-# instead of being silently skipped.  Shard 1 also carries the benchmark
+# *everything else minus slow-marked rows*, so a newly added test file
+# always lands in shard 1 instead of being silently skipped.  The slow
+# rows of the shard-1 files (the socket-backend transport matrix, the
+# cross-process prochost suite) run as a second invocation on shard 2,
+# next to the other heavyweights.  Shard 1 also carries the benchmark
 # smoke + docs checks (its test half is the lighter one).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -23,14 +26,18 @@ SHARD2=(
 shard="${TIER1_SHARD:-all}"
 case "$shard" in
   1)
-    echo "== tier-1 tests (shard 1: everything not in shard 2)"
+    echo "== tier-1 tests (shard 1: everything not in shard 2, minus slow rows)"
     ignores=()
     for f in "${SHARD2[@]}"; do ignores+=("--ignore=$f"); done
-    python -m pytest -x -q --durations=20 "${ignores[@]}"
+    python -m pytest -x -q --durations=20 -m "not slow" "${ignores[@]}"
     ;;
   2)
     echo "== tier-1 tests (shard 2: heaviest suites)"
     python -m pytest -x -q --durations=20 "${SHARD2[@]}"
+    echo "== tier-1 tests (shard 2: slow rows of the shard-1 files)"
+    ignores=()
+    for f in "${SHARD2[@]}"; do ignores+=("--ignore=$f"); done
+    python -m pytest -x -q --durations=20 -m slow "${ignores[@]}"
     ;;
   all)
     echo "== tier-1 tests"
@@ -47,11 +54,12 @@ if [ "$shard" = "2" ]; then
   exit 0
 fi
 
-echo "== benchmark smoke (fig7c, table1, transport, scale_down, teardown, oversub, latency, chaos)"
+echo "== benchmark smoke (fig7c, table1, transport, scale_down, scaleout, teardown, oversub, latency, chaos)"
 # drop stale artifacts so run.py's --smoke artifact gates are real
 rm -f results/BENCH_transport.json results/BENCH_scaledown.json \
-      results/BENCH_teardown.json results/BENCH_oversub.json \
-      results/BENCH_latency.json results/BENCH_chaos.json
+      results/BENCH_scaleout.json results/BENCH_teardown.json \
+      results/BENCH_oversub.json results/BENCH_latency.json \
+      results/BENCH_chaos.json
 python benchmarks/run.py --smoke
 
 echo "== docs checks (README/ARCHITECTURE references, examples import)"

@@ -20,6 +20,7 @@ from .autoscale import AutoscaleConductor
 from .chaos import ChaosConductor, run_scenario
 from .cluster import KubeletController, NodePressureMonitor
 from .fabric import Fabric
+from .transport import make_transport
 from .metrics import MetricsPlane
 from .scheduler import NodeController, RebalanceConductor, SchedulerController
 from .slo import SLOConductor
@@ -52,14 +53,24 @@ class Platform:
                  store: ResourceStore | None = None,
                  scheduler_profile: str = "pressure",
                  rebalance: bool = False, cpu_model: bool = False,
-                 pressure_interval: float = 0.5):
+                 pressure_interval: float = 0.5,
+                 transport: str | None = None,
+                 process_isolation: bool = False):
         self.namespace = namespace
         self.store = store or ResourceStore(wal_path=wal_path)
         # the span tracer IS the causal trace (tracing.py grows it): flat
         # records for chain assertions, parented timed spans for the
         # observability plane
         self.trace = SpanTracer()
-        self.fabric = Fabric(dns_delay=dns_delay)
+        # transport seam: ``transport="socket"`` loops every endpoint's
+        # tuple batches through the local socket hub even in-process (the
+        # backend-parametrized test matrix); ``process_isolation=True``
+        # marks every substrate node processIsolation so its PEs run in
+        # per-node worker processes (the scale-out path)
+        self._owned_transport = make_transport(transport) if transport else None
+        self.process_isolation = process_isolation
+        self.fabric = Fabric(dns_delay=dns_delay,
+                             transport=self._owned_transport)
         self.ckpt = CheckpointStore(ckpt_root or tempfile.mkdtemp(prefix="repro-ckpt-"))
 
         # the typed declarative API: one coordinator per kind, every
@@ -189,7 +200,9 @@ class Platform:
             self.pod_controller.add_listener(self.rebalancer)
             controllers += [self.scheduler, self.kubelet, self.node_controller]
             for i in range(num_nodes):
-                self.api.nodes.create(crds.make_node(f"node{i}", cores_per_node))
+                self.api.nodes.create(crds.make_node(
+                    f"node{i}", cores_per_node,
+                    process_isolation=process_isolation))
 
         # --- chaos plane: FaultInjection records reach the ChaosConductor
         # through a dedicated lightweight controller (same pattern as the
@@ -247,12 +260,16 @@ class Platform:
         return self.kubelet.kill_pod(crds.pod_name(job, pe_id))
 
     def add_node(self, name: str, cores: int = 8,
-                 labels: dict | None = None):
+                 labels: dict | None = None,
+                 process_isolation: bool | None = None):
         """Grow the substrate at runtime (kubectl create node ...): the
         node controller re-kicks unschedulable pods onto the new capacity,
         and — with rebalancing enabled — the rebalance conductor starts
         migrating PEs off any sustained-hot node toward it."""
-        return self.api.nodes.create(crds.make_node(name, cores, labels))
+        if process_isolation is None:
+            process_isolation = self.process_isolation
+        return self.api.nodes.create(crds.make_node(
+            name, cores, labels, process_isolation=process_isolation))
 
     def node_pressure(self, name: str) -> dict:
         """The pressure plane's latest heartbeat for one node."""
@@ -382,6 +399,8 @@ class Platform:
             self.kubelet.stop_all()
         self.runtime.stop()
         self.store.close()
+        if self._owned_transport is not None:
+            self._owned_transport.close()
 
 
 __all__ = ["Platform", "crds", "plan_job"]

@@ -425,6 +425,7 @@ class ChaosConductor(Conductor):
         if node is None:
             raise RuntimeError(f"node {node_name!r} not found")
         cores, labels = node.spec.get("cores", 8), dict(node.labels)
+        isolated = bool(node.spec.get("processIsolation"))
         victims = [p for p in pods if p.spec["nodeName"] == node_name]
         before = {p.name: (p.spec["job"], p.spec["peId"],
                            p.spec.get("launchCount", 0)) for p in victims}
@@ -435,8 +436,9 @@ class ChaosConductor(Conductor):
                 self.kubelet.kill_pod(p.name)  # the node takes its pods down
             time.sleep(float(spec.get("duration", 0.2)))
         finally:
-            self.api.nodes.create(crds.make_node(node_name, cores,
-                                                 labels or None))
+            self.api.nodes.create(crds.make_node(
+                node_name, cores, labels or None,
+                process_isolation=isolated))
         bound = float((spec.get("params") or {}).get("recoveryTimeout", 30.0))
 
         def all_back() -> bool:

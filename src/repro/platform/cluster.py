@@ -28,6 +28,7 @@ from ..core import Controller, Coordinator, Resource, ResourceStore, \
 from . import crds
 from .api import ensure_api
 from .fabric import Fabric
+from .prochost import HostBridge
 from .runtime import PERuntime
 from .scheduler import NodeController, SchedulerController  # noqa: F401 — the
 #   scheduler moved to scheduler.py; re-exported for substrate callers
@@ -40,6 +41,62 @@ class PodHandle:
         self.runtime = runtime
         self.stop_event = stop_event
         self.node = node
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self.stop_event.set()
+        self.runtime.join(timeout=timeout)
+
+    def kill(self) -> bool:
+        self.stop(timeout=5.0)
+        return True
+
+
+class _RemoteRuntime:
+    """The slice of the ``PERuntime`` surface the kubelet touches, proxied
+    to a worker-hosted runtime over the control channel."""
+
+    def __init__(self, client, pod_name: str, job: str, pe_id: int):
+        self.client = client
+        self.pod_name = pod_name
+        self.job = job
+        self.pe_id = pe_id
+        self.draining = False
+
+    def is_alive(self) -> bool:
+        return self.client.alive and self.pod_name in self.client.pods
+
+    def begin_drain(self, req: dict) -> None:
+        self.client.begin_drain(self.pod_name, req)
+        self.draining = True
+
+    def drain_upstream_gone(self, pe_id: int) -> None:
+        self.client.drain_upstream_gone(self.job, pe_id)
+
+    def join(self, timeout: float | None = None) -> None:
+        pass  # lifecycle is RPC-driven; exits arrive as pod_exit casts
+
+
+class RemotePodHandle:
+    """Kubelet-side handle for a pod hosted in a node's worker process."""
+
+    def __init__(self, client, pod_name: str, job: str, pe_id: int,
+                 node: str | None):
+        self.client = client
+        self.pod_name = pod_name
+        self.node = node
+        self.runtime = _RemoteRuntime(client, pod_name, job, pe_id)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        try:
+            self.client.stop_pod(self.pod_name, timeout)
+        except Exception:  # noqa: BLE001 — worker death has its own path
+            pass
+
+    def kill(self) -> bool:
+        try:
+            return self.client.kill_pod(self.pod_name)
+        except Exception:  # noqa: BLE001 — dead worker: pod fails anyway
+            return False
 
 
 class KubeletController(Controller):
@@ -69,6 +126,26 @@ class KubeletController(Controller):
         # every pod event; the next event after the deadline re-attempts
         self._start_backoff: dict = {}  # pod name -> (attempt, retry_at)
         self.start_retries = 0
+        # cross-process hosting: nodes with spec.processIsolation get their
+        # PEs in a per-node worker process behind a HostBridge (lazy: pure
+        # in-process clusters never open a socket)
+        self._bridge: HostBridge | None = None
+        self._block = threading.Lock()
+
+    def bridge(self) -> HostBridge:
+        with self._block:
+            if self._bridge is None:
+                self._bridge = HostBridge(
+                    self.fabric, self.rest,
+                    on_pod_exit=self._on_remote_exit,
+                    on_worker_lost=self._on_worker_lost)
+            return self._bridge
+
+    def _node_isolated(self, node: str | None) -> bool:
+        if not node:
+            return False
+        res = self.store.try_get(crds.NODE, node)
+        return bool(res is not None and res.spec.get("processIsolation"))
 
     def cpu_share(self, node: str | None) -> float:
         """Current CPU share of one PE on ``node`` (1.0 without the model)."""
@@ -156,6 +233,11 @@ class KubeletController(Controller):
         if backoff is not None and time.monotonic() < backoff[1]:
             return  # inside the retry envelope: wait for the deadline
         try:
+            node = pod.spec.get("nodeName")
+            # isolated node: spawn/reuse the node's worker process first
+            # (outside _hlock — a first spawn pays the interpreter start)
+            client = self.bridge().ensure_worker(node) \
+                if self._node_isolated(node) else None
             with self._hlock:
                 if pod.name in self.handles:
                     return
@@ -164,16 +246,32 @@ class KubeletController(Controller):
                                         pod.namespace)
                 if cm is None:  # pod conductor guarantees this; guard anyway
                     return
-                stop = threading.Event()
-                node = pod.spec.get("nodeName")
-                runtime = PERuntime(
-                    job=pod.spec["job"], pe_id=pod.spec["peId"],
-                    metadata=cm.spec["data"], fabric=self.fabric, rest=self.rest,
-                    launch_count=pod.spec.get("launchCount", 0), stop_event=stop,
-                    on_exit=self._on_runtime_exit,
-                    cpu_share=(lambda n=node: self.cpu_share(n)))
-                self.handles[pod.name] = PodHandle(runtime, stop, node)
+                if client is not None:
+                    runtime = None
+                    handle = RemotePodHandle(client, pod.name,
+                                             pod.spec["job"],
+                                             pod.spec["peId"], node)
+                else:
+                    stop = threading.Event()
+                    runtime = PERuntime(
+                        job=pod.spec["job"], pe_id=pod.spec["peId"],
+                        metadata=cm.spec["data"], fabric=self.fabric, rest=self.rest,
+                        launch_count=pod.spec.get("launchCount", 0), stop_event=stop,
+                        on_exit=self._on_runtime_exit,
+                        cpu_share=(lambda n=node: self.cpu_share(n)))
+                    handle = PodHandle(runtime, stop, node)
+                self.handles[pod.name] = handle
                 self._recompute_shares()
+            if client is not None:
+                try:
+                    client.start_pod(pod.name, pod.spec["job"],
+                                     pod.spec["peId"], cm.spec["data"],
+                                     pod.spec.get("launchCount", 0))
+                except Exception:
+                    with self._hlock:
+                        self.handles.pop(pod.name, None)
+                        self._recompute_shares()
+                    raise
         except Exception:  # noqa: BLE001 — transient start failure: back off
             attempt = backoff[0] + 1 if backoff is not None else 1
             delay = min(0.1 * (2 ** (attempt - 1)), 2.0)
@@ -186,14 +284,17 @@ class KubeletController(Controller):
         if sp is not None:
             with sp.span(self.name, "start-pod", pod.key,
                          parent=sp.context(pod_token(pod.name)),
-                         node=node, launch=pod.spec.get("launchCount", 0)):
+                         node=node, launch=pod.spec.get("launchCount", 0),
+                         isolated=client is not None):
                 self.pod_coord.submit_status(pod.name, {"phase": "Running"},
                                              requester=self.name)
-                runtime.start()
+                if runtime is not None:
+                    runtime.start()
             return
         self.pod_coord.submit_status(pod.name, {"phase": "Running"},
                                      requester=self.name)
-        runtime.start()
+        if runtime is not None:
+            runtime.start()
 
     def _on_runtime_exit(self, runtime: PERuntime) -> None:
         pod_name = crds.pod_name(runtime.job, runtime.pe_id)
@@ -213,13 +314,44 @@ class KubeletController(Controller):
             self.pod_coord.submit_status(pod_name, {"phase": "Succeeded"},
                                          requester=self.name)
 
+    def _on_remote_exit(self, pod_name: str, crashed: bool,
+                        drain_stats: dict | None, stopped: bool) -> None:
+        """A worker-hosted runtime exited (pod_exit cast from the bridge) —
+        mirror ``_on_runtime_exit`` verbatim across the process boundary."""
+        with self._hlock:
+            self.handles.pop(pod_name, None)
+            self._recompute_shares()
+        if crashed:
+            self.pod_coord.submit_status(pod_name, {"phase": "Failed"},
+                                         requester=self.name)
+        elif drain_stats is not None:
+            self.pod_coord.submit_status(
+                pod_name, {"phase": "Succeeded", "drained": drain_stats},
+                requester=self.name)
+        elif not stopped:
+            self.pod_coord.submit_status(pod_name, {"phase": "Succeeded"},
+                                         requester=self.name)
+
+    def _on_worker_lost(self, node: str, pods: list) -> None:
+        """A worker process died under its pods: every one of them is gone
+        with it.  The bridge already retired their endpoints (epoch bump +
+        dead flags); failing the pods here hands recovery to the normal
+        restart chain, which respawns the worker on the next start."""
+        with self._hlock:
+            for name in pods:
+                self.handles.pop(name, None)
+            self._recompute_shares()
+        for name in pods:
+            self.pod_coord.submit_status(name, {"phase": "Failed"},
+                                         requester=self.name)
+        self._record("worker-lost", node, f"pods={len(pods)}")
+
     def stop_pod(self, pod_name: str, timeout: float = 5.0) -> None:
         with self._hlock:
             handle = self.handles.pop(pod_name, None)
             self._recompute_shares()
         if handle:
-            handle.stop_event.set()
-            handle.runtime.join(timeout=timeout)
+            handle.stop(timeout=timeout)
 
     def kill_pod(self, pod_name: str) -> bool:
         """Simulate an involuntary PE crash (test/benchmark hook)."""
@@ -228,8 +360,7 @@ class KubeletController(Controller):
             self._recompute_shares()
         if not handle:
             return False
-        handle.stop_event.set()
-        handle.runtime.join(timeout=5.0)
+        handle.kill()
         sp = span_tracer(self.trace)
         if sp is not None:
             # the recovery clock starts at the failure injection: the span
@@ -252,6 +383,10 @@ class KubeletController(Controller):
             names = list(self.handles)
         for n in names:
             self.stop_pod(n)
+        with self._block:
+            bridge, self._bridge = self._bridge, None
+        if bridge is not None:
+            bridge.shutdown()
 
 
 class NodePressureMonitor:

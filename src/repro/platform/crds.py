@@ -586,12 +586,16 @@ def make_fault_injection(name: str, *, fault: str, job: str | None = None,
     )
 
 
-def make_node(name: str, cores: int = 16, labels: dict | None = None) -> Resource:
+def make_node(name: str, cores: int = 16, labels: dict | None = None,
+              process_isolation: bool = False) -> Resource:
     """Node — cluster substrate capacity.
 
     spec:   ``cores`` — schedulable CPU capacity; validated here (must be a
             positive number) so the scheduler never has to clamp a
             zero-or-negative divisor at placement time.
+            ``processIsolation`` — when true, the kubelet hosts this node's
+            PEs in a dedicated worker OS process (socket transport between
+            processes) instead of threads of the platform process.
     status: ``pressure`` ({podsPerCore, ringFill, heartbeatLag, score,
             pods, updatedAt} — the kubelet pressure heartbeat), plus the
             ``Pressure`` / ``Straggling`` conditions.  Labels are the tags
@@ -601,5 +605,7 @@ def make_node(name: str, cores: int = 16, labels: dict | None = None) -> Resourc
             or cores <= 0:
         raise ValueError(f"node {name!r}: cores must be a positive number, "
                          f"got {cores!r}")
-    return Resource(kind=NODE, name=name, spec={"cores": cores},
-                    labels=labels or {})
+    spec: dict = {"cores": cores}
+    if process_isolation:
+        spec["processIsolation"] = True
+    return Resource(kind=NODE, name=name, spec=spec, labels=labels or {})

@@ -19,10 +19,15 @@ resolve) is slow and rare; the data path must never pay for it per tuple.
   move bumps the epoch) is what makes cache-and-invalidate safe.
 - ``resolve`` waits on a ``Condition`` signalled by ``publish`` instead of
   sleep-polling the registry.
-- ``TupleQueue`` is a deque ring with ``put_many``/``get_many`` so a batch
-  of tuples crosses the lock once; capacity is accounted in tuples and the
-  backpressure/high-watermark stats the metrics plane scrapes are kept per
-  batch.
+- *How* tuples cross an endpoint is the ``Transport``'s business
+  (``transport.py``): the in-process deque ring is the default backend,
+  the socket backend frames batches over local TCP with identical put
+  semantics, and the cross-process host (``prochost.py``) registers
+  remote-address handles here in place of local rings.  The fabric itself
+  only names endpoints and classifies their state — and for the
+  retired-vs-partitioned call it asks the transport whether a handle is
+  still *deliverable*, never just whether a thread-local queue object
+  exists.
 
 ``CollectiveGroup`` supports *epoch aborts*: when the consistent-region
 operator initiates rollback-and-recovery, in-flight barriers abort with
@@ -42,13 +47,14 @@ regions —
   mark bumps the epoch, so every sender cache invalidates at the moment
   the drain begins.
 - **residual carryover**: ``unpublish_pe`` stashes whatever tuples were
-  still sitting in the retired queues; the next ``publish`` of the same
-  computed name (a *restarting* PE of the surviving generation) preloads
-  them into the fresh ring, in order, ahead of new traffic.  A PE restart
-  for a metadata change therefore loses nothing that had already been
-  delivered to it.  Residuals for names that never republish (truly
-  retired PEs — the drain phase empties those rings first) expire after
-  ``residual_ttl`` seconds.
+  still sitting in the retired queues (or, across a process boundary, the
+  residuals the remote host collected and shipped back); the next
+  ``publish`` of the same computed name (a *restarting* PE of the
+  surviving generation) preloads them into the fresh ring, in order, ahead
+  of new traffic.  A PE restart for a metadata change therefore loses
+  nothing that had already been delivered to it.  Residuals for names that
+  never republish (truly retired PEs — the drain phase empties those rings
+  first) expire after ``residual_ttl`` seconds.
 
 Drain endpoint state machine::
 
@@ -60,33 +66,16 @@ Drain endpoint state machine::
 
 from __future__ import annotations
 
-import queue
 import random
 import threading
 import time
-from collections import deque
 
 import numpy as np
 
-
-class EpochAborted(Exception):
-    def __init__(self, epoch: int):
-        super().__init__(f"collective epoch aborted -> {epoch}")
-        self.epoch = epoch
-
-
-class ShutDown(Exception):
-    pass
-
-
-class Unreachable(TimeoutError):
-    """Resolution failed because the peer is *partitioned*, not retired.
-
-    Subclasses ``TimeoutError`` so unhardened callers degrade to the old
-    behaviour, but a partition-aware sender can tell the two apart: an
-    unreachable peer is alive behind a network fault and will come back —
-    re-buffer and retry — while a retired peer is gone for good and the
-    buffered tail is a legitimate counted drop."""
+# The ring and the exception vocabulary moved to transport.py with the
+# backend split; re-exported here so every existing import keeps working.
+from .transport import (EpochAborted, ShutDown, Transport,  # noqa: F401
+                        TupleQueue, Unreachable, default_transport)
 
 
 class P2Quantile:
@@ -197,209 +186,6 @@ class LatencyDigest:
         return out
 
 
-class TupleQueue:
-    """Bounded blocking ring standing in for a PE-PE TCP connection.
-
-    A deque guarded by one lock with separate not-empty / not-full
-    conditions (so batch puts never wake other producers).  ``put_many`` /
-    ``get_many`` move a whole batch under a single lock acquisition — the
-    per-tuple cost of ``queue.Queue`` was the dominant term in the Fig. 8
-    microbenchmark.  Capacity is accounted in tuples; a batch larger than
-    the remaining room is admitted in chunks as the consumer drains.
-
-    Instrumented for the metrics plane: cumulative enqueue/dequeue counters,
-    batch counters (average batch size = tuples / batches), a depth
-    high-watermark, and a count of puts that found insufficient room — the
-    backpressure signal autoscaling acts on, counted once per batch.
-    """
-
-    def __init__(self, maxsize: int = 1024):
-        self.capacity = maxsize if maxsize > 0 else 0  # 0 = unbounded
-        self._items: deque = deque()
-        self._lock = threading.Lock()
-        self._not_empty = threading.Condition(self._lock)
-        self._not_full = threading.Condition(self._lock)
-        self.closed = False
-        self.enqueued = 0
-        self.dequeued = 0
-        self.high_watermark = 0
-        self.blocked_puts = 0
-        self.put_batches = 0
-        self.get_batches = 0
-
-    # ---------------------------------------------------------------- puts
-
-    def put(self, item, timeout: float = 10.0) -> None:
-        with self._lock:
-            if self.closed:
-                raise ShutDown
-            if self.capacity and len(self._items) >= self.capacity:
-                self.blocked_puts += 1
-                self._wait_for_room(time.monotonic() + timeout)
-            self._items.append(item)
-            self.enqueued += 1
-            self.put_batches += 1
-            depth = len(self._items)
-            if depth > self.high_watermark:
-                self.high_watermark = depth
-            self._not_empty.notify()
-
-    def put_many(self, items, timeout: float = 10.0) -> None:
-        """Enqueue a batch under one lock crossing.
-
-        Blocks while the ring is full; raises ``queue.Full`` on timeout and
-        ``ShutDown`` if the queue closes while waiting.  Backpressure is
-        recorded once per batch that found insufficient room.  Delivery is
-        best-effort on failure: a raise can leave a prefix of the batch
-        admitted (already-enqueued tuples are in flight and not rolled
-        back) — callers must not retry the same batch, they would duplicate
-        the prefix.  The streaming contract absorbs this: outside a
-        consistent region tuples are best-effort, inside one replay from
-        the checkpoint repairs any loss.
-        """
-        if not isinstance(items, (list, tuple)):
-            items = list(items)
-        n = len(items)
-        if n == 0:
-            return
-        deadline = time.monotonic() + timeout
-        with self._lock:
-            if self.closed:
-                raise ShutDown
-            if self.capacity and len(self._items) + n > self.capacity:
-                self.blocked_puts += 1
-            i = 0
-            try:
-                while i < n:
-                    room = (self.capacity - len(self._items)) if self.capacity \
-                        else (n - i)
-                    if room <= 0:
-                        try:
-                            self._wait_for_room(deadline)
-                        except (queue.Full, ShutDown) as e:
-                            # callers that account per delivered tuple need
-                            # the in-flight prefix (it is not rolled back)
-                            e.admitted = i
-                            raise
-                        continue
-                    take = min(room, n - i)
-                    self._items.extend(items[i:i + take])
-                    i += take
-                    self.enqueued += take
-                    depth = len(self._items)
-                    if depth > self.high_watermark:
-                        self.high_watermark = depth
-                    self._not_empty.notify_all()
-            finally:
-                if i:  # an admitted prefix counts toward the batch stats
-                    self.put_batches += 1
-
-    def _wait_for_room(self, deadline: float) -> None:
-        """Caller holds the lock; returns with room available or raises."""
-        while len(self._items) >= self.capacity:
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                raise queue.Full
-            self._not_full.wait(remaining)
-            if self.closed:
-                raise ShutDown
-
-    # ---------------------------------------------------------------- gets
-
-    def get(self, timeout: float = 0.2):
-        with self._lock:
-            if not self._items and not self._wait_for_items(timeout):
-                return None
-            item = self._items.popleft()
-            self.dequeued += 1
-            self.get_batches += 1
-            self._not_full.notify()
-            return item
-
-    def get_many(self, max_items: int = 64, timeout: float = 0.2) -> list:
-        """Dequeue up to ``max_items`` under one lock crossing.
-
-        Blocks until at least one item is available; returns ``[]`` on
-        timeout or if the queue is closed and empty (never raises — the
-        consumer side mirrors ``get``'s None-on-timeout contract).
-        """
-        with self._lock:
-            if not self._items and not self._wait_for_items(timeout):
-                return []
-            take = min(max_items, len(self._items))
-            out = [self._items.popleft() for _ in range(take)]
-            self.dequeued += take
-            self.get_batches += 1
-            self._not_full.notify_all()
-            return out
-
-    def _wait_for_items(self, timeout: float) -> bool:
-        """Caller holds the lock with the ring empty; True when items
-        arrived, False on timeout/close (the deadline clock starts here so
-        the non-blocking fast path never reads it)."""
-        deadline = time.monotonic() + timeout
-        while not self._items:
-            if self.closed:
-                return False
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                return False
-            self._not_empty.wait(remaining)
-        return True
-
-    def drain(self) -> None:
-        with self._lock:
-            n = len(self._items)
-            self._items.clear()
-            self.dequeued += n
-            self._not_full.notify_all()
-
-    def take_all(self) -> list:
-        """Atomically remove and return everything in the ring (the drain /
-        handoff primitive: residual tuples leave as data, not as a drop)."""
-        with self._lock:
-            items = list(self._items)
-            self._items.clear()
-            self.dequeued += len(items)
-            self._not_full.notify_all()
-            return items
-
-    def preload(self, items) -> None:
-        """Prepend carried-over residuals ahead of new traffic, ignoring
-        capacity (bounded by the producer's ring size, so at worst one ring
-        of transient oversubscription).  Used by ``Fabric.publish`` when a
-        restarted PE reclaims its predecessor's undelivered input."""
-        if not items:
-            return
-        with self._lock:
-            self._items.extendleft(reversed(items))
-            self.enqueued += len(items)
-            depth = len(self._items)
-            if depth > self.high_watermark:
-                self.high_watermark = depth
-            self._not_empty.notify_all()
-
-    def close(self) -> None:
-        """Mark the endpoint dead: pending and future puts raise ``ShutDown``
-        (a stale cached sender fails fast instead of feeding a dead ring)."""
-        with self._lock:
-            self.closed = True
-            self._not_empty.notify_all()
-            self._not_full.notify_all()
-
-    def stats(self) -> dict:
-        depth = len(self._items)
-        return {"depth": depth, "capacity": self.capacity,
-                "fill": depth / self.capacity if self.capacity else 0.0,
-                "enqueued": self.enqueued, "dequeued": self.dequeued,
-                "putBatches": self.put_batches, "getBatches": self.get_batches,
-                "highWatermark": self.high_watermark,
-                "blockedPuts": self.blocked_puts}
-
-    def __len__(self):
-        return len(self._items)
-
-
 class CollectiveGroup:
     """Barrier-average over ``width`` contributors with abortable epochs."""
 
@@ -467,21 +253,30 @@ class Fabric:
     tuple hot path while the epoch stands still.
     """
 
-    def __init__(self, dns_delay: float = 0.0, residual_ttl: float = 30.0):
+    def __init__(self, dns_delay: float = 0.0, residual_ttl: float = 30.0,
+                 transport: Transport | None = None):
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        self._endpoints: dict = {}  # (job, pe_id, port_id) -> TupleQueue
+        self._endpoints: dict = {}  # (job, pe_id, port_id) -> endpoint handle
         self._published_at: dict = {}
         self._draining: set = set()  # (job, pe_id, port_id) drain-only keys
         self._partitioned: dict = {}  # (job, pe_id) -> heal deadline (monotonic)
         self._residuals: dict = {}  # key -> (stashed_at, [tuples])
         self._publish_counts: dict = {}  # (job, pe_id) -> cumulative publishes
         self._collectives: dict = {}  # (job, region) -> CollectiveGroup
+        self.transport = transport if transport is not None \
+            else default_transport()
         self.dns_delay = dns_delay
         self.residual_ttl = residual_ttl
         self.epoch = 0
 
-    def publish(self, job: str, pe_id: int, port_id: int, q: TupleQueue) -> None:
+    def make_queue(self, maxsize: int = 1024):
+        """Mint an input ring on this fabric's transport backend — the one
+        call sites use so the backend choice stays a fabric construction
+        detail, never a per-PE decision."""
+        return self.transport.make_queue(maxsize)
+
+    def publish(self, job: str, pe_id: int, port_id: int, q) -> None:
         key = (job, pe_id, port_id)
         with self._cond:
             self._sweep_residuals()
@@ -498,13 +293,20 @@ class Fabric:
             self.epoch += 1
             self._cond.notify_all()
 
-    def unpublish_pe(self, job: str, pe_id: int) -> None:
+    def unpublish_pe(self, job: str, pe_id: int,
+                     residuals: dict | None = None) -> None:
+        """Retire every endpoint of a PE, stashing undelivered input for the
+        residual-carryover republish.  ``residuals`` (``{port_id: [tuples]}``)
+        overrides the local ``take_all`` when the ring lives in another
+        process — the remote host drains it there and ships the leftovers
+        back over the control channel."""
         with self._cond:
             removed = [key for key in self._endpoints if key[:2] == (job, pe_id)]
             now = time.monotonic()
             for key in removed:
                 q = self._endpoints.pop(key)
-                leftovers = q.take_all()
+                leftovers = residuals.get(key[2], []) if residuals is not None \
+                    else q.take_all()
                 q.close()
                 if leftovers:
                     self._residuals[key] = (now, leftovers)
@@ -600,17 +402,53 @@ class Fabric:
         with self._cond:
             return self._partition_deadline(job, pe_id) is not None
 
+    def invalidate(self) -> None:
+        """Bump the endpoint epoch without moving a binding — used when
+        transport-level liveness changes out from under the registry (a
+        worker process died), so sender caches drop and the next resolve
+        re-classifies against the now-dead handles."""
+        with self._cond:
+            self.epoch += 1
+            self._cond.notify_all()
+
+    def wait_epoch(self, last: int, timeout: float = 0.5) -> int:
+        """Block until the endpoint epoch moves past ``last`` (or until the
+        timeout); returns the current epoch.  The cross-process bridge uses
+        this to push epoch movement to worker processes without polling."""
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            while self.epoch == last:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(remaining)
+            return self.epoch
+
+    def _live_keys(self, job: str, pe_id: int) -> tuple:
+        """Caller holds the lock: (all endpoint keys of the PE, the subset
+        the transport still considers deliverable)."""
+        keys = [k for k in self._endpoints if k[:2] == (job, pe_id)]
+        live = [k for k in keys
+                if self.transport.endpoint_alive(self._endpoints[k])]
+        return keys, live
+
     def endpoint_state(self, job: str, pe_id: int) -> str:
         """Classify a peer: ``partitioned`` | ``draining`` | ``published`` |
         ``retired`` (was bound once, gone now) | ``unknown`` (never seen).
 
         The retired-vs-unreachable distinction is what lets a sender decide
         between re-buffering (the peer will come back) and counting its
-        tail as dropped (the peer is gone for good)."""
+        tail as dropped (the peer is gone for good).  Liveness is the
+        *transport's* call and it outranks a partition window: bound
+        handles whose backing process died classify retired even while a
+        partition is in force — retrying cannot resurrect a dead process,
+        only a restart (which republishes) can."""
         with self._cond:
+            keys, live = self._live_keys(job, pe_id)
+            if keys and not live:
+                return "retired"
             if self._partition_deadline(job, pe_id) is not None:
                 return "partitioned"
-            keys = [k for k in self._endpoints if k[:2] == (job, pe_id)]
             if keys:
                 return "draining" if all(k in self._draining for k in keys) \
                     else "published"
@@ -627,7 +465,13 @@ class Fabric:
         configured DNS propagation delay.  Endpoints marked drain-only are
         invisible unless ``include_draining`` — fresh producers and pub/sub
         route matching must not attach to a retiring PE, but established
-        senders (``EndpointCache``) may still deliver their buffered tail."""
+        senders (``EndpointCache``) may still deliver their buffered tail.
+
+        On timeout the failure is typed by transport liveness: a partition
+        over endpoints that can still deliver raises ``Unreachable`` (the
+        peer is coming back — retry), while a partition whose endpoints are
+        all dead degrades to plain ``TimeoutError`` (retired semantics —
+        the window cannot outlive the process)."""
         key = (job, pe_id, port_id)
         deadline = time.monotonic() + timeout
         with self._cond:
@@ -651,9 +495,11 @@ class Fabric:
                             if partition_ends is not None else deadline) - now
                 if wait <= 0:
                     if partition_ends is not None:
-                        raise Unreachable(
-                            f"resolve({job}, pe {pe_id}, port {port_id}): "
-                            f"partitioned")
+                        keys, live = self._live_keys(job, pe_id)
+                        if live or not keys:
+                            raise Unreachable(
+                                f"resolve({job}, pe {pe_id}, port {port_id}): "
+                                f"partitioned")
                     raise TimeoutError(f"resolve({job}, pe {pe_id}, port {port_id})")
                 self._cond.wait(wait)
 
@@ -688,7 +534,10 @@ class EndpointCache:
     bound* peer is retried ``max_retries`` times before the failure
     surfaces, because the peer is expected back; a peer the fabric
     classifies ``retired`` fails fast — no amount of retrying resurrects a
-    drained PE, and the sender's tail is a legitimate counted drop.
+    drained PE, and the sender's tail is a legitimate counted drop.  The
+    classification consults transport liveness, so a peer whose *process*
+    died inside a partition window fails fast too instead of burning the
+    whole envelope on a handle nothing can revive.
     """
 
     def __init__(self, fabric: Fabric, *, max_retries: int = 2,
@@ -713,7 +562,7 @@ class EndpointCache:
         return step * (0.5 + 0.5 * self._rng.random())
 
     def get(self, job: str, pe_id: int, port_id: int,
-            timeout: float = 0.2) -> TupleQueue:
+            timeout: float = 0.2):
         epoch = self.fabric.epoch
         if epoch != self._epoch:
             if self._queues:
@@ -735,7 +584,10 @@ class EndpointCache:
                                         include_draining=True)
                 break
             except Unreachable:
-                if attempt >= self.max_retries:
+                # a dead process inside a partition window is retired, not
+                # partitioned — the envelope must not retry the unrevivable
+                if attempt >= self.max_retries or \
+                        self.fabric.endpoint_state(job, pe_id) == "retired":
                     raise
                 self.retries += 1
                 attempt += 1

@@ -83,6 +83,18 @@ class RestFacade:
         # pod's metric reports lags wall clock by ``offset`` — the injected
         # equivalent of a kubelet whose clock (or report loop) straggles.
         self._straggle: dict = {}
+        # process-isolation worker registry: node -> handshake info.  The
+        # HostBridge records each worker process here when its hello lands,
+        # so tests/operators can see which nodes run out-of-process.
+        self.workers: dict = {}
+
+    # ------------------------------------------- worker-process registration
+
+    def register_worker(self, node: str, info: dict) -> None:
+        self.workers[node] = dict(info, registeredAt=time.time())
+
+    def unregister_worker(self, node: str) -> None:
+        self.workers.pop(node, None)
 
     # ------------------------------------------------- chaos injection taps
 

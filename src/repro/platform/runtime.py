@@ -68,7 +68,7 @@ import numpy as np
 
 from ..data.stream import StreamSource
 from .fabric import (EndpointCache, EpochAborted, Fabric, LatencyDigest,
-                     ShutDown, TupleQueue, Unreachable)
+                     ShutDown, Unreachable)
 
 
 class AdaptiveBatcher:
@@ -239,7 +239,10 @@ class PERuntime(threading.Thread):
 
     def _connect(self) -> None:
         for port in self.meta.get("inputs", []):
-            q = TupleQueue()
+            # the fabric's transport backend mints the ring: in-process
+            # deque by default, socket-looped when the platform runs the
+            # cross-process data plane
+            q = self.fabric.make_queue()
             self.in_queues[port["portId"]] = q
             self.fabric.publish(self.job, self.pe_id, port["portId"], q)
         for port in self.meta.get("outputs", []):
@@ -706,6 +709,10 @@ class PERuntime(threading.Thread):
                 time.sleep(0.05)
             return
         limit = cfg.get("tuples", 0)  # 0 = unbounded
+        # optional payload ballast so transport benchmarks can sweep frame
+        # sizes; rides the tuple like any other field (zero-copy on the
+        # socket receive path)
+        payload = bytes(int(cfg.get("payload_bytes", 0)))
         interval = (self._cr() or {}).get("interval", 0)
         region = (self._cr() or {}).get("name", "region")
         offset = 0
@@ -726,6 +733,8 @@ class PERuntime(threading.Thread):
             # turned into a delivery-latency observation at the sink
             item = {"seq": offset, "data": offset % 97,
                     "ts": time.monotonic()}
+            if payload:
+                item["payload"] = payload
             self._emit(0, item, partition=offset)
             offset += 1
             self._maybe_flush()

@@ -1,0 +1,236 @@
+"""Wire format for the cross-process fabric (§8 networking path).
+
+Length-prefixed frames carrying a compact tagged-binary codec for tuple
+batches.  The codec is self-contained (no pickle, no third-party deps) and
+covers exactly the value shapes the platform moves between PEs: ``None``,
+bools, ints, floats, strings, byte payloads, lists/tuples and string-keyed
+dicts of the above.  Byte payloads decode as ``memoryview`` slices into the
+receive buffer — the zero-copy path for large tuple payloads — while every
+container stays a plain Python object so downstream code is agnostic to
+which transport delivered it.
+
+Frame layout (network byte order)::
+
+    +--------+--------+--------+------------+=============+
+    | magic  | type   | flags  | length     | payload     |
+    | u16    | u8     | u8     | u32        | `length` B  |
+    +--------+--------+--------+------------+=============+
+
+``FrameDecoder`` is incremental: ``feed()`` accepts arbitrary byte splits
+(including mid-header) and yields only complete frames; ``eof()`` raises
+``TruncatedFrame`` when the stream dies inside a frame, so a half-decoded
+batch can never leak to the consumer.
+"""
+from __future__ import annotations
+
+import struct
+
+MAGIC = 0x5346  # "SF" — stream frame
+HEADER = struct.Struct("!HBBI")
+HEADER_SIZE = HEADER.size
+
+# frame types
+F_DATA = 1   # tuple-batch delivery (expects an ACK)
+F_ACK = 2    # delivery receipt: status + admitted count
+F_CTRL = 3   # control-channel RPC envelope
+F_HELLO = 4  # worker handshake
+
+DEFAULT_MAX_FRAME = 8 * 1024 * 1024  # generous cap; oversize = protocol error
+
+_I64 = struct.Struct("!q")
+_F64 = struct.Struct("!d")
+_U32 = struct.Struct("!I")
+
+
+class FrameError(Exception):
+    """Malformed frame: bad magic, oversized length, or corrupt codec."""
+
+
+class TruncatedFrame(FrameError):
+    """Stream ended mid-frame — the tail must be discarded, not decoded."""
+
+
+# --------------------------------------------------------------- value codec
+
+def _encode_value(obj, out: bytearray) -> None:
+    if obj is None:
+        out.append(0x4E)  # 'N'
+    elif obj is True:
+        out.append(0x54)  # 'T'
+    elif obj is False:
+        out.append(0x46)  # 'F'
+    elif isinstance(obj, int):
+        if -(2 ** 63) <= obj < 2 ** 63:
+            out.append(0x69)  # 'i'
+            out += _I64.pack(obj)
+        else:  # big int: sign byte + magnitude bytes
+            mag = abs(obj)
+            raw = mag.to_bytes((mag.bit_length() + 7) // 8, "big")
+            out.append(0x49)  # 'I'
+            out += _U32.pack(len(raw))
+            out.append(1 if obj < 0 else 0)
+            out += raw
+    elif isinstance(obj, float):
+        out.append(0x66)  # 'f'
+        out += _F64.pack(obj)
+    elif isinstance(obj, str):
+        raw = obj.encode("utf-8")
+        out.append(0x73)  # 's'
+        out += _U32.pack(len(raw))
+        out += raw
+    elif isinstance(obj, (bytes, bytearray, memoryview)):
+        out.append(0x62)  # 'b'
+        out += _U32.pack(len(obj))
+        out += obj
+    elif isinstance(obj, list):
+        out.append(0x6C)  # 'l'
+        out += _U32.pack(len(obj))
+        for v in obj:
+            _encode_value(v, out)
+    elif isinstance(obj, tuple):
+        out.append(0x75)  # 'u'
+        out += _U32.pack(len(obj))
+        for v in obj:
+            _encode_value(v, out)
+    elif isinstance(obj, dict):
+        out.append(0x64)  # 'd'
+        out += _U32.pack(len(obj))
+        for k, v in obj.items():
+            _encode_value(k, out)
+            _encode_value(v, out)
+    else:
+        raise FrameError(f"unencodable type {type(obj).__name__!r}")
+
+
+def encode_value(obj) -> bytes:
+    out = bytearray()
+    _encode_value(obj, out)
+    return bytes(out)
+
+
+def _need(view, off: int, n: int) -> None:
+    if off + n > len(view):
+        raise FrameError("codec underrun: value extends past frame end")
+
+
+def _decode_value(view, off: int):
+    _need(view, off, 1)
+    tag = view[off]
+    off += 1
+    if tag == 0x4E:
+        return None, off
+    if tag == 0x54:
+        return True, off
+    if tag == 0x46:
+        return False, off
+    if tag == 0x69:
+        _need(view, off, 8)
+        return _I64.unpack_from(view, off)[0], off + 8
+    if tag == 0x49:
+        _need(view, off, 5)
+        n = _U32.unpack_from(view, off)[0]
+        neg = view[off + 4]
+        _need(view, off + 5, n)
+        val = int.from_bytes(bytes(view[off + 5:off + 5 + n]), "big")
+        return (-val if neg else val), off + 5 + n
+    if tag == 0x66:
+        _need(view, off, 8)
+        return _F64.unpack_from(view, off)[0], off + 8
+    if tag == 0x73:
+        _need(view, off, 4)
+        n = _U32.unpack_from(view, off)[0]
+        _need(view, off + 4, n)
+        return str(view[off + 4:off + 4 + n], "utf-8"), off + 4 + n
+    if tag == 0x62:
+        _need(view, off, 4)
+        n = _U32.unpack_from(view, off)[0]
+        _need(view, off + 4, n)
+        # zero-copy: a slice of the receive buffer, not a fresh bytes object
+        return view[off + 4:off + 4 + n], off + 4 + n
+    if tag in (0x6C, 0x75):
+        _need(view, off, 4)
+        n = _U32.unpack_from(view, off)[0]
+        off += 4
+        items = []
+        for _ in range(n):
+            v, off = _decode_value(view, off)
+            items.append(v)
+        return (tuple(items) if tag == 0x75 else items), off
+    if tag == 0x64:
+        _need(view, off, 4)
+        n = _U32.unpack_from(view, off)[0]
+        off += 4
+        d = {}
+        for _ in range(n):
+            k, off = _decode_value(view, off)
+            v, off = _decode_value(view, off)
+            d[k] = v
+        return d, off
+    raise FrameError(f"unknown codec tag 0x{tag:02x}")
+
+
+def decode_value(payload):
+    """Decode one value from a frame payload (bytes or memoryview).
+
+    Byte values come back as memoryviews into ``payload`` — keep the
+    backing buffer alive as long as the decoded structure is."""
+    view = payload if isinstance(payload, memoryview) else memoryview(payload)
+    val, off = _decode_value(view, 0)
+    if off != len(view):
+        raise FrameError(f"trailing garbage: {len(view) - off} bytes")
+    return val
+
+
+# ------------------------------------------------------------------- framing
+
+def encode_frame(ftype: int, payload,
+                 max_frame: int = DEFAULT_MAX_FRAME) -> bytes:
+    if len(payload) > max_frame:
+        raise FrameError(
+            f"frame payload {len(payload)} exceeds cap {max_frame}")
+    return HEADER.pack(MAGIC, ftype, 0, len(payload)) + bytes(payload)
+
+
+class FrameDecoder:
+    """Incremental frame parser, safe at any byte-split boundary.
+
+    The internal buffer is an immutable ``bytes`` object, so the payload
+    memoryviews handed out by ``feed()`` stay valid after later feeds
+    (appending builds a new buffer instead of resizing an exported one)."""
+
+    def __init__(self, max_frame: int = DEFAULT_MAX_FRAME):
+        self.max_frame = max_frame
+        self._buf = b""
+
+    def feed(self, data) -> list:
+        """Absorb ``data``; return [(ftype, payload_memoryview), ...] for
+        every frame completed by it (possibly none)."""
+        buf = bytes(data) if not self._buf else self._buf + bytes(data)
+        frames = []
+        off = 0
+        view = memoryview(buf)
+        while len(buf) - off >= HEADER_SIZE:
+            magic, ftype, _flags, length = HEADER.unpack_from(buf, off)
+            if magic != MAGIC:
+                raise FrameError(f"bad magic 0x{magic:04x}")
+            if length > self.max_frame:
+                raise FrameError(
+                    f"frame length {length} exceeds cap {self.max_frame}")
+            if len(buf) - off - HEADER_SIZE < length:
+                break  # partial frame: wait for more bytes
+            start = off + HEADER_SIZE
+            frames.append((ftype, view[start:start + length]))
+            off = start + length
+        self._buf = buf[off:] if off < len(buf) else b""
+        return frames
+
+    @property
+    def pending(self) -> int:
+        """Bytes buffered toward an incomplete frame."""
+        return len(self._buf)
+
+    def eof(self) -> None:
+        """Stream closed: raise ``TruncatedFrame`` if it died mid-frame."""
+        if self._buf:
+            raise TruncatedFrame(
+                f"stream ended with {len(self._buf)} bytes of partial frame")

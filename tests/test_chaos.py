@@ -101,6 +101,29 @@ def test_endpoint_cache_retry_envelope_and_retired_fail_fast():
     assert cache.retries == before
 
 
+def test_dead_remote_endpoint_classified_retired_not_partitioned():
+    """Transport-liveness bugfix: a peer whose hosting process died is
+    ``retired`` — fail fast, zero retries — even inside a standing
+    partition window.  Retry-forever is reserved for peers that can come
+    back; a dead process cannot, and spending the retry envelope (or the
+    whole window) on it turns one crash into upstream livelock."""
+    f = Fabric()
+    q = TupleQueue(8)
+    f.publish("j", 1, 0, q)
+    f.partition("j", 1, 30.0)
+    assert f.endpoint_state("j", 1) == "partitioned"
+    q.dead = True  # the transport's liveness probe: remote process gone
+    assert f.endpoint_state("j", 1) == "retired"
+    cache = EndpointCache(f, max_retries=5, backoff_base=0.005,
+                          rng=random.Random(1))
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError) as err:
+        cache.get("j", 1, 0, timeout=0.01)
+    assert not isinstance(err.value, Unreachable)  # plain timeout: fail fast
+    assert cache.retries == 0
+    assert time.monotonic() - t0 < 0.5  # no 30 s window served
+
+
 def test_endpoint_cache_backoff_is_seeded():
     f = Fabric()
     c1 = EndpointCache(f, rng=random.Random(7))
@@ -244,3 +267,39 @@ def test_smallest_matrix_row_reaches_slo_verdict(platform):
                     and "streams_pe_flush_retries" in p.metrics_text(), 15)
     p.delete_job(job)
     assert p.wait_terminated(job, 30)
+
+
+# ------------------------------------- partition across the socket boundary
+
+
+@pytest.mark.slow
+@pytest.mark.transport
+def test_partition_scenario_across_process_boundary():
+    """The partition fault with every PE in a worker process: the window
+    cuts resolution at the parent registry (worker resolves see the typed
+    ``Unreachable`` over the control channel), expiry heals it, senders
+    re-resolve and reconnect over the socket fabric — and the sink's final
+    count equals the emission count.  0 tuples lost through the window."""
+    n_tuples = 600
+    p = Platform(num_nodes=2, process_isolation=True)
+    try:
+        p.submit("sockpart", {"app": {
+            "type": "streams", "width": 2, "pipeline_depth": 1,
+            "source": {"tuples": n_tuples, "rate_sleep": 0.002}}})
+        assert p.wait_full_health("sockpart", 60)
+        assert p.rest.workers, "pods silently ran in-process"
+        st = p.run_scenario(fault="partition", job="sockpart", seed=11,
+                            target={"minPe": 1}, duration=0.4, timeout=60)
+        assert st["completed"], st
+        assert st["phase"] == "Recovered"
+        assert st["chosen"]["pe"] >= 1
+        assert wait_for(lambda: any(
+            (x.status.get("sink") or {}).get("seen", 0) >= n_tuples
+            for x in p.pods("sockpart")), 90)
+        sink = next(x.status["sink"] for x in p.pods("sockpart")
+                    if x.status.get("sink"))
+        assert sink["seen"] == n_tuples and sink["maxseq"] == n_tuples - 1
+        p.delete_job("sockpart")
+        assert p.wait_terminated("sockpart", 30)
+    finally:
+        p.shutdown()

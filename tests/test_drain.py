@@ -647,3 +647,39 @@ def test_legacy_change_width_drain_parity():
     finally:
         lp.cancel("l1")
         lp.shutdown()
+
+
+@pytest.mark.slow
+@pytest.mark.transport
+def test_scaledown_drain_zero_loss_across_process_boundary():
+    """The zero-loss scale-down contract with every PE in a per-node worker
+    process: drain entry, residual carryover, and the sibling handoff all
+    cross the socket boundary (the retiring worker ships its ring tail over
+    the control channel; the handoff streams DATA frames to the surviving
+    sibling's worker) — and the sink still sees every emitted tuple."""
+    n_tuples = 600
+    p = Platform(num_nodes=2, process_isolation=True)
+    try:
+        p.submit("app", {
+            "app": {"type": "streams", "width": 2, "pipeline_depth": 2,
+                    "source": {"tuples": n_tuples, "rate_sleep": 0.0005},
+                    "channel": {"work_sleep": 0.001}},
+            "drain": {"timeout": 15.0, "grace": 0.3},
+        })
+        assert p.wait_full_health("app", 60)
+        assert p.rest.workers, "pods silently ran in-process"
+        assert wait_for(lambda: _sink_seen(p, "app") > 50, 30)
+        n0 = len(p.pods("app"))
+        p.set_width("app", "par", 1)
+        assert wait_for(lambda: len(p.pods("app")) == n0 - 2, 60)
+        assert wait_for(lambda: _sink_seen(p, "app") >= n_tuples, 90), \
+            f"tuples lost on scale-down: {_sink_seen(p, 'app')}/{n_tuples}"
+        assert _sink_seen(p, "app") == n_tuples  # zero loss, zero dupes
+        assert p.job_metrics("app").get("tuplesDropped", 0) == 0
+        assert not [x for x in p.store.list(crds.PE, "default",
+                                            crds.job_labels("app"))
+                    if x.status.get("state") == "Draining"]
+        p.delete_job("app")
+        assert p.wait_terminated("app", 60)
+    finally:
+        p.shutdown()

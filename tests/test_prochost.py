@@ -1,0 +1,97 @@
+"""Cross-process PE hosting (the ``processIsolation`` path).
+
+Every test here runs real worker OS processes: the kubelet's HostBridge
+spawns one per isolated node, PE runtimes execute inside them, and tuple
+batches cross process boundaries as length-prefixed socket frames.  The
+contract under test is *semantic transparency*: job lifecycle, zero-loss
+pipelines, drain/handoff, and failure recovery behave exactly as they do
+in-process — plus the one genuinely new behaviour, worker-death recovery
+(a dead process retires its endpoints and the restart chain respawns it).
+"""
+
+import pytest
+
+from repro.core import wait_for
+from repro.platform import Platform
+
+pytestmark = [pytest.mark.transport, pytest.mark.slow]
+
+
+@pytest.fixture
+def platform():
+    p = Platform(num_nodes=2, process_isolation=True)
+    yield p
+    p.shutdown()
+
+
+def _sink(p, job):
+    for pod in p.pods(job):
+        if pod.status.get("sink"):
+            return pod.status["sink"]
+    return {}
+
+
+def test_worker_handshake_registers_through_rest_facade(platform):
+    """First pod on an isolated node spawns its worker; the hello lands in
+    the RestFacade's worker registry with a live data-plane address."""
+    p = platform
+    p.submit("hello", {"app": {"type": "streams", "width": 1,
+                               "pipeline_depth": 1,
+                               "source": {"tuples": 50}}})
+    assert p.wait_submitted("hello", 30)
+    assert wait_for(lambda: len(p.rest.workers) >= 1, 30)
+    for info in p.rest.workers.values():
+        host, port = info["dataAddr"]
+        assert host == "127.0.0.1" and port > 0
+    assert wait_for(lambda: _sink(p, "hello").get("seen", 0) >= 50, 60)
+
+
+def test_cross_process_pipeline_delivers_every_tuple(platform):
+    """300 tuples (with payload ballast, so real frames cross the wire)
+    source -> channels -> sink, every PE out-of-process: zero loss."""
+    p = platform
+    p.submit("pipe", {"app": {
+        "type": "streams", "width": 2, "pipeline_depth": 2,
+        "source": {"tuples": 300, "payload_bytes": 512}}})
+    assert p.wait_submitted("pipe", 30)
+    assert wait_for(lambda: _sink(p, "pipe").get("seen", 0) >= 300, 90)
+    sink = _sink(p, "pipe")
+    assert sink["seen"] == 300 and sink["maxseq"] == 299
+    assert p.rest.workers, "pods silently ran in-process"
+    p.delete_job("pipe")
+    assert p.wait_terminated("pipe", 30)
+
+
+def test_pod_kill_recovery_across_process_boundary(platform):
+    """kill_pod on a worker-hosted pod: the kill RPCs into the worker, the
+    pod fails, and the restart chain brings the replacement back to full
+    health inside the same worker process."""
+    p = platform
+    p.submit("kill", {"app": {"type": "streams", "width": 2,
+                              "pipeline_depth": 1,
+                              "source": {"rate_sleep": 0.002}}})
+    assert p.wait_full_health("kill", 60)
+    assert p.kill_pod("kill", 2)
+    assert wait_for(lambda: not p.job_status("kill").get("fullHealth"), 20)
+    assert p.wait_full_health("kill", 60)
+
+
+def test_worker_death_fails_pods_and_respawns(platform):
+    """The new failure mode: SIGKILL the worker process itself.  Its pods
+    go Failed (endpoints retired via the liveness probe — no partition
+    retry-forever), and the restart chain respawns a fresh worker."""
+    p = platform
+    p.submit("crash", {"app": {"type": "streams", "width": 2,
+                               "pipeline_depth": 1,
+                               "source": {"rate_sleep": 0.002}}})
+    assert p.wait_full_health("crash", 60)
+    bridge = p.kubelet.bridge()
+    node, client = next((n, c) for n, c in bridge.workers().items()
+                        if c.pods)
+    old_pid = client.proc.pid
+    client.proc.kill()
+    assert wait_for(lambda: not p.job_status("crash").get("fullHealth"), 30)
+    assert p.wait_full_health("crash", 90)
+    fresh = bridge.workers().get(node)
+    assert fresh is not None and fresh.alive
+    assert fresh.proc is not None and fresh.proc.pid != old_pid

@@ -12,6 +12,7 @@ Three layers:
 """
 
 import queue as pyqueue
+import sys
 import threading
 import time
 
@@ -25,6 +26,38 @@ from repro.platform.fabric import (
     TupleQueue,
 )
 from repro.platform.runtime import PERuntime
+
+pytestmark = pytest.mark.transport
+
+
+@pytest.fixture(autouse=True, params=[
+    "inproc",
+    pytest.param("socket", marks=pytest.mark.slow),
+])
+def transport_backend(request, monkeypatch):
+    """Run every test in this module under both fabric transports.
+
+    The ``socket`` row swaps the process-default transport (so every
+    ``Fabric()`` a test builds mints socket-backed rings) and rebinds this
+    module's ``TupleQueue`` symbol to a socket-backed constructor — the 23
+    test bodies are unchanged, yet each ``put`` loops its batch through a
+    real TCP hub as a length-prefixed frame.  Identical assertions passing
+    under both rows is the transport-equivalence contract."""
+    if request.param == "inproc":
+        yield "inproc"
+        return
+    from repro.platform import transport as tmod
+
+    st = tmod.SocketTransport()
+    prev = tmod.set_default_transport(st)
+    monkeypatch.setattr(
+        sys.modules[__name__], "TupleQueue",
+        lambda maxsize=1024: tmod.SocketTupleQueue(maxsize, hub=st.hub))
+    try:
+        yield "socket"
+    finally:
+        tmod.set_default_transport(prev)
+        st.close()
 
 
 # -------------------------------------------------------------- TupleQueue

@@ -1,0 +1,288 @@
+"""Wire-format properties: the frame codec under adversarial byte streams.
+
+The socket transport's correctness rests on three invariants this file
+attacks directly:
+
+- **round-trip fidelity**: any value shape the platform ships (tuple
+  batches of nested dicts/lists with payload bytes, big ints, floats)
+  decodes to an equal structure;
+- **split-safety**: the incremental decoder yields identical frames no
+  matter where the kernel splits the byte stream — including mid-header
+  and one-byte-at-a-time;
+- **truncation discipline**: a stream that dies mid-frame (or lies about
+  its length) surfaces a transport error — ``Unreachable`` at the sender,
+  a discarded connection at the hub — never a half-decoded batch in a
+  ring.
+"""
+
+import random
+import socket
+import threading
+import time
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.platform.transport import (
+    SocketHub,
+    SocketSender,
+    SocketTupleQueue,
+    TupleQueue,
+    Unreachable,
+)
+from repro.platform.wire import (
+    DEFAULT_MAX_FRAME,
+    F_ACK,
+    F_DATA,
+    HEADER,
+    HEADER_SIZE,
+    MAGIC,
+    FrameDecoder,
+    FrameError,
+    TruncatedFrame,
+    decode_value,
+    encode_frame,
+    encode_value,
+)
+
+pytestmark = pytest.mark.transport
+
+
+# ------------------------------------------------------- value generation
+
+def _rand_value(rng: random.Random, depth: int = 0):
+    """An arbitrary codec-shaped value: the tuple-batch alphabet."""
+    kinds = ["none", "bool", "int", "bigint", "float", "str", "bytes"]
+    if depth < 3:
+        kinds += ["list", "tuple", "dict"] * 2
+    kind = rng.choice(kinds)
+    if kind == "none":
+        return None
+    if kind == "bool":
+        return rng.random() < 0.5
+    if kind == "int":
+        return rng.randint(-(2 ** 63), 2 ** 63 - 1)
+    if kind == "bigint":
+        return rng.randint(2 ** 70, 2 ** 90) * (-1 if rng.random() < 0.5 else 1)
+    if kind == "float":
+        return rng.choice([0.0, -1.5, 3.141592653589793, 1e300, -1e-300,
+                           float(rng.randint(-10 ** 6, 10 ** 6))])
+    if kind == "str":
+        return "".join(rng.choice("aé∆b∑c𝕊d \n\"'\\x00") for _ in
+                       range(rng.randint(0, 12)))
+    if kind == "bytes":
+        return bytes(rng.getrandbits(8) for _ in range(rng.randint(0, 64)))
+    n = rng.randint(0, 4)
+    if kind == "list":
+        return [_rand_value(rng, depth + 1) for _ in range(n)]
+    if kind == "tuple":
+        return tuple(_rand_value(rng, depth + 1) for _ in range(n))
+    return {str(rng.randint(0, 99)) if rng.random() < 0.7
+            else rng.randint(0, 99): _rand_value(rng, depth + 1)
+            for _ in range(n)}
+
+
+def _norm(v):
+    """Collapse memoryview (the zero-copy decode of bytes) for comparison."""
+    if isinstance(v, memoryview):
+        return bytes(v)
+    if isinstance(v, list):
+        return [_norm(x) for x in v]
+    if isinstance(v, tuple):
+        return tuple(_norm(x) for x in v)
+    if isinstance(v, dict):
+        return {k: _norm(x) for k, x in v.items()}
+    return v
+
+
+# ------------------------------------------------------------- round trip
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_roundtrip_arbitrary_tuple_batches(seed):
+    rng = random.Random(seed)
+    batch = tuple({"seq": i, "ts": rng.random(),
+                   "v": _rand_value(rng)} for i in range(rng.randint(0, 8)))
+    assert _norm(decode_value(encode_value(batch))) == _norm(batch)
+
+
+def test_roundtrip_scalar_edges():
+    for v in (None, True, False, 0, -1, 2 ** 63 - 1, -(2 ** 63), 2 ** 200,
+              -(2 ** 200), 0.0, float("inf"), float("-inf"), "", "héllo",
+              b"", b"\x00\xff" * 100, [], (), {}, {"k": (1, [b"x", None])}):
+        assert _norm(decode_value(encode_value(v))) == _norm(v)
+
+
+def test_bytes_decode_zero_copy_into_receive_buffer():
+    payload = encode_value({"payload": b"A" * 1024})
+    out = decode_value(payload)
+    view = out["payload"]
+    assert isinstance(view, memoryview) and bytes(view) == b"A" * 1024
+    # the view aliases the wire buffer — no per-payload copy on receive
+    assert view.obj is payload or isinstance(view.obj, (bytes, memoryview))
+
+
+# ------------------------------------------------------------ split-safety
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_decoder_reassembles_at_random_split_boundaries(seed):
+    rng = random.Random(seed)
+    frames = [encode_frame(F_DATA, encode_value(
+        (i, "ep1", "put_many", 1.0, [_rand_value(rng)])))
+        for i in range(3)]
+    stream = b"".join(frames)
+    cuts = sorted(rng.randint(0, len(stream)) for _ in range(rng.randint(0, 6)))
+    chunks, prev = [], 0
+    for c in cuts + [len(stream)]:
+        chunks.append(stream[prev:c])
+        prev = c
+    dec = FrameDecoder()
+    got = []
+    for chunk in chunks:
+        got.extend(dec.feed(chunk))
+    dec.eof()  # clean boundary: nothing pending
+    assert [bytes(p) for _, p in got] == \
+        [f[HEADER_SIZE:] for f in frames]
+
+
+def test_decoder_survives_every_single_byte_boundary():
+    """The exhaustive version: one frame fed byte-at-a-time must produce
+    exactly one frame, completed precisely at the final byte."""
+    frame = encode_frame(F_DATA, encode_value(("x", [1, 2.5, b"pp"])))
+    dec = FrameDecoder()
+    outs = []
+    for i, b in enumerate(frame):
+        done = dec.feed(bytes([b]))
+        outs.extend(done)
+        if i < len(frame) - 1:
+            assert done == []
+    assert len(outs) == 1
+    assert decode_value(outs[0][1]) == ("x", [1, 2.5, memoryview(b"pp")])
+
+
+def test_decoder_payload_views_stay_valid_across_feeds():
+    f1 = encode_frame(F_DATA, encode_value(b"first"))
+    f2 = encode_frame(F_DATA, encode_value(b"second"))
+    dec = FrameDecoder()
+    (t1, p1), = dec.feed(f1 + f2[:3])
+    dec.feed(f2[3:])  # must not invalidate p1's buffer
+    assert bytes(decode_value(p1)) == b"first"
+
+
+# ----------------------------------------------------- oversize / corrupt
+
+def test_oversized_frame_rejected_on_encode_and_decode():
+    with pytest.raises(FrameError):
+        encode_frame(F_DATA, b"x" * 100, max_frame=64)
+    # a header lying about an oversized body is rejected before buffering
+    hdr = HEADER.pack(MAGIC, F_DATA, 0, DEFAULT_MAX_FRAME + 1)
+    with pytest.raises(FrameError):
+        FrameDecoder().feed(hdr)
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(FrameError):
+        FrameDecoder().feed(HEADER.pack(0xDEAD, F_DATA, 0, 0))
+
+
+def test_truncated_stream_raises_on_eof_not_before():
+    frame = encode_frame(F_ACK, encode_value((1, "ok", -1, "")))
+    dec = FrameDecoder()
+    assert dec.feed(frame[:-1]) == []  # waiting, not failing
+    assert dec.pending == len(frame) - 1
+    with pytest.raises(TruncatedFrame):
+        dec.eof()
+
+
+def test_corrupt_codec_inside_valid_frame_rejected():
+    dec = FrameDecoder()
+    (_, payload), = dec.feed(encode_frame(F_DATA, b"\xffgarbage"))
+    with pytest.raises(FrameError):
+        decode_value(payload)
+
+
+# ------------------------------------- truncation at the transport layer
+
+def test_hub_discards_partial_frame_no_half_decoded_batch():
+    """A producer that dies mid-frame must contribute nothing: the hub
+    discards the torn tail whole — the ring never sees a partial batch."""
+    hub = SocketHub()
+    try:
+        ring = TupleQueue(maxsize=64)
+        token = hub.register(ring)
+        frame = encode_frame(F_DATA, encode_value(
+            (1, token, "put_many", 1.0, [{"seq": i} for i in range(10)])))
+        conn = socket.create_connection(hub.address, timeout=2.0)
+        conn.sendall(frame[:len(frame) // 2])  # die mid-batch
+        conn.close()
+        time.sleep(0.1)
+        assert len(ring) == 0 and ring.enqueued == 0
+        # the hub itself is unharmed: a well-formed sender still delivers
+        q = SocketTupleQueue(maxsize=64, hub=hub)
+        q.put_many([{"seq": i} for i in range(5)])
+        assert q.get_many(10) == [{"seq": i} for i in range(5)]
+        q.close()
+    finally:
+        hub.close()
+
+
+def test_sender_surfaces_unreachable_on_truncated_ack():
+    """The receiving side of the sender: an ACK stream that dies mid-frame
+    (or mid-payload) is ``Unreachable`` — never a garbled verdict."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+
+    def half_acking_server():
+        conn, _ = srv.accept()
+        conn.recv(65536)  # swallow the request
+        ack = encode_frame(F_ACK, encode_value((1, "ok", -1, "")))
+        conn.sendall(ack[:len(ack) - 4])  # truncate inside the payload
+        conn.close()
+
+    th = threading.Thread(target=half_acking_server, daemon=True)
+    th.start()
+    sender = SocketSender(srv.getsockname(), "ep1")
+    try:
+        with pytest.raises(Unreachable):
+            sender.put({"seq": 0}, timeout=1.0)
+    finally:
+        sender.dispose()
+        srv.close()
+        th.join(timeout=2.0)
+
+
+def test_sender_unreachable_when_nobody_listens():
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    addr = srv.getsockname()
+    srv.close()  # nothing listens here any more
+    sender = SocketSender(addr, "ep1")
+    with pytest.raises(Unreachable):
+        sender.put({"seq": 0}, timeout=0.5)
+    sender.dispose()
+
+
+def test_interleaved_truncation_only_kills_the_torn_connection():
+    """Two producers interleave on one hub; one tears mid-frame.  The torn
+    one is discarded whole, the healthy one's batches all land."""
+    hub = SocketHub()
+    try:
+        ring = TupleQueue(maxsize=256)
+        token = hub.register(ring)
+        healthy = SocketTupleQueue(maxsize=256, hub=hub)
+        torn = socket.create_connection(hub.address, timeout=2.0)
+        frame = encode_frame(F_DATA, encode_value(
+            (9, token, "put_many", 1.0, [{"x": "torn"}] * 8)))
+        torn.sendall(frame[:HEADER_SIZE + 3])  # header + a sliver of body
+        for i in range(20):
+            healthy.put({"seq": i})
+        torn.close()
+        time.sleep(0.1)
+        got = healthy.get_many(100)
+        assert [t["seq"] for t in got] == list(range(20))
+        assert ring.enqueued == 0  # not one torn tuple surfaced
+        healthy.close()
+    finally:
+        hub.close()
