@@ -31,6 +31,11 @@
              recovery timed by recover spans, each scenario judged into an
              SLO verdict with per-scenario seed + loss accounting
              -> results/BENCH_chaos.json
+  recovery   the recovery plane head to head: cold restart (the full
+             delete -> schedule -> start -> connect chain) vs warm-standby
+             promotion (one epoch bump) under identical load, both timed
+             by the recover span and judged by the SLO plane
+             -> results/BENCH_recovery.json
 
 ``--smoke`` runs only the cheap benchmarks (CI regression guard); it fails
 if the transport, scale-down, teardown or oversub bench does not produce
@@ -1057,6 +1062,8 @@ CHAOS_MATRIX = (
           target={"minPe": 1})),
     ("steady", "node-flap", "relaxed",
      dict(seed=104, duration=0.3)),
+    ("steady", "standby-loss", "relaxed",
+     dict(seed=106, target={"minPe": 1})),
     ("steady", "kill-mid-drain", "relaxed",
      dict(seed=105, duration=0.05)),
     ("wide", "pod-kill", "relaxed",
@@ -1166,6 +1173,124 @@ def bench_chaos(out_path: str | None = None) -> dict:
     return report
 
 
+def bench_recovery(out_path: str | None = None, n_tuples: int = 600) -> dict:
+    """The recovery plane's acceptance bench: cold restart vs warm-standby
+    promotion under identical load, the recover *span* (failure detected ->
+    replacement connected) as the measured quantity.
+
+    Two runs of the same finite-source streams job.  ``cold``: a pod-kill
+    recovers through the full restart chain (launchCount bump -> pod
+    conductor recreate -> scheduler decide+bind -> kubelet start -> fabric
+    publish -> connected).  ``warm``: a ``StandbyPolicy`` protects the
+    victim PE first, so the failover conductor promotes the warm standby in
+    place — handle re-key + one epoch bump — and the same ``recover`` span
+    closes on the promoted runtime's connect.  Both paths are judged under
+    a zero-loss SLO; the report records the speedup (acceptance: >= 5x) and
+    end-to-end tuple accounting.  Writes ``results/BENCH_recovery.json``
+    (``--smoke`` fails without it).
+
+    Container boot is modeled (``pod_start_delay=0.5``, conservative — real
+    image pull + start is seconds): a real kubelet
+    pays image pull + process start before a replacement pod's runtime is
+    live, and that boot is exactly what warm standby amortizes — the
+    standby paid it at creation, off the critical path.  Without the model
+    the in-process cold chain costs ~10 ms and the comparison says nothing.
+    """
+    spec = {"app": {"type": "streams", "width": 2, "pipeline_depth": 1,
+                    "source": {"tuples": n_tuples, "rate_sleep": 0.001},
+                    "sink": {"report_every": 10}},
+            "drain": {"timeout": 15.0, "grace": 0.3}}
+    slo_spec = {"loss_budget": 0, "recovery_time_s": 15.0}
+    phases = {}
+    for mode, seed in (("cold", 301), ("warm", 302)):
+        p = Platform(num_nodes=4, pod_start_delay=0.5)
+        job = "j"
+        try:
+            p.submit(job, spec)
+            assert p.wait_full_health(job, 120)
+            if mode == "warm":
+                p.set_standby_policy(job, pes=[1], warm_interval=0.2)
+                assert wait_for(
+                    lambda: p.api.pes.condition_is(
+                        crds.pe_name(job, 1), crds.COND_STANDBY_READY), 30), \
+                    "standby never warmed"
+            p.set_slo(job, **slo_spec)
+            assert wait_for(lambda: _sink_seen(p, job) > 100, 60)
+            p.trace.clear()  # this run's recover span only
+            st = p.run_scenario(fault="pod-kill", job=job, seed=seed,
+                                target={"pe": 1}, timeout=60)
+            assert st["completed"], f"{mode}: {st}"
+            assert p.wait_full_health(job, 120)
+            # quiesce: the finite source completes and the sink count stops
+            last = [-1, time.monotonic()]
+
+            def quiesced():
+                seen = _sink_seen(p, job)
+                if seen != last[0]:
+                    last[0] = seen
+                    last[1] = time.monotonic()
+                return (seen >= n_tuples
+                        or time.monotonic() - last[1] > 2.0)
+
+            wait_for(quiesced, 120)
+            seen = _sink_seen(p, job)
+            p.slo_conductor.evaluate(job, force=True)
+            slo = p.slo_status(job)
+            verdicts = {c["type"]: c["status"]
+                        for c in slo.get("conditions", ())
+                        if c["type"] in ("Met", "Violated")}
+            recs = [s for s in p.trace.spans(name="recover")
+                    if s.attrs.get("job") == job and s.t1 is not None]
+            span_s = max(s.t1 - s.t0 for s in recs) if recs else None
+            phases[mode] = {
+                "seed": seed,
+                "recoverSpanS": round(span_s, 6) if span_s else None,
+                "recoverSpanMs": (st.get("outcome") or {}).get(
+                    "recoverSpanMs"),
+                "recoverS": st.get("recoverS"),
+                "emitted": n_tuples, "delivered": seen,
+                "tuplesLost": n_tuples - seen,
+                "metricsDropped": p.job_metrics(job).get("tuplesDropped", 0),
+                "sloVerdicts": verdicts,
+                "promotions": p.failover.promotions,
+                "degradedFailovers": p.failover.degraded_failovers,
+                "chain": (p.trace.render(recs[-1]).splitlines()
+                          if recs else []),
+            }
+        finally:
+            p.shutdown()
+    cold_s = phases["cold"]["recoverSpanS"]
+    warm_s = phases["warm"]["recoverSpanS"]
+    speedup = (cold_s / warm_s) if cold_s and warm_s else None
+    report = {
+        "benchmark": "recovery",
+        "workload": spec,
+        "slo": slo_spec,
+        "cold": phases["cold"],
+        "warm": phases["warm"],
+        "speedup": round(speedup, 2) if speedup else None,
+        "acceptance": {"minSpeedup": 5.0,
+                       "met": bool(speedup and speedup >= 5.0
+                                   and phases["cold"]["tuplesLost"] == 0
+                                   and phases["warm"]["tuplesLost"] == 0)},
+    }
+    out = out_path or os.path.join(os.path.dirname(__file__), "..", "results",
+                                   "BENCH_recovery.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("recovery.cold_span", cold_s or 0.0,
+         f"lost={phases['cold']['tuplesLost']};"
+         f"slo={'Met' if phases['cold']['sloVerdicts'].get('Met') == 'True' else 'Violated'}")
+    emit("recovery.warm_span", warm_s or 0.0,
+         f"lost={phases['warm']['tuplesLost']};"
+         f"slo={'Met' if phases['warm']['sloVerdicts'].get('Met') == 'True' else 'Violated'}")
+    emit("recovery.speedup", 0.0,
+         f"{report['speedup']}x;acceptance="
+         f"{'met' if report['acceptance']['met'] else 'MISSED'}")
+    return report
+
+
 BENCHES = {
     "fig7": bench_fig7_job_lifecycle,
     "fig7c": bench_fig7c_gc_vs_bulk,
@@ -1183,6 +1308,7 @@ BENCHES = {
     "oversub": bench_oversub,
     "latency": bench_latency,
     "chaos": bench_chaos,
+    "recovery": bench_recovery,
 }
 
 # cheap subset for CI (`--smoke`): seconds not minutes (scale_down and
@@ -1190,7 +1316,7 @@ BENCHES = {
 # zero-loss scale-down and pressure-aware scheduling are acceptance
 # criteria, not just trajectories)
 SMOKE = ("fig7c", "table1", "transport", "scale_down", "scaleout", "teardown",
-         "oversub", "latency", "chaos")
+         "oversub", "latency", "chaos", "recovery")
 
 
 def main() -> None:
@@ -1220,7 +1346,7 @@ def main() -> None:
         for artifact in ("BENCH_transport.json", "BENCH_scaledown.json",
                          "BENCH_scaleout.json", "BENCH_latency.json",
                          "BENCH_chaos.json", "BENCH_teardown.json",
-                         "BENCH_oversub.json"):
+                         "BENCH_oversub.json", "BENCH_recovery.json"):
             if not os.path.exists(os.path.join(results_dir, artifact)):
                 print(f"SMOKE FAIL: results/{artifact} not produced",
                       flush=True)

@@ -1,4 +1,6 @@
-"""Render EXPERIMENTS.md tables from results/dryrun.json."""
+"""Render EXPERIMENTS.md tables from results/dryrun.json, and the perf
+trajectory (including the recovery bench) from results/benchmarks.csv."""
+import csv
 import json
 import sys
 
@@ -7,7 +9,33 @@ def fmt_ms(s):
     return f"{s*1e3:.2f}"
 
 
+def render_benchmarks(path="results/benchmarks.csv"):
+    """One row per emitted benchmark measurement.  The ``recovery.*`` rows
+    (cold restart vs warm-standby promotion, ``benchmarks/run.py
+    recovery``) carry their verdicts in the derived column — the speedup
+    row is a pure derived quantity, so its time column renders as a dash."""
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    print("| bench | us/call | derived |")
+    print("|---|---|---|")
+    for r in rows:
+        us = float(r["us_per_call"])
+        shown = "—" if us == 0 else f"{us:.1f}"
+        print(f"| {r['name']} | {shown} | {r['derived'] or '—'} |")
+    recovery = {r["name"]: r for r in rows if r["name"].startswith("recovery.")}
+    if recovery:
+        cold = float(recovery["recovery.cold_span"]["us_per_call"]) / 1e3
+        warm = float(recovery["recovery.warm_span"]["us_per_call"]) / 1e3
+        verdict = recovery["recovery.speedup"]["derived"]
+        print()
+        print(f"Recovery: cold restart {cold:.1f} ms vs warm standby "
+              f"{warm:.1f} ms ({verdict}).")
+
+
 def main(path="results/dryrun.json", mesh_filter=None):
+    if path.endswith(".csv"):
+        render_benchmarks(path)
+        return
     recs = json.load(open(path))
     print("| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
           "| dominant | roofline frac | MODEL/HLO | per-dev args (GB) |")

@@ -20,6 +20,7 @@ from .autoscale import AutoscaleConductor
 from .chaos import ChaosConductor, run_scenario
 from .cluster import KubeletController, NodePressureMonitor
 from .fabric import Fabric
+from .failover import FailoverConductor
 from .transport import make_transport
 from .metrics import MetricsPlane
 from .scheduler import NodeController, RebalanceConductor, SchedulerController
@@ -55,7 +56,8 @@ class Platform:
                  rebalance: bool = False, cpu_model: bool = False,
                  pressure_interval: float = 0.5,
                  transport: str | None = None,
-                 process_isolation: bool = False):
+                 process_isolation: bool = False,
+                 pod_start_delay: float = 0.0):
         self.namespace = namespace
         self.store = store or ResourceStore(wal_path=wal_path)
         # the span tracer IS the causal trace (tracing.py grows it): flat
@@ -186,7 +188,8 @@ class Platform:
                                                  profile=scheduler_profile)
             self.kubelet = KubeletController(self.store, coords["pod"],
                                              self.fabric, self.rest, namespace,
-                                             self.trace, cpu_model=cpu_model)
+                                             self.trace, cpu_model=cpu_model,
+                                             start_delay=pod_start_delay)
             self.node_controller = NodeController(self.store, namespace,
                                                   self.trace,
                                                   scheduler=self.scheduler)
@@ -203,6 +206,22 @@ class Platform:
                 self.api.nodes.create(crds.make_node(
                     f"node{i}", cores_per_node,
                     process_isolation=process_isolation))
+
+        # --- recovery plane: the failover conductor keeps warm standbys
+        # converged to StandbyPolicy records, promotes one on primary
+        # failure, and owns the post-commit checkpoint sweep (it is wired
+        # even without policies: every CR commit still needs sweeping)
+        self.failover = FailoverConductor(
+            self.store, namespace, coords, self.trace, api=self.api,
+            kubelet=self.kubelet, ckpt=self.ckpt)
+        self.standby_controller = Controller(self.store, crds.STANDBY_POLICY,
+                                             namespace,
+                                             "standbypolicy-controller",
+                                             self.trace)
+        self.standby_controller.add_listener(self.failover)
+        self.pod_controller.add_listener(self.failover)
+        self.cr_controller.add_listener(self.failover)
+        controllers.append(self.standby_controller)
 
         # --- chaos plane: FaultInjection records reach the ChaosConductor
         # through a dedicated lightweight controller (same pattern as the
@@ -284,6 +303,16 @@ class Platform:
 
     def delete_scaling_policy(self, job: str, region: str) -> bool:
         return self.api.scaling_policies.delete(crds.policy_name(job, region))
+
+    def set_standby_policy(self, job: str, **kw):
+        """kubectl apply standbypolicy ... — protect a job's PEs with warm
+        standbys (see ``make_standby_policy``; the failover conductor
+        converges shadow pods and promotes one on primary failure)."""
+        res = crds.make_standby_policy(job, namespace=self.namespace, **kw)
+        return self.api.standby_policies.apply(res, requester="user")
+
+    def delete_standby_policy(self, job: str) -> bool:
+        return self.api.standby_policies.delete(crds.standby_policy_name(job))
 
     def set_slo(self, job: str, **kw):
         """kubectl apply slo ... — declare the job's pass/fail contract

@@ -57,6 +57,7 @@ HANDLES = {
     "exports": (crds.EXPORT, "export"),
     "hostpools": (crds.HOSTPOOL, "hostpool"),
     "nodes": (crds.NODE, "node"),
+    "standby_policies": (crds.STANDBY_POLICY, "standby"),
 }
 
 
@@ -217,6 +218,7 @@ class ApiClient:
     exports: KindApi
     hostpools: KindApi
     nodes: KindApi
+    standby_policies: KindApi
 
     def __init__(self, store: ResourceStore, namespace: str = "default",
                  coords: Optional[dict] = None,

@@ -33,6 +33,11 @@ Fault taxonomy (``crds.FAULT_KINDS``):
 - ``node-flap``       delete a node (taking its hosted pods down) and
                       re-add it; the node controller's scheduler kick
                       revives anything stranded Unschedulable.
+- ``standby-loss``    kill a protected PE's warm standby, then kill the
+                      primary *inside the re-warm window* — the recovery
+                      plane's degraded path: promotion is impossible, the
+                      failover conductor falls back to the cold restart
+                      chain, and a fresh standby re-warms afterwards.
 
 Determinism: ALL chaos randomness — target draws, race-point jitter —
 flows through one ``random.Random(spec.seed)`` per injection; the seed is
@@ -177,6 +182,7 @@ class ChaosConductor(Conductor):
                        if p.status.get("phase") == "Running"
                        and not p.terminating
                        and not p.status.get("draining")
+                       and not p.spec.get("standby")
                        and p.spec["peId"] >= floor),
                       key=lambda p: p.spec["peId"])
         if not pods:
@@ -453,12 +459,56 @@ class ChaosConductor(Conductor):
                            "pes": sorted(v[1] for v in before.values())},
                 "flapped": len(victims)}
 
+    def _fault_standby_loss(self, spec: dict, rng: random.Random,
+                            root) -> dict:
+        """Kill a protected PE's warm standby, then the primary back to
+        back — the primary dies *inside the re-warm window*, so promotion
+        is impossible and the failover conductor must fall back to the cold
+        restart chain (degraded path).  Recovery = the replacement
+        incarnation connected AND a fresh standby re-warmed behind it."""
+        job = spec["job"]
+        params = spec.get("params") or {}
+        pe = self._pick_pe(job, rng, spec.get("target") or {})
+        pe_name = crds.pe_name(job, pe)
+        pod_name = crds.pod_name(job, pe)
+        standby_name = crds.standby_pod_name(job, pe)
+        warm_bound = float(params.get("warmTimeout", 15.0))
+        if not self.api.pes.condition_is(pe_name, crds.COND_STANDBY_READY):
+            # self-contained: protect the chosen PE if nothing already does
+            self.api.standby_policies.apply(
+                crds.make_standby_policy(job, pes=[pe],
+                                         namespace=self.namespace),
+                requester=self.name)
+            if not wait_for(lambda: self.api.pes.condition_is(
+                    pe_name, crds.COND_STANDBY_READY), warm_bound):
+                raise RuntimeError(f"{pe_name}: standby never warmed")
+        pod = self.api.pods.get(pod_name)
+        before = pod.spec.get("launchCount", 0)
+        rec = self._open_recover(pod, root, "standby-loss")
+        try:
+            if not self.kubelet.kill_pod(standby_name):
+                raise RuntimeError(f"{standby_name}: no standby to kill")
+            if not self.kubelet.kill_pod(pod_name):
+                raise RuntimeError(f"{pod_name}: no running runtime to kill")
+            bound = float(params.get("recoveryTimeout", 30.0))
+            if not wait_for(lambda: self._pod_recovered(job, pe, before),
+                            bound):
+                raise RuntimeError(f"{pod_name}: not recovered in {bound}s")
+            rewarmed = wait_for(lambda: self.api.pes.condition_is(
+                pe_name, crds.COND_STANDBY_READY), warm_bound)
+        except Exception:
+            self._abort_recover(pod_name, rec)
+            raise
+        return {"chosen": {"pe": pe}, "degraded": True,
+                "reWarmed": bool(rewarmed), **self._span_ms(rec)}
+
     _EXECUTORS = {
         "pod-kill": _fault_pod_kill,
         "kill-mid-drain": _fault_kill_mid_drain,
         "clock-straggle": _fault_clock_straggle,
         "partition": _fault_partition,
         "node-flap": _fault_node_flap,
+        "standby-loss": _fault_standby_loss,
     }
 
 

@@ -24,7 +24,7 @@ import threading
 import time
 
 from ..core import Controller, Coordinator, Resource, ResourceStore, \
-    set_condition
+    condition_is, set_condition
 from . import crds
 from .api import ensure_api
 from .fabric import Fabric
@@ -107,16 +107,24 @@ class KubeletController(Controller):
     each node's running PEs share ``spec.cores`` equally, and every hosted
     runtime stretches its synthetic per-tuple work by the inverse share
     (see ``PERuntime``'s ``cpu_share`` hook) — oversubscribing a node
-    measurably slows every PE on it."""
+    measurably slows every PE on it.
+
+    ``start_delay`` models container boot (image pull + process start —
+    the seconds a real kubelet pays before a pod's runtime is live): every
+    freshly started runtime sleeps it before entering the data plane.  A
+    warm standby pays it at *standby creation*, off the critical path, so
+    promotion skips exactly this cost — which is the recovery plane's whole
+    argument.  Defaults to 0.0 (no modeled boot)."""
 
     def __init__(self, store: ResourceStore, pod_coord: Coordinator,
                  fabric: Fabric, rest, namespace=None, trace=None,
-                 cpu_model: bool = False):
+                 cpu_model: bool = False, start_delay: float = 0.0):
         super().__init__(store, crds.POD, namespace, "kubelet", trace)
         self.pod_coord = pod_coord
         self.fabric = fabric
         self.rest = rest
         self.cpu_model = cpu_model
+        self.start_delay = float(start_delay)
         self.handles: dict = {}
         self._hlock = threading.Lock()
         self._shares: dict = {}  # node -> cpu share in (0, 1]; lock-free reads
@@ -179,6 +187,16 @@ class KubeletController(Controller):
         self._maybe_start(new)
 
     def on_deletion(self, res: Resource) -> None:
+        if not res.spec.get("standby"):
+            pe = self.store.try_get(crds.PE,
+                                    crds.pe_name(res.spec["job"],
+                                                 res.spec["peId"]),
+                                    res.namespace)
+            if pe is not None and condition_is(pe, crds.COND_PROMOTING):
+                # mid-promotion record churn: the adopted standby handle
+                # already owns this pod name — stopping it here would kill
+                # the runtime the failover conductor just swapped in
+                return
         self.stop_pod(res.name)
         # permanent death vs restart: with no live PE left to bump a
         # launchCount, this pod will never republish — any drain gated on
@@ -246,6 +264,14 @@ class KubeletController(Controller):
                                         pod.namespace)
                 if cm is None:  # pod conductor guarantees this; guard anyway
                     return
+                standby = bool(pod.spec.get("standby"))
+                metadata = cm.spec["data"]
+                if standby:
+                    metadata = {**metadata,
+                                "standbyWarmInterval":
+                                    pod.spec.get("warmInterval", 0.5)}
+                if self.start_delay:
+                    metadata = {**metadata, "startDelay": self.start_delay}
                 if client is not None:
                     runtime = None
                     handle = RemotePodHandle(client, pod.name,
@@ -255,18 +281,21 @@ class KubeletController(Controller):
                     stop = threading.Event()
                     runtime = PERuntime(
                         job=pod.spec["job"], pe_id=pod.spec["peId"],
-                        metadata=cm.spec["data"], fabric=self.fabric, rest=self.rest,
+                        metadata=metadata, fabric=self.fabric, rest=self.rest,
                         launch_count=pod.spec.get("launchCount", 0), stop_event=stop,
                         on_exit=self._on_runtime_exit,
-                        cpu_share=(lambda n=node: self.cpu_share(n)))
+                        cpu_share=(lambda n=node: self.cpu_share(n)),
+                        standby=standby,
+                        pod_name=pod.name if standby else None)
                     handle = PodHandle(runtime, stop, node)
                 self.handles[pod.name] = handle
                 self._recompute_shares()
             if client is not None:
                 try:
                     client.start_pod(pod.name, pod.spec["job"],
-                                     pod.spec["peId"], cm.spec["data"],
-                                     pod.spec.get("launchCount", 0))
+                                     pod.spec["peId"], metadata,
+                                     pod.spec.get("launchCount", 0),
+                                     standby=standby)
                 except Exception:
                     with self._hlock:
                         self.handles.pop(pod.name, None)
@@ -297,7 +326,10 @@ class KubeletController(Controller):
             runtime.start()
 
     def _on_runtime_exit(self, runtime: PERuntime) -> None:
-        pod_name = crds.pod_name(runtime.job, runtime.pe_id)
+        # a holding standby reports under its own pod name; a promoted one
+        # has cleared the override and reports as the primary
+        pod_name = (runtime.pod_name_override
+                    or crds.pod_name(runtime.job, runtime.pe_id))
         with self._hlock:
             self.handles.pop(pod_name, None)
             self._recompute_shares()
@@ -366,9 +398,11 @@ class KubeletController(Controller):
             # the recovery clock starts at the failure injection: the span
             # stays open through restart-chain links (recover/bind/start,
             # parented here via the pod token) until the replacement
-            # runtime reports connected
+            # runtime reports connected.  Killing a holding standby is not
+            # a service interruption — no recover span for those
             pod = self.store.try_get(crds.POD, pod_name)
-            if pod is not None and sp.context(pod_token(pod_name)) is None:
+            if pod is not None and not pod.spec.get("standby") \
+                    and sp.context(pod_token(pod_name)) is None:
                 sp.attach(pod_token(pod_name),
                           sp.start_span("chaos", "recover", pod.key,
                                         job=handle.runtime.job,
@@ -376,6 +410,52 @@ class KubeletController(Controller):
                                         cause="kill"))
         self.pod_coord.submit_status(pod_name, {"phase": "Failed"},
                                      requester="chaos")
+        return True
+
+    # ---------------------------------------------------- standby promotion
+
+    def adopt_standby(self, standby_name: str, primary_name: str):
+        """Re-key a live standby handle under the primary pod name (failover
+        conductor, step 1 of a promotion).  Done BEFORE the replacement pod
+        record exists: ``_maybe_start``'s handles guard then blocks any
+        duplicate runtime for the primary name.  Returns the node name, or
+        None when there is no live standby to adopt (degraded: fall back to
+        the cold restart chain)."""
+        with self._hlock:
+            handle = self.handles.get(standby_name)
+            if handle is None or primary_name in self.handles:
+                return None
+            if isinstance(handle, PodHandle) and not handle.runtime.is_alive():
+                return None
+            del self.handles[standby_name]
+            self.handles[primary_name] = handle
+            if isinstance(handle, RemotePodHandle):
+                handle.pod_name = primary_name
+                handle.runtime.pod_name = primary_name
+        self._record("adopt-standby", primary_name, f"from={standby_name}")
+        return handle.node
+
+    def signal_promote(self, standby_name: str, primary_name: str,
+                       launch_count: int) -> bool:
+        """Step 2 of a promotion (after the pod records converged): wake the
+        adopted runtime out of its hold — it publishes its input rings (one
+        epoch bump; the fabric's residual carryover preloads the dead
+        primary's undelivered tuples) and reports connected, which closes
+        the recover span."""
+        with self._hlock:
+            handle = self.handles.get(primary_name)
+        if handle is None:
+            return False
+        if isinstance(handle, RemotePodHandle):
+            try:
+                handle.client.promote_pod(standby_name, primary_name,
+                                          launch_count)
+            except Exception:  # noqa: BLE001 — dead worker: degraded path
+                return False
+        else:
+            handle.runtime.promote(launch_count)
+        self._record("promote-standby", primary_name,
+                     f"launch={launch_count}")
         return True
 
     def stop_all(self) -> None:

@@ -57,10 +57,11 @@ METRICS = "Metrics"
 SCALING_POLICY = "ScalingPolicy"
 SLO = "SLO"
 FAULT_INJECTION = "FaultInjection"
+STANDBY_POLICY = "StandbyPolicy"
 
 CUSTOM_KINDS = (JOB, PE, PARALLEL_REGION, HOSTPOOL, IMPORT, EXPORT,
                 CONSISTENT_REGION, TEST_SUITE, METRICS, SCALING_POLICY, SLO,
-                FAULT_INJECTION)
+                FAULT_INJECTION, STANDBY_POLICY)
 K8S_KINDS = (CONFIG_MAP, POD, SERVICE, NODE)
 
 
@@ -121,6 +122,17 @@ COND_FAULT_RECOVERED = "Recovered"
 #: bump launchCount (and the straggler monitor will not mark the pod
 #: Failed) while this stands.
 COND_QUARANTINED = "Quarantined"
+#: PE: a warm standby pod for this PE is placed, running, and holding —
+#: ring preloadable, state warmed from the latest committed checkpoint.
+#: While this stands the failover conductor owns the PE's failure handling:
+#: the pod controller does NOT bump ``launchCount`` on a primary failure
+#: (promotion replaces the delete→schedule→start→connect chain).
+COND_STANDBY_READY = "StandbyReady"
+#: PE: a standby promotion is in flight — the conductor has adopted the
+#: standby runtime under the primary pod name and is converging the pod
+#: records.  The pod conductor must not reconcile (create/delete pods for)
+#: the PE while this stands, and the pod controller must not bump.
+COND_PROMOTING = "Promoting"
 
 #: Finalizer a retiring PE/Pod carries while draining: deletion only stamps
 #: ``deletion_timestamp``; the drained report removes the finalizer and the
@@ -176,6 +188,21 @@ def slo_name(job: str) -> str:
 
 def fault_name(job: str, tag: str) -> str:
     return f"{job}-fault-{tag}"
+
+
+def standby_pod_name(job: str, pe_id: int) -> str:
+    return f"{job}-standby-{pe_id}"
+
+
+def standby_policy_name(job: str) -> str:
+    return f"{job}-standby"
+
+
+def pe_affinity_label(job: str, pe_id: int) -> str:
+    """The per-PE pod label key the standby anti-affinity matches: the
+    primary's pod carries it, the standby's ``podAntiAffinity`` names it,
+    so the anti-affinity plugin keeps the pair on different nodes."""
+    return f"repro.ibm.com/pe-{job}-{pe_id}"
 
 
 def job_labels(job: str) -> dict:
@@ -518,10 +545,64 @@ def make_slo(job: str, *, latency_p95_ms: float | None = None,
     )
 
 
+def make_standby_policy(job: str, *, pes: list | None = None,
+                        warm_interval: float = 0.5,
+                        namespace: str = "default") -> Resource:
+    """StandbyPolicy CRD: which of a job's PEs get a warm standby.
+
+    The failover conductor (``platform/failover.py``) watches this kind and
+    keeps one shadow pod per protected PE placed on a *different* node
+    (scheduler anti-affinity), its ring preloadable via the fabric's
+    residual-carryover path and its state warmed from the latest committed
+    checkpoint.  On a heartbeat-detected primary failure the standby is
+    promoted in place — a single epoch bump instead of the
+    delete→schedule→start→connect chain.
+
+    spec:   ``job``; ``pes`` — PE ids to protect (``None``/empty = every
+            non-source PE the job has); ``warmInterval`` — seconds between
+            a holding standby's state re-warm passes.
+    status: ``protected`` (pe id -> {standbyPod, node, since}), written by
+            the failover conductor as standbys come up; ``promotions``
+            (count of completed promotions).
+    """
+    return Resource(
+        kind=STANDBY_POLICY, name=standby_policy_name(job),
+        namespace=namespace,
+        spec={"job": job, "pes": list(pes) if pes else [],
+              "warmInterval": float(warm_interval)},
+        labels=job_labels(job),
+        owner_refs=(OwnerRef(JOB, job),),
+        status={"protected": {}, "promotions": 0},
+    )
+
+
+def make_standby_pod(job: str, pe_id: int, pod_spec: dict, launch_count: int,
+                     generation: int, namespace: str = "default") -> Resource:
+    """Pod — a PE's *warm standby* incarnation (created only by the
+    failover conductor).
+
+    Identical shape to ``make_pod`` plus ``spec.standby: True`` (every
+    controller that drives the restart chain skips standby pods — their
+    life cycle belongs to the failover conductor) and a distinct name
+    (``{job}-standby-{pe}``) so the primary's computed name stays free for
+    promotion.  ``pod_spec`` carries the anti-affinity against the
+    primary's per-PE label so the scheduler places the pair apart.
+    """
+    return Resource(
+        kind=POD, name=standby_pod_name(job, pe_id), namespace=namespace,
+        spec={"job": job, "peId": pe_id, "standby": True,
+              "launchCount": launch_count, "jobGeneration": generation,
+              **pod_spec},
+        labels={**job_labels(job), "repro.ibm.com/standby": str(pe_id)},
+        owner_refs=(OwnerRef(PE, pe_name(job, pe_id)),),
+        status={"phase": "Pending"},
+    )
+
+
 #: Fault kinds the chaos conductor knows how to execute (see
 #: ``src/repro/platform/chaos.py`` for the per-fault walkthroughs).
 FAULT_KINDS = ("pod-kill", "kill-mid-drain", "clock-straggle",
-               "partition", "node-flap")
+               "partition", "node-flap", "standby-loss")
 
 
 def make_fault_injection(name: str, *, fault: str, job: str | None = None,
@@ -554,7 +635,11 @@ def make_fault_injection(name: str, *, fault: str, job: str | None = None,
                                  operator quarantines instead of restarting;
             - "node-flap":       delete the target node and re-add it after
                                  ``duration`` seconds (the scheduler's
-                                 re-kick path re-binds evicted pods).
+                                 re-kick path re-binds evicted pods);
+            - "standby-loss":    kill a protected PE's warm standby, then
+                                 kill the primary *inside the re-warm
+                                 window* — the degraded path: recovery must
+                                 fall back to the cold restart chain.
 
             ``job`` — target job (None only for pure node faults);
             ``target`` — selector: ``{"peId": n}``, ``{"node": name}``, or

@@ -1,0 +1,433 @@
+"""Warm-standby failover: the recovery plane's sub-second restart path.
+
+The cold restart chain (PR 2-4) is causally clean but long: pod Failed ->
+pod controller bumps ``launchCount`` -> pod conductor creates a Pending pod
+-> scheduler decide+bind -> kubelet starts a fresh runtime -> publish ->
+``notify_connected``.  Every hop is an event dispatch plus (for region PEs)
+a checkpoint reload, so recovery time is dominated by machinery, not by
+state.  The paper's platform hides most of this behind its PE manager; this
+module reproduces the effect with a *warm standby*:
+
+- A ``StandbyPolicy`` CRD names the PEs of a job to protect.  The
+  **FailoverConductor** keeps one shadow pod per protected PE
+  (``{job}-standby-{pe}``, ``spec.standby: True``) placed on a *different*
+  node by the scheduler's pod anti-affinity plugin: the primary's pod
+  carries a per-PE label (``crds.pe_affinity_label``), the standby's
+  ``podAntiAffinity`` names it.
+- The kubelet hosts the standby as a real ``PERuntime`` in *hold* mode: it
+  performs no publishes and writes no REST identity, but periodically
+  re-warms its state from the latest committed checkpoint
+  (``PERuntime._warm_standby``), so promotion starts from hot state.
+- On primary failure (crash / kill / stale heartbeat -> pod ``Failed``),
+  the pod controller *skips* its cold bump (the PE carries ``StandbyReady``
+  or ``Promoting``) and this conductor promotes instead: re-key the live
+  standby handle under the primary pod name (``kubelet.adopt_standby``),
+  stamp the PE ``Promoting`` with a single ``launchCount`` bump, swap the
+  pod records (the replacement is created *pre-bound* to the standby's
+  node so neither scheduler nor kubelet re-enter the chain), and wake the
+  runtime into the data plane (``kubelet.signal_promote``).  The fresh
+  publish rides the fabric's residual-carryover path — the dead primary's
+  undelivered ring preloads into the standby's queues — and
+  ``notify_connected`` closes the same ``recover`` span the cold chain
+  would have closed, so the SLO plane judges both paths identically.
+- The conductor also owns checkpoint hygiene: it runs the
+  ``CheckpointStore`` sweep whenever a ConsistentRegion commits (the
+  operator stamps a ``.committing`` marker around the CRD write, so the
+  sweep can never reap the step a commit is mid-flight on).
+
+Degraded path: if the standby itself died inside the re-warm window (the
+``standby-loss`` chaos fault), promotion falls back to the cold chain — the
+conductor clears ``StandbyReady`` and performs the launchCount bump the pod
+controller skipped, then re-warms a fresh standby once the PE recovers.
+"""
+
+from __future__ import annotations
+
+import time
+
+from ..core import (
+    Conductor,
+    Event,
+    EventType,
+    Resource,
+    condition_is,
+    set_condition,
+)
+from . import crds
+from .api import ensure_api
+from .tracing import migrate_token, pod_token, span_tracer
+
+
+class FailoverConductor(Conductor):
+    """Keeps warm standbys converged to ``StandbyPolicy`` and promotes one
+    on primary failure; sweeps committed checkpoints.  See the module
+    docstring for the full promotion walkthrough."""
+
+    kinds = (crds.STANDBY_POLICY, crds.POD, crds.CONSISTENT_REGION)
+
+    def __init__(self, store, namespace, coords, trace=None, *, api=None,
+                 kubelet=None, ckpt=None, enabled: bool = True,
+                 clock=time.time):
+        super().__init__(store, "failover-conductor", trace)
+        self.namespace = namespace
+        self.api = ensure_api(api, store, namespace, coords, trace)
+        self.kubelet = kubelet
+        self.ckpt = ckpt
+        self.enabled = enabled
+        self.clock = clock
+        self.promotions = 0
+        self.degraded_failovers = 0
+        self.sweeps = 0
+
+    # --------------------------------------------------------------- events
+
+    def on_event(self, event: Event) -> None:
+        res = event.resource
+        if res.kind == crds.CONSISTENT_REGION:
+            self._maybe_sweep(event)
+            return
+        if not self.enabled:
+            return
+        if res.kind == crds.STANDBY_POLICY:
+            if event.type == EventType.DELETED:
+                self._teardown_policy(res)
+            else:
+                self._reconcile_policy(res)
+            return
+        # pod events
+        if res.spec.get("standby"):
+            self._on_standby_pod(event)
+        else:
+            self._on_primary_pod(event)
+
+    # ----------------------------------------------------- checkpoint sweep
+
+    def _maybe_sweep(self, event: Event) -> None:
+        """Reap strictly-older uncommitted checkpoint steps once a commit
+        lands (satellite: the sweep runs here, not ad hoc in the commit
+        path — and ``CheckpointStore.sweep`` itself spares any step carrying
+        a ``.committing`` marker)."""
+        if self.ckpt is None or event.type == EventType.DELETED:
+            return
+        cr = event.resource
+        committed = cr.status.get("lastCommitted", -1)
+        if committed < 0:
+            return
+        old = getattr(event, "old", None)
+        if old is not None and old.status.get("lastCommitted", -1) == committed:
+            return  # no new commit in this event
+        removed = self.ckpt.sweep(cr.spec["job"], cr.spec["region"], committed)
+        if removed:
+            self.sweeps += removed
+            self._record("sweep", cr.key, f"committed={committed} removed={removed}")
+
+    # -------------------------------------------------------- policy -> pes
+
+    def _policy_for(self, job: str) -> Resource | None:
+        return self.api.standby_policies.try_get(crds.standby_policy_name(job))
+
+    def _protected_pes(self, policy: Resource) -> list[int]:
+        """PE ids the policy protects: the explicit list, else every
+        non-source PE of the job (sources regenerate their stream; standby
+        state warming buys them nothing)."""
+        explicit = policy.spec.get("pes") or []
+        if explicit:
+            return sorted(int(p) for p in explicit)
+        job = policy.spec["job"]
+        out = []
+        for pe in self.store.list(crds.PE, self.namespace,
+                                  crds.job_labels(job)):
+            cm = self.store.try_get(
+                crds.CONFIG_MAP, crds.cm_name(job, pe.spec["peId"]),
+                self.namespace)
+            ops = (cm.spec.get("data", {}).get("operators")
+                   if cm is not None else None) or []
+            if any(op.get("kind") == "source" for op in ops):
+                continue
+            out.append(pe.spec["peId"])
+        return sorted(out)
+
+    def _reconcile_policy(self, policy: Resource) -> None:
+        job = policy.spec["job"]
+        for pe_id in self._protected_pes(policy):
+            self._ensure_standby(job, pe_id, policy)
+
+    def _teardown_policy(self, policy: Resource) -> None:
+        job = policy.spec["job"]
+        for pod in self.store.list(crds.POD, self.namespace,
+                                   crds.job_labels(job)):
+            if not pod.spec.get("standby"):
+                continue
+            self.api.pods.delete(pod.name)
+            self.api.pes.set_condition(
+                crds.pe_name(job, pod.spec["peId"]), crds.COND_STANDBY_READY,
+                "False", reason="PolicyDeleted", requester=self.name)
+        self._record("teardown", policy.key)
+
+    # ----------------------------------------------------- standby ensuring
+
+    def _ensure_standby(self, job: str, pe_id: int,
+                        policy: Resource | None = None) -> None:
+        """Converge one protected PE to 'a warm standby exists': label the
+        primary for anti-affinity, create the shadow pod, and let the
+        scheduler place it on a different node."""
+        policy = policy or self._policy_for(job)
+        if policy is None or policy.terminating:
+            return
+        if pe_id not in self._protected_pes(policy):
+            return  # the policy names its PEs; the rest stay unshadowed
+        if self.api.pods.exists(crds.standby_pod_name(job, pe_id)):
+            return
+        pe = self.api.pes.try_get(crds.pe_name(job, pe_id))
+        if pe is None or pe.terminating or \
+                pe.status.get("state") == "Draining" or \
+                condition_is(pe, crds.COND_PROMOTING):
+            return
+        primary = self.api.pods.try_get(crds.pod_name(job, pe_id))
+        if primary is None or primary.terminating or \
+                primary.status.get("phase") != "Running" or \
+                not primary.spec.get("nodeName"):
+            return  # wait for a placed, running primary to pair against
+        label = crds.pe_affinity_label(job, pe_id)
+        self._stamp_affinity_label(pe, primary, label)
+        base = dict(primary.spec.get("pod_spec") or {})
+        base.pop("nodeName", None)  # a host-pinned copy would defeat the pair
+        labels = dict(base.get("labels") or {})
+        labels.pop(label, None)  # the label marks the *primary* of the pair
+        base["labels"] = labels
+        anti = list(base.get("podAntiAffinity") or ())
+        if label not in anti:
+            anti.append(label)
+        base["podAntiAffinity"] = anti
+        base["avoidNodes"] = [primary.spec["nodeName"]]
+        cm = self.store.try_get(crds.CONFIG_MAP, crds.cm_name(job, pe_id),
+                                self.namespace)
+        generation = cm.spec.get("jobGeneration", 1) if cm is not None else 1
+        standby = crds.make_standby_pod(
+            job, pe_id,
+            {"pod_spec": base,
+             "warmInterval": policy.spec.get("warmInterval", 0.5)},
+            primary.spec.get("launchCount", 0), generation, self.namespace)
+        try:
+            self.api.pods.create(standby)
+        except Exception:
+            return  # lost a race with a concurrent ensure; converged anyway
+        self._record("ensure-standby", standby.key,
+                     f"avoid={primary.spec['nodeName']}")
+
+    def _stamp_affinity_label(self, pe: Resource, primary: Resource,
+                              label: str) -> None:
+        """The per-PE label must survive every future incarnation, so it is
+        stamped into the PE's podSpec (the pod conductor's template) *and*
+        onto the live pod record (the anti-affinity filter reads placed
+        pods, which predate the stamp)."""
+        def mark_pe(res: Resource) -> None:
+            spec = dict(res.spec.get("podSpec") or {})
+            labels = dict(spec.get("labels") or {})
+            labels[label] = "primary"
+            spec["labels"] = labels
+            res.spec["podSpec"] = spec
+
+        def mark_pod(res: Resource) -> None:
+            spec = dict(res.spec.get("pod_spec") or {})
+            labels = dict(spec.get("labels") or {})
+            labels[label] = "primary"
+            spec["labels"] = labels
+            res.spec["pod_spec"] = spec
+
+        if label not in (pe.spec.get("podSpec") or {}).get("labels", {}):
+            self.api.pes.edit(pe.name, mark_pe, requester=self.name)
+        if label not in (primary.spec.get("pod_spec") or {}).get("labels", {}):
+            self.api.pods.edit(primary.name, mark_pod, requester=self.name)
+
+    # ------------------------------------------------------- standby events
+
+    def _on_standby_pod(self, event: Event) -> None:
+        pod = event.resource
+        job, pe_id = pod.spec["job"], pod.spec["peId"]
+        pe_name = crds.pe_name(job, pe_id)
+        if event.type == EventType.DELETED or \
+                pod.status.get("phase") == "Failed":
+            # the re-warm window: the PE is unprotected until a fresh
+            # standby comes up (the ``standby-loss`` fault lives here)
+            self.api.pes.set_condition(pe_name, crds.COND_STANDBY_READY,
+                                       "False", reason="StandbyLost",
+                                       requester=self.name)
+            if event.type != EventType.DELETED:
+                self.api.pods.delete(pod.name)
+            else:
+                self._ensure_standby(job, pe_id)
+            self._record("standby-lost", pod.key)
+            return
+        if pod.status.get("phase") == "Running" and \
+                pod.status.get("warmed") and \
+                not condition_is(self.api.pes.try_get(pe_name) or pod,
+                                 crds.COND_STANDBY_READY):
+            pe = self.api.pes.try_get(pe_name)
+            if pe is None or pe.terminating:
+                return
+            self.api.pes.set_condition(pe_name, crds.COND_STANDBY_READY,
+                                       "True", reason="StandbyWarm",
+                                       message=pod.spec.get("nodeName", "?"),
+                                       requester=self.name)
+            entry = {"standbyPod": pod.name,
+                     "node": pod.spec.get("nodeName", "?"),
+                     "since": self.clock()}
+
+            def note(res: Resource) -> None:
+                protected = dict(res.status.get("protected") or {})
+                protected[str(pe_id)] = entry
+                res.status["protected"] = protected
+
+            self.api.standby_policies.edit(crds.standby_policy_name(job),
+                                           note, requester=self.name)
+            self._record("standby-ready", pod.key,
+                         pod.spec.get("nodeName", "?"))
+
+    # ------------------------------------------------------- primary events
+
+    def _on_primary_pod(self, event: Event) -> None:
+        pod = event.resource
+        job = pod.spec.get("job")
+        pe_id = pod.spec.get("peId")
+        if job is None or pe_id is None:
+            return
+        pe = self.api.pes.try_get(crds.pe_name(job, pe_id))
+        if pe is None or pe.terminating:
+            return
+        failed = (event.type == EventType.DELETED or
+                  pod.status.get("phase") == "Failed")
+        if failed and pe.status.get("state") != "Draining" and \
+                condition_is(pe, crds.COND_STANDBY_READY):
+            self._promote(pe, pod)
+            return
+        if event.type == EventType.DELETED:
+            return
+        if pod.status.get("phase") == "Running" and \
+                pod.status.get("connected"):
+            if condition_is(pe, crds.COND_PROMOTING) and \
+                    pod.spec.get("launchCount", 0) >= \
+                    pe.status.get("launchCount", 0):
+                self._complete_promotion(pe, pod)
+            elif self._policy_for(job) is not None:
+                # healthy primary under a policy: converge its standby
+                self._ensure_standby(job, pe_id)
+
+    # ------------------------------------------------------------ promotion
+
+    def _promote(self, pe: Resource, failed_pod: Resource) -> None:
+        """The tentpole move: swap the warm standby in under the primary's
+        identity.  Handle re-key FIRST (the kubelet's handles-dict guard
+        then blocks any concurrent ``_maybe_start`` of the replacement
+        record), then one ``Promoting`` + launchCount edit, then the record
+        swap, then wake the runtime."""
+        job, pe_id = pe.spec["job"], pe.spec["peId"]
+        primary_name = crds.pod_name(job, pe_id)
+        standby_name = crds.standby_pod_name(job, pe_id)
+        node = None
+        if self.kubelet is not None:
+            node = self.kubelet.adopt_standby(standby_name, primary_name)
+        if node is None:
+            self._degraded_failover(pe, primary_name, standby_name)
+            return
+        sp = span_tracer(self.trace)
+        if sp is not None and sp.context(pod_token(primary_name)) is None:
+            # same span the cold chain's _bump would open: failure detected
+            # -> replacement connected; the SLO plane sees one shape
+            sp.attach(pod_token(primary_name),
+                      sp.start_span(self.name, "recover",
+                                    (crds.POD, self.namespace, primary_name),
+                                    parent=sp.context(migrate_token(pe.name)),
+                                    job=job, pe=pe_id, cause="failover"))
+        new_lc = pe.status.get("launchCount", 0) + 1
+
+        def mark(res: Resource) -> None:
+            if res.terminating:
+                return
+            res.status["launchCount"] = new_lc
+            set_condition(res, crds.COND_PROMOTING, "True",
+                          reason="PrimaryFailed", message=node)
+            set_condition(res, crds.COND_STANDBY_READY, "False",
+                          reason="Promoting")
+
+        marked = self.api.pes.edit(pe.name, mark, requester=self.name)
+        if marked is None or not condition_is(marked, crds.COND_PROMOTING):
+            return  # teardown got the PE first
+        # Record swap.  The primary record is rebound IN PLACE (never
+        # deleted: the kubelet stops handles by pod name on record deletion,
+        # which would kill the runtime just adopted under the primary name);
+        # the standby record is retired (its handle is already re-keyed, so
+        # the kubelet's stop is a no-op).  The rebound record is not Pending,
+        # so neither scheduler nor kubelet re-enter the start chain.
+        def rebind(res: Resource) -> None:
+            res.spec["launchCount"] = new_lc
+            res.spec["nodeName"] = node
+            res.status["phase"] = "Running"
+            res.status["connected"] = False  # the promoted publish resets it
+
+        if self.api.pods.edit(primary_name, rebind,
+                              requester=self.name) is None:
+            # primary record already reaped (DELETED-triggered promotion):
+            # create the replacement pre-bound to the standby's node
+            replacement = crds.make_pod(
+                job, pe_id, {"pod_spec": dict(pe.spec.get("podSpec") or {})},
+                new_lc, failed_pod.spec.get("jobGeneration", 1),
+                self.namespace)
+            replacement.spec["nodeName"] = node
+            replacement.status["phase"] = "Running"
+            try:
+                self.api.pods.create(replacement)
+            except Exception:  # noqa: BLE001 — lost a create race; converged
+                pass
+        self.api.pods.delete(standby_name)
+        ok = self.kubelet.signal_promote(standby_name, primary_name, new_lc)
+        self.promotions += 1
+        self._record("promote", (crds.POD, self.namespace, primary_name),
+                     f"node={node} launch={new_lc} signalled={ok}")
+
+    def _degraded_failover(self, pe: Resource, primary_name: str,
+                           standby_name: str) -> None:
+        """Standby died inside the re-warm window (or lives on a lost
+        worker): fall back to the cold chain the pod controller skipped —
+        clear ``StandbyReady`` and perform the bump ourselves."""
+        job, pe_id = pe.spec["job"], pe.spec["peId"]
+        self.api.pods.delete(standby_name)
+        sp = span_tracer(self.trace)
+        if sp is not None and sp.context(pod_token(primary_name)) is None:
+            sp.attach(pod_token(primary_name),
+                      sp.start_span(self.name, "recover",
+                                    (crds.POD, self.namespace, primary_name),
+                                    parent=sp.context(migrate_token(pe.name)),
+                                    job=job, pe=pe_id, cause="degraded"))
+
+        def mark(res: Resource) -> None:
+            if res.terminating:
+                return
+            res.status["launchCount"] = res.status.get("launchCount", 0) + 1
+            set_condition(res, crds.COND_STANDBY_READY, "False",
+                          reason="StandbyLost")
+
+        self.api.pes.edit(pe.name, mark, requester=self.name)
+        self.degraded_failovers += 1
+        self._record("degraded-failover",
+                     (crds.POD, self.namespace, primary_name))
+
+    def _complete_promotion(self, pe: Resource, pod: Resource) -> None:
+        """The promoted runtime reported Running+connected: close out the
+        ``Promoting`` epoch and re-warm a fresh standby for the next
+        failure."""
+        job, pe_id = pe.spec["job"], pe.spec["peId"]
+        self.api.pes.set_condition(pe.name, crds.COND_PROMOTING, "False",
+                                   reason="PromotionComplete",
+                                   requester=self.name)
+        policy = self._policy_for(job)
+        if policy is not None:
+            self.api.standby_policies.patch_status(
+                policy.name,
+                {"promotions": policy.status.get("promotions", 0) + 1},
+                requester=self.name)
+        self._record("promotion-complete", pod.key)
+        self._ensure_standby(job, pe_id)
+
+
+__all__ = ["FailoverConductor"]

@@ -138,6 +138,15 @@ class RestFacade:
             sp.end_span(sp.detach(pod_token(crds.pod_name(job, pe_id))),
                         connected=True)
 
+    def notify_standby_warm(self, job: str, pe_id: int,
+                            step: int = -1) -> None:
+        """A holding standby's readiness mark: sent once the runtime has
+        paid its modeled boot and finished a warm pass, so ``StandbyReady``
+        reflects a promotable runtime rather than a merely-started thread."""
+        self.pod_coord.submit_status(
+            crds.standby_pod_name(job, pe_id),
+            {"warmed": True, "warmedStep": step}, requester="pe-rest")
+
     def notify_source_done(self, job: str, pe_id: int) -> None:
         self.pod_coord.submit_status(crds.pod_name(job, pe_id),
                                      {"sourceDone": True}, requester="pe-rest")
@@ -673,6 +682,10 @@ class PodController(Controller):
 
     # causal link 3a: pod failure -> bump owning PE launch count
     def on_modification(self, old, new: Resource) -> None:
+        if new.spec.get("standby"):
+            # standby pods belong to the failover conductor: their failure
+            # re-warms a replacement standby, never the restart chain
+            return
         was = (old.status.get("phase") if old else None)
         if new.status.get("phase") == "Failed" and was != "Failed":
             if new.status.get("drainHolds"):
@@ -693,6 +706,8 @@ class PodController(Controller):
 
     # causal link 3b: pod deletion while PE alive -> bump launch count
     def on_deletion(self, pod: Resource) -> None:
+        if pod.spec.get("standby"):
+            return
         pe_name = crds.pe_name(pod.spec["job"], pod.spec["peId"])
         pe = self.store.try_get(crds.PE, pe_name, pod.namespace)
         if pe is not None:
@@ -716,6 +731,13 @@ class PodController(Controller):
             # off and re-buffering.  The quarantine lift re-kicks the
             # launch chain if the pod really is gone by then.
             self._record("skip-bump-quarantined", pod.key)
+            return
+        if pe is not None and (condition_is(pe, crds.COND_STANDBY_READY)
+                               or condition_is(pe, crds.COND_PROMOTING)):
+            # a warm standby stands (or its promotion is already in
+            # flight): the failover conductor owns this failure — a bump
+            # here would race a cold restart against the promotion
+            self._record("skip-bump-standby", pod.key)
             return
         sp = span_tracer(self.trace)
         if sp is not None and sp.context(pod_token(pod.name)) is None:
@@ -850,6 +872,10 @@ class PodConductor(Conductor):
         job, pe_id = pe.spec["job"], pe.spec["peId"]
         if pe.terminating or pe.status.get("state") == "Draining":
             return  # a retiring/terminating PE never gets a fresh pod
+        if condition_is(pe, crds.COND_PROMOTING):
+            # the failover conductor is converging the pod records itself;
+            # reconciling here would double-create the primary's pod
+            return
         want = pe.status.get("launchCount", 0)
         if want < 1:
             return
@@ -1049,6 +1075,8 @@ class StragglerMonitor:
         for pod in self.store.list(crds.POD, self.namespace):
             if pod.status.get("phase") != "Running":
                 continue
+            if pod.spec.get("standby"):
+                continue  # holding standbys report no progress by design
             job = self.store.try_get(crds.JOB, pod.spec.get("job"), self.namespace)
             if job is None:
                 continue
@@ -1126,16 +1154,25 @@ class ConsistentRegionOperator(Conductor):
                     if key[:2] == (job, region) and key[2] <= step:
                         del self._pending[key]
         if complete and step > cr.status.get("lastCommitted", -1):
+            # commit protocol: stamp the ``.committing`` marker BEFORE the
+            # CRD status write so the conductor-driven sweep (failover
+            # conductor, on the commit event) can never race this step
+            # away; older uncommitted steps are ITS garbage, not ours
+            self.ckpt.mark_committing(job, region, step)
             self.coords["cr"].submit_status(
                 crds.cr_name(job, region),
                 {"lastCommitted": step, "state": "Processing"},
                 requester=self.name)
-            self.ckpt.sweep(job, region, step)
+            self.ckpt.clear_committing(job, region, step)
             self._record("commit", cr.key, f"step={step}")
 
     def on_event(self, event: Event) -> None:
         res = event.resource
         if res.kind != crds.POD:
+            return
+        if res.spec.get("standby"):
+            # a holding standby never joined the region's collectives;
+            # losing it must not abort the live members' epochs
             return
         failed = (event.type == EventType.DELETED or
                   res.status.get("phase") == "Failed")

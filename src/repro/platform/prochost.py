@@ -268,11 +268,24 @@ class _WorkerClient:
         self.alive = True
 
     def start_pod(self, pod_name: str, job: str, pe_id: int, metadata: dict,
-                  launch_count: int) -> None:
+                  launch_count: int, standby: bool = False) -> None:
         self.channel.request("start_pod", {
             "pod": pod_name, "job": job, "pe": pe_id, "metadata": metadata,
-            "launchCount": launch_count}, timeout=15.0)
+            "launchCount": launch_count, "standby": standby}, timeout=15.0)
         self.pods.add(pod_name)
+
+    def promote_pod(self, standby_name: str, primary_name: str,
+                    launch_count: int) -> bool:
+        """Promote a worker-hosted standby: the worker re-keys its pod map
+        and wakes the runtime out of its hold under the primary name."""
+        rep = self.channel.request("promote_pod", {
+            "standby": standby_name, "primary": primary_name,
+            "launchCount": launch_count}, timeout=10.0)
+        if rep and rep.get("promoted"):
+            self.pods.discard(standby_name)
+            self.pods.add(primary_name)
+            return True
+        return False
 
     def stop_pod(self, pod_name: str, timeout: float = 5.0) -> None:
         self.pods.discard(pod_name)
@@ -483,7 +496,7 @@ class HostBridge:
             name = body["method"]
             if name not in ("notify_connected", "notify_source_done",
                             "report_metrics", "report_sink",
-                            "notify_checkpoint"):
+                            "notify_checkpoint", "notify_standby_warm"):
                 raise RuntimeError(f"rest method {name!r} not forwarded")
             getattr(self.rest, name)(*body.get("args", []))
             return None
@@ -654,6 +667,10 @@ class WorkerRest:
     def notify_source_done(self, job: str, pe_id: int) -> None:
         self._cast("notify_source_done", [job, pe_id])
 
+    def notify_standby_warm(self, job: str, pe_id: int,
+                            step: int = -1) -> None:
+        self._cast("notify_standby_warm", [job, pe_id, step])
+
     def report_metrics(self, job: str, pe_id: int, metrics: dict) -> None:
         key = (job, pe_id)
         now = time.monotonic()
@@ -721,6 +738,8 @@ class WorkerHost:
             return self._stop_pod(body["pod"], body.get("timeout", 5.0))
         if method == "kill_pod":
             return {"killed": self._stop_pod(body["pod"], 5.0)["existed"]}
+        if method == "promote_pod":
+            return self._promote_pod(body)
         if method == "begin_drain":
             with self._plock:
                 entry = self._pods.get(body["pod"])
@@ -755,11 +774,13 @@ class WorkerHost:
                 "process-isolated nodes host streams PEs only (consistent "
                 "regions / trainers need the in-process checkpoint+ICI path)")
         stop = threading.Event()
+        standby = bool(body.get("standby"))
         runtime = PERuntime(
             job=body["job"], pe_id=body["pe"], metadata=meta,
             fabric=self.fabric, rest=self.rest,
             launch_count=body.get("launchCount", 0), stop_event=stop,
-            on_exit=self._on_runtime_exit)
+            on_exit=self._on_runtime_exit, standby=standby,
+            pod_name=body["pod"] if standby else None)
         with self._plock:
             self._pods[body["pod"]] = (runtime, stop)
         runtime.start()
@@ -775,8 +796,24 @@ class WorkerHost:
         runtime.join(timeout=timeout)
         return {"existed": True}
 
+    def _promote_pod(self, body: dict) -> dict:
+        """Re-key a holding standby under the primary pod name and wake it
+        into the data plane (mirrors ``KubeletController.adopt_standby`` +
+        ``signal_promote`` for the in-process path)."""
+        with self._plock:
+            entry = self._pods.pop(body["standby"], None)
+            if entry is None or body["primary"] in self._pods:
+                if entry is not None:  # primary already live: put it back
+                    self._pods[body["standby"]] = entry
+                return {"promoted": False}
+            self._pods[body["primary"]] = entry
+        runtime, _ = entry
+        runtime.promote(body.get("launchCount", 0))
+        return {"promoted": True}
+
     def _on_runtime_exit(self, runtime) -> None:
-        pod_name = crds.pod_name(runtime.job, runtime.pe_id)
+        pod_name = (runtime.pod_name_override
+                    or crds.pod_name(runtime.job, runtime.pe_id))
         with self._plock:
             self._pods.pop(pod_name, None)
         self.channel.cast("pod_exit", {

@@ -173,8 +173,10 @@ class AdaptiveBatcher:
 class PERuntime(threading.Thread):
     def __init__(self, *, job: str, pe_id: int, metadata: dict, fabric: Fabric,
                  rest, launch_count: int, stop_event: threading.Event,
-                 on_exit=None, cpu_share=None):
-        super().__init__(name=f"pe-{job}-{pe_id}", daemon=True)
+                 on_exit=None, cpu_share=None, standby: bool = False,
+                 pod_name: str | None = None):
+        super().__init__(name=f"pe-{job}-{pe_id}"
+                         + ("-standby" if standby else ""), daemon=True)
         self.job = job
         self.pe_id = pe_id
         self.meta = metadata
@@ -183,6 +185,19 @@ class PERuntime(threading.Thread):
         self.launch_count = launch_count
         self.stop_event = stop_event
         self.on_exit = on_exit
+        # warm-standby state (failover conductor, platform/failover.py): a
+        # standby runtime HOLDS — no publishes, no identity writes under
+        # (job, peId) — warming its state from the latest committed
+        # checkpoint until promote() flips it into the primary identity.
+        # ``pod_name`` overrides the computed primary pod name for exit
+        # reporting while the runtime serves the standby pod record.
+        self.standby = standby
+        self.pod_name_override = pod_name
+        self.promoted = False
+        self.warmed_step = -1
+        self._warm_state: dict = {}
+        self._promote_event = threading.Event()
+        self._entered_data_plane = False
         # node CPU share (the kubelet's oversubscription model): synthetic
         # per-tuple work stretches by the inverse share, so packing more
         # PEs than cores onto a node measurably slows each of them
@@ -644,6 +659,15 @@ class PERuntime(threading.Thread):
 
     def run(self) -> None:
         try:
+            # Modeled container boot (image pull + process start).  A warm
+            # standby pays this at creation, off the critical path; a cold
+            # restart pays it before it can rejoin the data plane.
+            boot = float(self.meta.get("startDelay", 0.0) or 0.0)
+            if boot and self.stop_event.wait(boot):
+                return
+            if self.standby and not self._hold_standby():
+                return  # stopped while holding: never touched the data plane
+            self._entered_data_plane = True
             self._connect()
             kinds = [o["kind"] for o in self.meta["operators"]]
             if "trainer" in kinds:
@@ -665,6 +689,13 @@ class PERuntime(threading.Thread):
                 self.crashed = True
                 traceback.print_exc()
         finally:
+            if not self._entered_data_plane:
+                # a standby that never promoted: it holds no publishes and
+                # must NOT unpublish — (job, peId) endpoints belong to the
+                # live primary
+                if self.on_exit:
+                    self.on_exit(self)
+                return
             try:
                 if self._drain is not None and not self.crashed and \
                         not self.stop_event.is_set():
@@ -693,6 +724,66 @@ class PERuntime(threading.Thread):
             if self.on_exit:
                 self.on_exit(self)
 
+    # ------------------------------------------------------- warm standby
+
+    def _hold_standby(self) -> bool:
+        """The warm-standby hold loop: no publishes, no REST writes under
+        the primary identity — only checkpoint re-warm passes at the
+        policy's interval.  Returns True when promoted (proceed into
+        ``_connect``: publish = single epoch bump, residual carryover
+        preloads the dead primary's undelivered ring), False on stop."""
+        interval = max(0.05, float(self.meta.get("standbyWarmInterval",
+                                                 0.5) or 0.5))
+        reported = None  # last warmed step told to the conductor
+        self._warm_standby()
+        while not self.stop_event.is_set():
+            if reported != self.warmed_step:
+                # readiness mark: boot is paid and a warm pass ran — only
+                # now may the conductor flip StandbyReady (a promotion
+                # before this would stall on the modeled boot)
+                try:
+                    self.rest.notify_standby_warm(self.job, self.pe_id,
+                                                  self.warmed_step)
+                except Exception:  # noqa: BLE001 — readiness is advisory
+                    pass
+                reported = self.warmed_step
+            if self._promote_event.wait(timeout=interval):
+                self.promoted = True
+                return not self.stop_event.is_set()
+            self._warm_standby()
+        return False
+
+    def _warm_standby(self) -> None:
+        """One re-warm pass: page the latest committed checkpoint shards
+        into memory so a promotion-time load is a cache hit, and record the
+        warmed step for the conductor's readiness accounting."""
+        cr = self._cr()
+        ckpt = getattr(self.rest, "ckpt", None)
+        if not cr or ckpt is None:
+            return
+        region = cr.get("name", "region")
+        try:
+            st = self.rest.get_cr_state(self.job, region)
+            committed = st.get("lastCommitted", -1) if st else -1
+            if committed < 0 or committed == self.warmed_step:
+                return
+            for shard in (f"pe{self.pe_id}", "params"):
+                step, arrays, meta = ckpt.load_shard_at_or_before(
+                    self.job, region, committed, shard)
+                if step is not None:
+                    self._warm_state[shard] = (step, arrays, meta)
+            self.warmed_step = committed
+        except Exception:  # noqa: BLE001 — warming is best-effort; the
+            pass  # promotion-time load is the correctness path
+
+    def promote(self, launch_count: int) -> None:
+        """Flip this standby into the primary identity (failover conductor
+        only).  The hold loop wakes immediately; exit reporting switches to
+        the computed primary pod name."""
+        self.launch_count = launch_count
+        self.pod_name_override = None
+        self._promote_event.set()
+
     # ------------------------------------------------------------ streaming
 
     def _cr(self):
@@ -719,7 +810,9 @@ class PERuntime(threading.Thread):
         if self._cr():
             st = self.rest.get_cr_state(self.job, region)
             if st and st.get("lastCommitted", -1) >= 0:
-                _, meta = self.rest.ckpt.load_shard(
+                # older-step fallback: a shard missing at the committed step
+                # (writer missed a barrier) replays from the newest one
+                _, _, meta = self.rest.ckpt.load_shard_at_or_before(
                     self.job, region, st["lastCommitted"], f"pe{self.pe_id}")
                 if meta:
                     offset = meta["offset"]
@@ -742,11 +835,17 @@ class PERuntime(threading.Thread):
             self._report_load()
             if interval and offset % interval == 0:
                 # checkpoint barrier: everything the checkpoint covers must
-                # be on the wire before the offset is declared durable
+                # be on the wire before the offset is declared durable.
+                # base_step = the last committed step, so unchanged shards
+                # are hard-linked, not rewritten (incremental checkpoints)
                 self._flush_all()
+                st = self.rest.get_cr_state(self.job, region)
+                base = st.get("lastCommitted", -1) if st else -1
                 self.rest.ckpt.save_shard(self.job, region, offset,
                                           f"pe{self.pe_id}",
-                                          meta={"offset": offset})
+                                          meta={"offset": offset},
+                                          base_step=base if base >= 0
+                                          else None)
                 self.rest.notify_checkpoint(self.job, region,
                                             self.pe_id, offset)
             if cfg.get("rate_sleep"):
@@ -1032,9 +1131,13 @@ class PERuntime(threading.Thread):
             self._flush_all()  # one tuple per step: nothing to amortize
             if cr and step % interval == 0:
                 if channel == 0:  # replicas identical post-allreduce
+                    st = self.rest.get_cr_state(self.job, region)
+                    base = st.get("lastCommitted", -1) if st else -1
                     self.rest.ckpt.save_shard(self.job, region, step, "params",
                                               arrays={"params": params, "opt": opt},
-                                              meta={"step": step})
+                                              meta={"step": step},
+                                              base_step=base if base >= 0
+                                              else None)
                 self.rest.notify_checkpoint(self.job, region, self.pe_id, step)
             self.rest.report_metrics(
                 self.job, self.pe_id,

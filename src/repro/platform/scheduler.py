@@ -505,6 +505,8 @@ class RebalanceConductor(Conductor):
             if pod.status.get("phase") != "Running" or pod.terminating or \
                     pod.status.get("draining"):
                 continue
+            if pod.spec.get("standby"):
+                continue  # standbys hold no traffic; moving one fixes nothing
             if (pod.spec.get("pod_spec", {}) or {}).get("nodeName"):
                 continue  # host-pinned: the scheduler would re-bind it here
             if not self._region_pe(pod):

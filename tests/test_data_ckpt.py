@@ -69,3 +69,118 @@ def test_ckpt_roundtrip_and_sweep(tmp_path):
     assert removed == 1
     assert not store.has_shard("job", "r", 10, "params")
     assert store.has_shard("job", "r", 20, "params")
+
+
+def test_ckpt_atomic_tmp_rename(tmp_path):
+    """Writes are tmp+rename: no tmp residue after a save, and a stale tmp
+    left by a crashed writer is simply overwritten by the next save."""
+    import os
+
+    store = CheckpointStore(str(tmp_path))
+    tree = {"w": jnp.zeros((3,), jnp.float32)}
+    d = store.save_shard("job", "r", 1, "params", arrays=tree,
+                         meta={"step": 1})
+    names = os.listdir(d)
+    assert not any(n.endswith(".tmp") for n in names), names
+    assert "params.npz" in names and "params.json" in names
+    # simulate a crashed writer: stale tmp + a garbage payload
+    with open(os.path.join(d, ".params.npz.tmp"), "wb") as f:
+        f.write(b"partial garbage")
+    store.save_shard("job", "r", 1, "params", arrays=tree, meta={"step": 1})
+    got, meta = store.load_shard("job", "r", 1, "params", like=tree)
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(tree["w"]))
+    assert meta == {"step": 1}
+
+
+def test_ckpt_incremental_diff_links_clean_shards(tmp_path):
+    """Dirty-shard diffing: against ``base_step``, an unchanged shard is
+    hard-linked (same inode) while a changed shard is rewritten."""
+    import os
+
+    store = CheckpointStore(str(tmp_path))
+    clean = {"w": jnp.arange(4, dtype=jnp.float32)}
+    dirty0 = {"s": jnp.zeros((2,), jnp.float32)}
+    dirty1 = {"s": jnp.ones((2,), jnp.float32)}
+    store.save_shard("job", "r", 10, "clean", arrays=clean,
+                     meta={"step": 10})
+    store.save_shard("job", "r", 10, "dirty", arrays=dirty0)
+    store.save_shard("job", "r", 20, "clean", arrays=clean,
+                     meta={"step": 10}, base_step=10)
+    store.save_shard("job", "r", 20, "dirty", arrays=dirty1, base_step=10)
+    base = store._dir("job", "r", 10)
+    cur = store._dir("job", "r", 20)
+    # unchanged shard: linked, not copied — one inode, two names
+    st_base = os.stat(os.path.join(base, "clean.npz"))
+    st_cur = os.stat(os.path.join(cur, "clean.npz"))
+    assert st_base.st_ino == st_cur.st_ino
+    assert st_cur.st_nlink >= 2
+    assert (os.stat(os.path.join(base, "clean.json")).st_ino
+            == os.stat(os.path.join(cur, "clean.json")).st_ino)
+    # changed shard: rewritten — fresh inode, fresh content
+    assert (os.stat(os.path.join(base, "dirty.npz")).st_ino
+            != os.stat(os.path.join(cur, "dirty.npz")).st_ino)
+    got, _ = store.load_shard("job", "r", 20, "dirty", like=dirty1)
+    np.testing.assert_array_equal(np.asarray(got["s"]),
+                                  np.asarray(dirty1["s"]))
+    # the linked copy still round-trips independently of the base
+    got, meta = store.load_shard("job", "r", 20, "clean", like=clean)
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(clean["w"]))
+    assert meta == {"step": 10}
+
+
+def test_ckpt_load_at_older_step_fallback(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    tree = {"w": jnp.arange(3, dtype=jnp.float32)}
+    store.save_shard("job", "r", 5, "pe1", arrays=tree, meta={"offset": 5})
+    store.save_shard("job", "r", 9, "other", meta={"offset": 9})
+    # step 9 has no pe1 shard: fall back to the newest older step that does
+    step, got, meta = store.load_shard_at_or_before("job", "r", 9, "pe1",
+                                                    like=tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+    assert meta == {"offset": 5}
+    # nothing at or below the requested step
+    assert store.load_shard_at_or_before("job", "r", 4, "pe1") == (None, None,
+                                                                   None)
+
+
+def test_ckpt_sweep_spares_committing_and_newer_steps(tmp_path):
+    """The sweep deletes only strictly-older unmarked steps: the step a CRD
+    write is mid-commit on (``.committing``) and any newer in-flight step
+    must survive."""
+    store = CheckpointStore(str(tmp_path))
+    for step in (10, 20, 30, 40):
+        store.save_shard("job", "r", step, "params", meta={"step": step})
+    store.mark_committing("job", "r", 20)
+    assert store.committing("job", "r", 20)
+    removed = store.sweep("job", "r", committed=30)
+    # 10 reaped; 20 spared (mid-commit); 30 committed; 40 newer in-flight
+    assert removed == 1
+    assert store.steps("job", "r") == [20, 30, 40]
+    store.clear_committing("job", "r", 20)
+    assert not store.committing("job", "r", 20)
+    assert store.sweep("job", "r", committed=30) == 1
+    assert store.steps("job", "r") == [30, 40]
+
+
+def test_ckpt_jax_pytree_roundtrip_with_scalar_meta(tmp_path):
+    """Mixed-dtype jax pytrees round-trip bit-exact next to scalar metadata
+    in the json sidecar."""
+    store = CheckpointStore(str(tmp_path))
+    tree = {"params": {"dense": jnp.linspace(0, 1, 12,
+                                             dtype=jnp.float32).reshape(3, 4),
+                       "bias": jnp.array([-1, 0, 7], jnp.int32)},
+            "opt": [jnp.full((2, 2), 0.5, jnp.float32),
+                    jnp.array(3, jnp.int32)]}
+    meta = {"step": 42, "loss": 0.125, "clean": True, "tag": "warm"}
+    store.save_shard("job", "r", 42, "state", arrays=tree, meta=meta)
+    got, got_meta = store.load_shard("job", "r", 42, "state", like=tree)
+    import jax
+
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+    assert got_meta == meta

@@ -1,0 +1,185 @@
+"""Recovery plane: StandbyPolicy CRD shape, the conductor-driven
+checkpoint sweep (``.committing`` marker honored), warm-standby placement
++ promotion end to end under a tight recovery-time SLO, and the degraded
+``standby-loss`` path that falls back to the cold restart chain.
+"""
+
+import pytest
+
+from repro.ckpt import CheckpointStore
+from repro.core import (
+    Event,
+    EventType,
+    ResourceStore,
+    condition_is,
+    wait_for,
+)
+from repro.platform import Platform, crds
+from repro.platform.failover import FailoverConductor
+
+
+# ------------------------------------------------------------- CRD contract
+
+
+def test_standby_policy_crd_shape():
+    pol = crds.make_standby_policy("app", pes=[1, 3], warm_interval=0.25)
+    assert pol.name == crds.standby_policy_name("app") == "app-standby"
+    assert pol.spec == {"job": "app", "pes": [1, 3], "warmInterval": 0.25}
+    # conductor-owned progress fields exist from birth
+    assert pol.status == {"protected": {}, "promotions": 0}
+    assert pol.labels == crds.job_labels("app")
+    # empty pes = protect every non-source PE (resolved at reconcile time)
+    assert crds.make_standby_policy("app").spec["pes"] == []
+
+    sb = crds.make_standby_pod("app", 2, {"pod_spec": {}}, 4, 1)
+    assert sb.name == crds.standby_pod_name("app", 2) == "app-standby-2"
+    assert sb.spec["standby"] is True
+    assert sb.spec["launchCount"] == 4
+
+
+# ------------------------------------------- conductor-driven sweep (unit)
+
+
+def _cr_event(seq, *, job, region, committed, old_committed=None):
+    spec = {"interval": 1.0, "members": [1]}
+    cr = crds.make_consistent_region(job, region, spec)
+    cr.status["lastCommitted"] = committed
+    old = None
+    if old_committed is not None:
+        old = crds.make_consistent_region(job, region, spec)
+        old.status["lastCommitted"] = old_committed
+    return Event(seq=seq, type=EventType.MODIFIED, resource=cr, old=old)
+
+
+def test_conductor_sweep_on_commit(tmp_path):
+    """A CR commit event reaps strictly-older uncommitted steps; the
+    ``.committing`` marker spares a step whose CRD write may still be in
+    flight; a repeat event for the same committed step is a no-op."""
+    ck = CheckpointStore(str(tmp_path))
+    for step in (1, 2, 3, 4):
+        ck.save_shard("j", "r", step, "pe1", meta={"step": step})
+    ck.mark_committing("j", "r", 2)
+
+    store = ResourceStore()
+    fc = FailoverConductor(store, "default", None, ckpt=ck)
+    fc.on_event(_cr_event(1, job="j", region="r", committed=3,
+                          old_committed=-1))
+    # steps 1 reaped; 2 spared (.committing); 3 is the commit; 4 newer
+    assert fc.sweeps == 1
+    assert ck.load_shard("j", "r", 1, "pe1")[1] is None
+    assert ck.load_shard("j", "r", 2, "pe1")[1] == {"step": 2}
+    assert ck.load_shard("j", "r", 3, "pe1")[1] == {"step": 3}
+    assert ck.load_shard("j", "r", 4, "pe1")[1] == {"step": 4}
+    # same committed step again: no new commit, nothing swept
+    fc.on_event(_cr_event(2, job="j", region="r", committed=3,
+                          old_committed=3))
+    assert fc.sweeps == 1
+    # marker cleared -> the next commit reaps the spared step too
+    ck.clear_committing("j", "r", 2)
+    fc.on_event(_cr_event(3, job="j", region="r", committed=4,
+                          old_committed=3))
+    assert ck.load_shard("j", "r", 2, "pe1")[1] is None
+    assert ck.load_shard("j", "r", 3, "pe1")[1] is None
+
+
+# ------------------------------------------------- threaded e2e (shard 2)
+
+
+@pytest.fixture
+def platform():
+    p = Platform(num_nodes=4)
+    yield p
+    p.shutdown()
+
+
+@pytest.mark.slow
+def test_warm_standby_promotion_e2e(platform):
+    """The tentpole path end to end: the policy places a shadow pod on a
+    *different* node (anti-affinity pairing), a primary kill promotes it in
+    place (single epoch bump, no restart chain), the recover span stays
+    inside a tight 1 s recovery-time SLO, and the conductor re-warms a
+    fresh standby behind the promoted primary.  Policy teardown reaps the
+    shadow and clears readiness."""
+    p = platform
+    p.submit("wj", {"app": {"type": "streams", "width": 2,
+                            "pipeline_depth": 1,
+                            "source": {"rate_sleep": 0.002}}})
+    assert p.wait_full_health("wj", 60)
+    p.set_standby_policy("wj", pes=[1], warm_interval=0.2)
+    assert wait_for(lambda: p.api.pes.condition_is(
+        crds.pe_name("wj", 1), crds.COND_STANDBY_READY), 20)
+
+    sb = p.api.pods.get(crds.standby_pod_name("wj", 1))
+    pr = p.api.pods.get(crds.pod_name("wj", 1))
+    assert sb.spec["nodeName"] != pr.spec["nodeName"]  # pair split apart
+    assert sb.status.get("warmed")  # readiness came from the runtime
+    # only the named PE is shadowed
+    assert [pod.name for pod in p.pods("wj") if pod.spec.get("standby")] \
+        == [sb.name]
+
+    p.set_slo("wj", loss_budget=256, recovery_time_s=1.0)
+    before = pr.spec.get("launchCount", 0)
+    p.trace.clear()
+    assert p.kill_pod("wj", 1)
+
+    def promoted():
+        pod = p.api.pods.try_get(crds.pod_name("wj", 1))
+        return (pod is not None
+                and pod.spec.get("launchCount", 0) > before
+                and pod.status.get("phase") == "Running"
+                and bool(pod.status.get("connected")))
+    assert wait_for(promoted, 20)
+    assert p.failover.promotions == 1
+    assert p.failover.degraded_failovers == 0
+
+    spans = [s for s in p.trace.spans(name="recover")
+             if s.attrs.get("job") == "wj" and s.t1 is not None]
+    assert spans and all(s.duration_ms < 1000.0 for s in spans)
+
+    # promotion completed: condition cleared, policy counted it, and a
+    # fresh standby re-warms behind the promoted primary
+    assert wait_for(lambda: p.api.pes.condition_is(
+        crds.pe_name("wj", 1), crds.COND_STANDBY_READY), 20)
+    pe = p.api.pes.get(crds.pe_name("wj", 1))
+    assert not condition_is(pe, crds.COND_PROMOTING)
+    pol = p.api.standby_policies.get(crds.standby_policy_name("wj"))
+    assert pol.status.get("promotions") == 1
+    assert p.wait_full_health("wj", 30)
+
+    # the recover span is inside the judged bound
+    verdict = p.slo_conductor.evaluate("wj", force=True)
+    conds = {c["type"]: c["status"]
+             for c in p.slo_status("wj").get("conditions", [])}
+    assert conds.get("Met") == "True" and conds.get("Violated") == "False", \
+        (verdict, conds)
+
+    p.delete_standby_policy("wj")
+    assert wait_for(lambda: not p.api.pods.exists(
+        crds.standby_pod_name("wj", 1)), 15)
+    assert wait_for(lambda: not p.api.pes.condition_is(
+        crds.pe_name("wj", 1), crds.COND_STANDBY_READY), 15)
+
+
+@pytest.mark.slow
+def test_standby_loss_degraded_recovery(platform):
+    """``standby-loss``: the shadow dies right before the primary, so the
+    promotion finds no live handle to adopt and degrades to the cold
+    restart chain — the PE still recovers, and the conductor re-warms a
+    fresh standby afterwards."""
+    p = platform
+    p.submit("dj", {"app": {"type": "streams", "width": 2,
+                            "pipeline_depth": 1,
+                            "source": {"rate_sleep": 0.002}}})
+    assert p.wait_full_health("dj", 60)
+    p.set_slo("dj", loss_budget=256, recovery_time_s=30.0)
+    st = p.run_scenario(fault="standby-loss", job="dj", seed=106,
+                        target={"minPe": 1}, timeout=90)
+    assert st["completed"], st
+    assert st["phase"] == "Recovered"
+    assert st["outcome"]["degraded"] is True
+    assert st["outcome"]["reWarmed"] is True
+    assert p.wait_full_health("dj", 30)
+    verdict = p.slo_conductor.evaluate("dj", force=True)
+    conds = {c["type"]: c["status"]
+             for c in p.slo_status("dj").get("conditions", [])}
+    assert conds.get("Met") == "True", (verdict, conds)
