@@ -36,6 +36,10 @@
              promotion (one epoch bump) under identical load, both timed
              by the recover span and judged by the SLO plane
              -> results/BENCH_recovery.json
+  serve      paged KV-cache serving vs the fixed-slot baseline at an equal
+             HBM budget: tokens/sec, TTFT p50/p99, peak admitted
+             concurrency and prefix-cache hit rate over shared-prefix and
+             disjoint request mixes -> results/BENCH_serve.json
 
 ``--smoke`` runs only the cheap benchmarks (CI regression guard); it fails
 if the transport, scale-down, teardown or oversub bench does not produce
@@ -1291,6 +1295,163 @@ def bench_recovery(out_path: str | None = None, n_tuples: int = 600) -> dict:
     return report
 
 
+# ------------------------------------------------------------------ serve
+
+
+def _serve_trace(kind: str, n: int, prefix_len: int = 16,
+                 unique_len: int = 4, max_new: int = 8) -> list:
+    """Request mix for the serve bench: ``shared`` prompts agree on a
+    ``prefix_len``-token prefix then diverge; ``disjoint`` prompts share
+    nothing.  Same total prompt tokens either way."""
+    prompts = []
+    for i in range(n):
+        if kind == "shared":
+            prompts.append([7] * prefix_len + [11 + i] * unique_len)
+        else:
+            prompts.append([11 + i] * (prefix_len + unique_len))
+    return [(i, p, max_new) for i, p in enumerate(prompts)]
+
+
+def _drive_serve_engine(eng, trace, make_request) -> dict:
+    """Submit ``trace`` and step the engine to drain, timing tokens/sec,
+    per-request TTFT percentiles, and peak admitted concurrency."""
+    for rid, prompt, max_new in trace:
+        eng.submit(make_request(rid, prompt, max_new))
+    first: dict = {}
+    peak = 0
+    t0 = time.monotonic()
+    ticks = 0
+    while (eng.queue or eng.slots_busy) and ticks < 5000:
+        out = eng.step()
+        now = time.monotonic()
+        peak = max(peak, eng.slots_busy)
+        for rid, _tok in out:
+            first.setdefault(rid, now - t0)
+        ticks += 1
+    wall = time.monotonic() - t0
+    gen = sum(len(r.generated) for r in eng.finished)
+    ttfts = sorted(first.values())
+
+    def pct(q: float) -> float:
+        return ttfts[min(len(ttfts) - 1, int(q * len(ttfts)))] if ttfts else 0.0
+
+    return {"wall_s": round(wall, 4),
+            "tokensPerSec": round(gen / wall, 2) if wall else 0.0,
+            "generated": gen, "finished": len(eng.finished),
+            "ttft_p50_s": round(pct(0.50), 4),
+            "ttft_p99_s": round(pct(0.99), 4),
+            "peakConcurrency": peak}
+
+
+def bench_serve(out_path: str | None = None, n_requests: int = 12) -> dict:
+    """Paged KV-cache serving vs the fixed-slot baseline at an equal HBM
+    budget (paper §serving; the PR's tentpole acceptance gate).
+
+    Both engines run the same reduced model and the same request mixes —
+    ``shared`` (common 16-token prompt prefix, then divergence) and
+    ``disjoint`` (no sharing) — under the same 256-token KV budget:
+
+    - fixed: ``ServeEngine``, 4 slots x 64-token padded caches (admission
+      capacity is the slot count, regardless of request length);
+    - paged: ``PagedServeEngine``, 32 usable 8-token blocks + banker's
+      admission (capacity scales with actual footprints), chunked prefill,
+      prefix cache + copy-on-write.
+
+    Reports tokens/sec, TTFT p50/p99, peak admitted concurrency, and the
+    paged engine's pool/prefix signals per mix.  Acceptance: paged beats
+    fixed on tokens/sec AND p99 TTFT on both mixes, admits >= 2x the
+    concurrent requests at the same budget, and shows a nonzero prefix hit
+    rate on the shared mix.  Writes ``results/BENCH_serve.json``
+    (``--smoke`` fails without it)."""
+    import jax as _jax
+
+    from repro.configs import reduced_config
+    from repro.models import ModelOptions, init_params
+    from repro.serve import PagedServeEngine, Request, ServeEngine
+
+    cfg = reduced_config("gemma-2b")
+    opts = ModelOptions(compute_dtype="float32")
+    params = init_params(_jax.random.key(0), cfg)
+    budget_tokens = 256  # 4 slots x 64 == 32 usable blocks x 8
+
+    def make_fixed():
+        return ServeEngine(cfg, params, num_slots=4, max_len=64, opts=opts)
+
+    def make_paged():
+        return PagedServeEngine(cfg, params, num_blocks=33, block_size=8,
+                                max_active=16, prefill_chunk=8, opts=opts)
+
+    def warmup(eng):  # compile every (admit/prefill/decode) shape off-clock
+        eng.submit(Request(rid=-1, prompt=[3] * 20, max_new_tokens=2))
+        eng.run_until_drained(max_ticks=200)
+        eng.finished.clear()
+
+    mixes: dict = {}
+    for mix in ("shared", "disjoint"):
+        trace = _serve_trace(mix, n_requests)
+        row: dict = {}
+        for name, make in (("fixed", make_fixed), ("paged", make_paged)):
+            eng = make()
+            warmup(eng)
+            row[name] = _drive_serve_engine(
+                eng, trace, lambda rid, p, m: Request(rid=rid, prompt=p,
+                                                      max_new_tokens=m))
+            if name == "paged":
+                m = eng.metrics()
+                row[name]["engine"] = {
+                    k: m[k] for k in ("blocksTotal", "blocksFree",
+                                      "blocksCached", "prefixHitRate",
+                                      "prefillBacklog", "cowCopies")}
+        row["speedup"] = round(row["paged"]["tokensPerSec"]
+                               / max(row["fixed"]["tokensPerSec"], 1e-9), 2)
+        row["ttftGain"] = round(row["fixed"]["ttft_p99_s"]
+                                / max(row["paged"]["ttft_p99_s"], 1e-9), 2)
+        row["capacityGain"] = round(row["paged"]["peakConcurrency"]
+                                    / max(row["fixed"]["peakConcurrency"], 1),
+                                    2)
+        mixes[mix] = row
+    accept = {
+        "pagedFasterTokens": all(m["speedup"] > 1.0 for m in mixes.values()),
+        "pagedFasterTtftP99": all(m["ttftGain"] > 1.0 for m in mixes.values()),
+        "capacityGain2x": all(m["capacityGain"] >= 2.0
+                              for m in mixes.values()),
+        "prefixHitsOnSharedMix":
+            mixes["shared"]["paged"]["engine"]["prefixHitRate"] > 0.0,
+    }
+    report = {
+        "benchmark": "serve",
+        "model": "gemma-2b (reduced)",
+        "budgetTokens": budget_tokens,
+        "requests": n_requests,
+        "fixed": {"numSlots": 4, "maxLen": 64},
+        "paged": {"blocks": 32, "blockSize": 8, "maxActive": 16,
+                  "prefillChunk": 8},
+        "mixes": mixes,
+        "acceptance": {**accept, "met": all(accept.values())},
+    }
+    out = out_path or os.path.join(os.path.dirname(__file__), "..", "results",
+                                   "BENCH_serve.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    for mix, row in mixes.items():
+        emit(f"serve.{mix}.tokens_per_sec", 0.0,
+             f"fixed={row['fixed']['tokensPerSec']};"
+             f"paged={row['paged']['tokensPerSec']};x{row['speedup']}")
+        emit(f"serve.{mix}.ttft_p99_s", 0.0,
+             f"fixed={row['fixed']['ttft_p99_s']};"
+             f"paged={row['paged']['ttft_p99_s']};x{row['ttftGain']}")
+        emit(f"serve.{mix}.capacity", 0.0,
+             f"fixed={row['fixed']['peakConcurrency']};"
+             f"paged={row['paged']['peakConcurrency']};"
+             f"x{row['capacityGain']}")
+    emit("serve.prefix_hit_rate", 0.0,
+         str(mixes["shared"]["paged"]["engine"]["prefixHitRate"]))
+    emit("serve.acceptance", 0.0,
+         "met" if report["acceptance"]["met"] else "MISSED")
+    return report
+
+
 BENCHES = {
     "fig7": bench_fig7_job_lifecycle,
     "fig7c": bench_fig7c_gc_vs_bulk,
@@ -1309,6 +1470,7 @@ BENCHES = {
     "latency": bench_latency,
     "chaos": bench_chaos,
     "recovery": bench_recovery,
+    "serve": bench_serve,
 }
 
 # cheap subset for CI (`--smoke`): seconds not minutes (scale_down and
@@ -1316,7 +1478,7 @@ BENCHES = {
 # zero-loss scale-down and pressure-aware scheduling are acceptance
 # criteria, not just trajectories)
 SMOKE = ("fig7c", "table1", "transport", "scale_down", "scaleout", "teardown",
-         "oversub", "latency", "chaos", "recovery")
+         "oversub", "latency", "chaos", "recovery", "serve")
 
 
 def main() -> None:
@@ -1346,7 +1508,8 @@ def main() -> None:
         for artifact in ("BENCH_transport.json", "BENCH_scaledown.json",
                          "BENCH_scaleout.json", "BENCH_latency.json",
                          "BENCH_chaos.json", "BENCH_teardown.json",
-                         "BENCH_oversub.json", "BENCH_recovery.json"):
+                         "BENCH_oversub.json", "BENCH_recovery.json",
+                         "BENCH_serve.json"):
             if not os.path.exists(os.path.join(results_dir, artifact)):
                 print(f"SMOKE FAIL: results/{artifact} not produced",
                       flush=True)

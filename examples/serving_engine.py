@@ -1,7 +1,11 @@
 """Continuous-batching serving of a small model with batched requests.
 
 Demonstrates the serving substrate the decode_32k / long_500k dry-run cells
-lower: prefill + per-token batched decode with slot admission/retirement.
+lower: prefill + per-token batched decode with slot admission/retirement,
+then the paged engine on the same workload — block-pool KV cache with
+banker's admission, chunked prefill interleaved with decode, and prefix
+reuse (copy-on-write on divergence) across requests sharing a prompt
+prefix.
 
 Run:  PYTHONPATH=src python examples/serving_engine.py
 """
@@ -12,27 +16,49 @@ import jax
 
 from repro.configs import reduced_config
 from repro.models import ModelOptions, init_params
-from repro.serve import Request, ServeEngine
+from repro.serve import PagedServeEngine, Request, ServeEngine
 
 
-def main() -> None:
-    cfg = reduced_config("recurrentgemma-9b")  # hybrid: recurrent + local attn
-    print(f"serving {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
-          f"pattern {cfg.block_pattern}")
-    params = init_params(jax.random.key(0), cfg)
-    engine = ServeEngine(cfg, params, num_slots=4, max_len=128,
-                         opts=ModelOptions(compute_dtype="float32"))
-    for rid in range(8):  # 8 requests through 4 slots: continuous batching
-        prompt = [1 + rid, 7, 42, (rid * 13) % cfg.vocab_size]
+def run(engine, requests, label: str) -> None:
+    for rid, prompt in enumerate(requests):
         engine.submit(Request(rid=rid, prompt=prompt, max_new_tokens=12))
     t0 = time.time()
     done = engine.run_until_drained(max_ticks=500)
     dt = time.time() - t0
     total_tokens = sum(len(r.generated) for r in done)
-    print(f"{len(done)} requests, {total_tokens} tokens in {dt:.1f}s "
-          f"({total_tokens/dt:.1f} tok/s batched greedy decode)")
+    print(f"[{label}] {len(done)} requests, {total_tokens} tokens in "
+          f"{dt:.1f}s ({total_tokens/dt:.1f} tok/s batched greedy decode)")
     for r in sorted(done, key=lambda r: r.rid):
         print(f"  request {r.rid}: {r.generated}")
+
+
+def main() -> None:
+    opts = ModelOptions(compute_dtype="float32")
+
+    # hybrid (recurrent + local attn) model through the fixed-slot engine
+    cfg = reduced_config("recurrentgemma-9b")
+    print(f"serving {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"pattern {cfg.block_pattern}")
+    params = init_params(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, num_slots=4, max_len=128, opts=opts)
+    run(engine, [[1 + rid, 7, 42, (rid * 13) % cfg.vocab_size]
+                 for rid in range(8)], "fixed-slot")
+
+    # pure-attention model through the paged engine: shared prompt prefixes
+    # hit the block-granular prefix cache, divergence is copy-on-write
+    cfg = reduced_config("gemma-2b")
+    print(f"\nserving {cfg.name} paged: {cfg.param_count()/1e6:.1f}M params")
+    params = init_params(jax.random.key(0), cfg)
+    # max_active=2: later requests admit after earlier prompts committed
+    # their blocks, so the shared prefix is served from the cache
+    engine = PagedServeEngine(cfg, params, num_blocks=48, block_size=8,
+                              max_active=2, prefill_chunk=8, opts=opts)
+    shared = [7, 7, 42, 42, 11, 11, 3, 3]  # common prefix across requests
+    run(engine, [shared + [100 + rid] for rid in range(8)], "paged")
+    m = engine.metrics()
+    print(f"  pool: {m['blocksFree']}/{m['blocksTotal']} blocks free, "
+          f"{m['blocksCached']} cached; prefix hit rate "
+          f"{m['prefixHitRate']:.0%}; {m['cowCopies']} CoW copies")
 
 
 if __name__ == "__main__":

@@ -54,12 +54,13 @@ if [ "$shard" = "2" ]; then
   exit 0
 fi
 
-echo "== benchmark smoke (fig7c, table1, transport, scale_down, scaleout, teardown, oversub, latency, chaos, recovery)"
+echo "== benchmark smoke (fig7c, table1, transport, scale_down, scaleout, teardown, oversub, latency, chaos, recovery, serve)"
 # drop stale artifacts so run.py's --smoke artifact gates are real
 rm -f results/BENCH_transport.json results/BENCH_scaledown.json \
       results/BENCH_scaleout.json results/BENCH_teardown.json \
       results/BENCH_oversub.json results/BENCH_latency.json \
-      results/BENCH_chaos.json results/BENCH_recovery.json
+      results/BENCH_chaos.json results/BENCH_recovery.json \
+      results/BENCH_serve.json
 python benchmarks/run.py --smoke
 
 echo "== docs checks (README/ARCHITECTURE references, examples import)"

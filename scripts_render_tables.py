@@ -30,6 +30,14 @@ def render_benchmarks(path="results/benchmarks.csv"):
         print()
         print(f"Recovery: cold restart {cold:.1f} ms vs warm standby "
               f"{warm:.1f} ms ({verdict}).")
+    serve = {r["name"]: r for r in rows if r["name"].startswith("serve.")}
+    if serve:
+        print()
+        print(f"Serving (paged vs fixed-slot, equal KV budget): "
+              f"shared-prefix mix {serve['serve.shared.tokens_per_sec']['derived']}; "
+              f"disjoint mix {serve['serve.disjoint.tokens_per_sec']['derived']}; "
+              f"prefix hit rate {serve['serve.prefix_hit_rate']['derived']}; "
+              f"acceptance {serve['serve.acceptance']['derived']}.")
 
 
 def main(path="results/dryrun.json", mesh_filter=None):

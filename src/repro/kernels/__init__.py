@@ -7,7 +7,7 @@ Validated with interpret=True on CPU; the TPU path enables them via
 """
 
 from . import ops, ref
-from .decode_attention import decode_attention
+from .decode_attention import decode_attention, paged_decode_attention
 from .flash_attention import flash_attention
 from .mlstm_chunk import mlstm_chunk
 from .rglru_scan import rglru_scan
@@ -18,6 +18,7 @@ __all__ = [
     "flash_attention",
     "mlstm_chunk",
     "ops",
+    "paged_decode_attention",
     "ref",
     "rglru_scan",
     "rmsnorm",

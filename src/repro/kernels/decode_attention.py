@@ -12,6 +12,16 @@ SMEM (scalar memory) rather than VMEM: it is control data, not tensor data.
 
 Layouts: q (B, KV, G, D); caches (B, Smax, KV, D); lengths (B, 1) int32.
 Grid: (B, KV, Smax/block_k), cache axis innermost (sequential).
+
+``paged_decode_attention`` is the same split-K online-softmax kernel over a
+*paged* cache: K/V live in a block pool ``(num_blocks, block_size, KV, D)``
+and each sequence names its blocks through a block table delivered as a
+scalar-prefetch operand (SMEM, like ``lengths``).  The K/V BlockSpec index
+maps read the table, so the gather happens in the DMA engine block by
+block — the paged layout is never materialized as a contiguous cache
+on-device.  Block 0 of the pool is the engine's scratch block; table rows
+of inactive sequences point at it, which is safe because ``lengths`` masks
+their output anyway.
 """
 
 from __future__ import annotations
@@ -76,7 +86,15 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
     Smax, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
     block_k = min(block_k, Smax)
-    assert Smax % block_k == 0
+    if Smax % block_k:
+        # arbitrary cache lengths: pad the cache axis up to the next
+        # block_k multiple instead of crashing the caller — the padded
+        # positions sit beyond every ``lengths`` entry, so the in-kernel
+        # valid-length mask already ignores them
+        pad = block_k - Smax % block_k
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Smax += pad
     nk = Smax // block_k
     scale = 1.0 / math.sqrt(D)
     qg = q.reshape(B, KV, G, D)
@@ -105,4 +123,103 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
         ),
         interpret=interpret,
     )(len2d, qg, k_cache, v_cache)
+    return out.reshape(B, H, D)
+
+
+# ------------------------------------------------------------------- paged
+
+
+def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale: float,
+                         block_size: int, num_t: int):
+    # identical online-softmax body to the dense kernel; only the K/V
+    # BlockSpecs differ (they gather through the block table).  tab_ref /
+    # len_ref are the scalar-prefetch operands (SMEM).
+    b = pl.program_id(0)
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b, 0]
+    needed = it * block_size < length
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_size, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = it * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+        m_ref[:, 0] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(it == num_t - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           interpret: bool = False):
+    """Decode attention over a paged KV cache.
+
+    q (B,H,D); pools (num_blocks, block_size, KV, D); block_tables (B,T)
+    int32 (physical block of each sequence's t-th logical block — unused
+    entries must point at a valid block, e.g. scratch block 0); lengths
+    (B,) -> (B,H,D).  Split-K runs over the T logical blocks; each grid
+    step DMAs one pool block selected by the prefetched table, so no
+    contiguous (B, Smax, KV, D) cache ever exists on-device.
+    """
+    B, H, D = q.shape
+    _, block_size, KV, _ = k_pool.shape
+    T = block_tables.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KV, G, D)
+    tab = block_tables.astype(jnp.int32)
+    len2d = lengths.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               block_size=block_size, num_t=T)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block tables + lengths land in SMEM
+        grid=(B, KV, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, j, it, tab, lens: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, D),
+                         lambda b, j, it, tab, lens: (tab[b, it], 0, j, 0)),
+            pl.BlockSpec((1, block_size, 1, D),
+                         lambda b, j, it, tab, lens: (tab[b, it], 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, j, it, tab, lens: (b, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(tab, len2d, qg, k_pool, v_pool)
     return out.reshape(B, H, D)

@@ -13,7 +13,7 @@ import functools
 import jax.numpy as jnp
 
 from . import ref
-from .decode_attention import decode_attention
+from .decode_attention import decode_attention, paged_decode_attention
 from .flash_attention import flash_attention, flash_attention_bwd, flash_attention_train
 from .mlstm_chunk import mlstm_chunk
 from .rglru_scan import rglru_scan
@@ -26,6 +26,7 @@ __all__ = [
     "flash_attention_train",
     "mlstm_chunk",
     "mlstm_recurrence_op",
+    "paged_decode_attention",
     "rglru_scan",
     "rmsnorm",
     "use_pallas",

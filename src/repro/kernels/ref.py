@@ -48,6 +48,19 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     return jnp.einsum("bhk,bkhd->bhd", p, vf).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths):
+    """q (B,H,D); pools (N,bs,KV,D); block_tables (B,T); lengths (B,).
+
+    Gathers each sequence's blocks into a contiguous cache and defers to
+    the dense oracle — the simplest statement of what paging must equal.
+    """
+    B = q.shape[0]
+    _, bs, KV, D = k_pool.shape
+    kc = k_pool[block_tables].reshape(B, -1, KV, D)
+    vc = v_pool[block_tables].reshape(B, -1, KV, D)
+    return decode_attention_ref(q, kc, vc, lengths)
+
+
 def rglru_scan_ref(log_a, b):
     """h_t = exp(log_a_t) * h_{t-1} + b_t, sequential.  (B,S,C) f32."""
 

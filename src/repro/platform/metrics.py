@@ -153,7 +153,9 @@ class MetricsPlane(Conductor):
         whose every channel already retired but whose drops remain)."""
         return {"channels": 0, "backpressure": 0.0, "throughput": 0.0,
                 "queueDepth": 0, "blockedPuts": 0, "stepTime": 0.0,
-                "emitBatch": 0.0, "occupancy": 0.0, "tuplesDropped": dropped}
+                "emitBatch": 0.0, "occupancy": 0.0, "tuplesDropped": dropped,
+                "blocksFree": 0, "blocksCached": 0, "prefillBacklog": 0,
+                "prefixHitRate": 0.0}
 
     def aggregate(self, job: str) -> dict:
         """Pure rollup of the current windows for one job."""
@@ -178,7 +180,8 @@ class MetricsPlane(Conductor):
             self._latency_fold(region_lat.setdefault(region, {}), latest)
             agg = regions.setdefault(region, {
                 **self._region_zero(retired.get(region, 0)),
-                "stepTimeSamples": 0, "occupancySamples": 0})
+                "stepTimeSamples": 0, "occupancySamples": 0,
+                "prefixSamples": 0})
             agg["channels"] += 1
             agg["backpressure"] += latest.get("backpressure", 0.0)
             agg["throughput"] += rate
@@ -191,6 +194,14 @@ class MetricsPlane(Conductor):
                 # slot occupancy is the target-tracking policy's signal
                 agg["occupancy"] += latest["occupancy"]
                 agg["occupancySamples"] += 1
+            # paged-serving signals (PagedServeEngine-shaped samples):
+            # pool inventory sums across replicas, hit rate is a mean
+            agg["blocksFree"] += latest.get("blocksFree", 0)
+            agg["blocksCached"] += latest.get("blocksCached", 0)
+            agg["prefillBacklog"] += latest.get("prefillBacklog", 0)
+            if "prefixHitRate" in latest:
+                agg["prefixHitRate"] += latest["prefixHitRate"]
+                agg["prefixSamples"] += 1
             if latest.get("stepTime"):
                 agg["stepTime"] += latest["stepTime"]
                 agg["stepTimeSamples"] += 1
@@ -201,7 +212,10 @@ class MetricsPlane(Conductor):
                 agg["occupancy"] /= agg["occupancySamples"]
             if agg["stepTimeSamples"]:
                 agg["stepTime"] /= agg["stepTimeSamples"]
+            if agg["prefixSamples"]:
+                agg["prefixHitRate"] /= agg["prefixSamples"]
             del agg["stepTimeSamples"], agg["occupancySamples"]
+            del agg["prefixSamples"]
         # regions whose every channel already retired still report drops
         for region, n in retired.items():
             if region and region not in regions:

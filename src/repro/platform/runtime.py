@@ -71,6 +71,29 @@ from .fabric import (EndpointCache, EpochAborted, Fabric, LatencyDigest,
                      ShutDown, Unreachable)
 
 
+def affinity_route(key, width: int, table: dict, load: dict) -> int:
+    """Prefix-affinity partition choice for the serve-job router.
+
+    Requests sharing a prompt prefix (``key``) should land on the replica
+    that already prefilled it — its KV blocks sit in that replica's prefix
+    cache, so routing elsewhere forfeits the hit.  The first sighting of a
+    prefix (or an owner invalidated by a width change) falls back to the
+    least-loaded partition, which then becomes the prefix's owner.
+
+    Pure function of its arguments: ``table`` (prefix -> owning partition)
+    and ``load`` (partition -> requests routed) are caller-owned state,
+    mutated in place.  Returns the partition index in ``[0, width)``.
+    """
+    owner = table.get(key)
+    if owner is not None and owner < width:
+        load[owner] = load.get(owner, 0) + 1
+        return owner
+    choice = min(range(width), key=lambda p: load.get(p, 0))
+    table[key] = choice
+    load[choice] = load.get(choice, 0) + 1
+    return choice
+
+
 class AdaptiveBatcher:
     """Metrics-driven ``emit_batch`` controller (replaces the static knob).
 
@@ -917,21 +940,40 @@ class PERuntime(threading.Thread):
         plain pull-partition-push chain; without one it synthesizes the
         request stream itself from its config (``requests`` total at one
         request per ``request_sleep`` seconds) — the serve job's load
-        driver for benchmarks and autoscale tests."""
+        driver for benchmarks and autoscale tests.
+
+        With ``prefix_groups`` configured, every request carries a prompt-
+        prefix id (``i % prefix_groups``) and is routed with *prefix
+        affinity* (``affinity_route``): repeats of a prefix go to the
+        replica whose paged engine already caches it; fresh prefixes take
+        the least-loaded replica.  Otherwise the seed's round-robin-by-seq
+        partitioning is unchanged."""
         cfg = self.meta["operators"][0].get("config", {})
         if self.meta.get("inputs"):
             return self._run_chain()
         limit = int(cfg.get("requests", 0))  # 0 = unbounded
         sleep = float(cfg.get("request_sleep", 0.001))
         tokens = int(cfg.get("tokens_per_request", 8))
+        prompt_tokens = int(cfg.get("prompt_tokens", 0))
+        groups = int(cfg.get("prefix_groups", 0))
+        affinity: dict = {}  # prefix id -> owning partition
+        routed: dict = {}  # partition -> requests routed (load proxy)
         i = 0
         while not self.stop_event.is_set():
             if self._drain is not None:
                 break
             if limit and i >= limit:
                 break
-            self._emit(0, {"seq": i, "rid": i, "tokens": tokens,
-                           "ts": time.monotonic()}, partition=i)
+            item = {"seq": i, "rid": i, "tokens": tokens,
+                    "ts": time.monotonic()}
+            if prompt_tokens:
+                item["promptTokens"] = prompt_tokens
+            part = i
+            if groups:
+                item["prefix"] = i % groups
+                width = max(1, len(self.out_targets.get(0, ())))
+                part = affinity_route(item["prefix"], width, affinity, routed)
+            self._emit(0, item, partition=part)
             i += 1
             self._maybe_flush()
             self._adapt()
@@ -953,15 +995,92 @@ class PERuntime(threading.Thread):
         (one token per tick — the continuous-batching cost model;
         ``token_sleep`` is the per-tick decode cost, stretched by the
         node's inverse CPU share like any synthetic work).  Finished
-        requests emit a response tuple downstream."""
+        requests emit a response tuple downstream.
+
+        With ``kv_blocks`` configured the replica runs the *paged* cost
+        model instead of bare slots: admission charges the request's block
+        footprint against the pool (mirroring ``PagedServeEngine``'s
+        banker's admission), prompts prefill in ``prefill_chunk``-token
+        ticks, and prompt prefixes it has prefilled before are served from
+        a modeled prefix cache (no prefill, one divergence block).  The
+        paged signals — ``blocksFree`` / ``blocksCached`` /
+        ``prefixHitRate`` / ``prefillBacklog`` — ride the same load
+        samples, so the metrics plane and the PID autoscaler can consume
+        them exactly like occupancy."""
         op = self.meta["operators"][0]
         cfg = op.get("config", {})
         slots = max(1, int(cfg.get("slots", 4)))
         token_sleep = float(cfg.get("token_sleep", 0.001))
         default_tokens = int(cfg.get("tokens_per_request", 8))
-        active: list = []  # [request item, remaining tokens]
+        kv_blocks = int(cfg.get("kv_blocks", 0))  # 0 = seed slot model
+        block_size = max(1, int(cfg.get("block_size", 16)))
+        prefill_chunk = max(1, int(cfg.get("prefill_chunk", 8)))
+
+        def bft(n: int) -> int:  # blocks for tokens (ceil)
+            return -(-n // block_size) if n > 0 else 0
+
+        seen_prefixes: set = set()
+        cached_blocks = 0
+        held_blocks = 0
+        admissions = 0
+        prefix_hits = 0
+        pending: list = []  # pulled but blocked on pool space
+        # entry: [item, decode tokens left, prefill tokens left, blocks held]
+        active: list = []
         ticks = 0
         busy_ticks = 0
+
+        def admit(item) -> bool:
+            nonlocal held_blocks, cached_blocks, admissions, prefix_hits
+            tokens = int(item.get("tokens", default_tokens))
+            prompt = int(item.get("promptTokens", 0))
+            if not kv_blocks:
+                active.append([item, tokens, 0, 0])
+                return True
+            pfx = item.get("prefix")
+            hit = pfx is not None and pfx in seen_prefixes
+            # a cache hit skips the prompt's blocks and prefill entirely,
+            # paying one divergence (copy-on-write) block instead
+            need = bft((0 if hit else prompt) + tokens) + (1 if hit else 0)
+            free_now = kv_blocks - held_blocks - cached_blocks
+            if need > free_now:
+                evict = min(need - free_now, cached_blocks)
+                cached_blocks -= evict  # LRU eviction, modeled in bulk
+                free_now += evict
+            if need > free_now:
+                return False  # memory-aware admission: hold in pending
+            held_blocks += need
+            admissions += 1
+            prefix_hits += 1 if hit else 0
+            active.append([item, tokens, 0 if hit else prompt, need])
+            return True
+
+        def finish(entry) -> None:
+            nonlocal held_blocks, cached_blocks
+            held_blocks -= entry[3]
+            item = dict(entry[0])
+            item["hops"] = item.get("hops", 0) + 1
+            self._emit(0, item, partition=item.get("seq"))
+
+        def tick_entries(entries) -> list:
+            nonlocal cached_blocks
+            done = []
+            for entry in entries:
+                if entry[2] > 0:  # chunked prefill phase
+                    entry[2] -= min(prefill_chunk, entry[2])
+                    if entry[2] == 0 and kv_blocks:
+                        pfx = entry[0].get("prefix")
+                        if pfx is not None and pfx not in seen_prefixes:
+                            # commit the prefilled prompt to the cache
+                            seen_prefixes.add(pfx)
+                            cached_blocks += bft(
+                                int(entry[0].get("promptTokens", 0)))
+                    continue
+                entry[1] -= 1
+                if entry[1] <= 0:
+                    done.append(entry)
+            return done
+
         while not self.stop_event.is_set():
             if self._drain_done():
                 break
@@ -969,49 +1088,53 @@ class PERuntime(threading.Thread):
             if q is None:
                 time.sleep(0.01)
                 continue
-            free = slots - len(active)
+            free = slots - len(active) - len(pending)
             if free > 0:
                 items = q.get_many(free, timeout=self._pull_timeout(
                     idle=0.02 if active else 0.1))
                 if items:
                     self.counts["in"] += len(items)
-                    for item in items:
-                        active.append([item, int(item.get("tokens",
-                                                          default_tokens))])
+                    pending.extend(items)
+            while pending and len(active) < slots and admit(pending[0]):
+                pending.pop(0)
             if active:
                 ticks += 1
                 busy_ticks += len(active)
                 if token_sleep:
                     time.sleep(token_sleep / max(self.cpu_share(), 0.05))
-                done = []
-                for entry in active:
-                    entry[1] -= 1
-                    if entry[1] <= 0:
-                        done.append(entry)
-                for entry in done:
+                for entry in tick_entries(active):
                     active.remove(entry)
-                    item = dict(entry[0])
-                    item["hops"] = item.get("hops", 0) + 1
-                    self._emit(0, item, partition=item.get("seq"))
+                    finish(entry)
             occupancy = len(active) / slots
-            self._report_load({
+            sample = {
                 "occupancy": occupancy, "slotsBusy": len(active),
                 "numSlots": slots,
                 "meanOccupancy": busy_ticks / (ticks * slots) if ticks else 0.0,
-            })
+            }
+            if kv_blocks:
+                sample.update({
+                    "blocksTotal": kv_blocks,
+                    "blocksFree": kv_blocks - held_blocks - cached_blocks,
+                    "blocksCached": cached_blocks,
+                    "prefixHitRate": (prefix_hits / admissions
+                                      if admissions else 0.0),
+                    "prefillBacklog": sum(e[2] for e in active) + sum(
+                        int(it.get("promptTokens", 0)) for it in pending),
+                })
+            self._report_load(sample)
             self._maybe_flush()
             self._adapt()
         # finish the admitted requests before exiting (the slot-level
         # analogue of _run_chain completing its in-hand batch): a stop or
         # drain costs at most tokens x token_sleep extra, never a request
-        while active and not self.crashed:
-            for entry in list(active):
-                entry[1] -= 1
-                if entry[1] <= 0:
-                    active.remove(entry)
-                    item = dict(entry[0])
-                    item["hops"] = item.get("hops", 0) + 1
-                    self._emit(0, item, partition=item.get("seq"))
+        while (active or pending) and not self.crashed:
+            while pending and len(active) < slots and admit(pending[0]):
+                pending.pop(0)
+            if not active:
+                break  # pool wedged with nothing running: drop pendings
+            for entry in tick_entries(active):
+                active.remove(entry)
+                finish(entry)
             if token_sleep:
                 time.sleep(token_sleep)
         self._flush_all()

@@ -1,3 +1,20 @@
-from .engine import Request, ServeEngine, make_decode_step, make_prefill_step
+from .engine import (
+    PagedServeEngine,
+    Request,
+    ServeEngine,
+    make_decode_step,
+    make_prefill_step,
+)
+from .paging import BlockAllocator, OutOfBlocks, PrefixCache, SequenceBlocks
 
-__all__ = ["Request", "ServeEngine", "make_decode_step", "make_prefill_step"]
+__all__ = [
+    "BlockAllocator",
+    "OutOfBlocks",
+    "PagedServeEngine",
+    "PrefixCache",
+    "Request",
+    "SequenceBlocks",
+    "ServeEngine",
+    "make_decode_step",
+    "make_prefill_step",
+]

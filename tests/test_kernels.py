@@ -5,7 +5,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import decode_attention, flash_attention, mlstm_chunk, ref, rglru_scan, rmsnorm
+from repro.kernels import (
+    decode_attention,
+    flash_attention,
+    mlstm_chunk,
+    paged_decode_attention,
+    ref,
+    rglru_scan,
+    rmsnorm,
+)
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -59,6 +67,72 @@ def test_decode_attention_sweep(B, H, KV, D, Smax, dtype):
     want = ref.decode_attention_ref(q, kc, vc, lengths)
     np.testing.assert_allclose(out.astype(np.float32), want.astype(np.float32),
                                atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("B,H,KV,D,Smax,block_k", [
+    (2, 4, 2, 64, 384, 256),   # Smax % block_k != 0
+    (1, 4, 4, 64, 100, 128),   # Smax < block_k after clamping (100 % 100 == 0
+                               # never hits; 100 stays unpadded)
+    (2, 8, 2, 64, 260, 128),   # remainder of 4
+])
+def test_decode_attention_unaligned_cache(B, H, KV, D, Smax, block_k):
+    """Regression: cache lengths that aren't block_k multiples must pad,
+    not assert (the serve engine sizes caches by prompt, not by kernel)."""
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = rand(ks[0], (B, H, D), jnp.float32)
+    kc = rand(ks[1], (B, Smax, KV, D), jnp.float32)
+    vc = rand(ks[2], (B, Smax, KV, D), jnp.float32)
+    lengths = jnp.asarray([Smax - 7 * i for i in range(B)], jnp.int32)
+    out = decode_attention(q, kc, vc, lengths, block_k=block_k, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,KV,D,bs,T", [
+    (2, 8, 2, 64, 16, 8),   # GQA
+    (3, 4, 1, 128, 32, 4),  # MQA
+    (1, 4, 4, 64, 8, 16),   # MHA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_parity(B, H, KV, D, bs, T, dtype):
+    """Paged kernel vs gather-then-dense oracle, with shuffled non-identity
+    block tables and ragged lengths (some rows pointing at scratch)."""
+    num_blocks = B * T + 1  # + scratch block 0
+    ks = jax.random.split(jax.random.key(hash((B, H, KV, D, bs)) % 2**31), 4)
+    q = rand(ks[0], (B, H, D), dtype)
+    k_pool = rand(ks[1], (num_blocks, bs, KV, D), dtype)
+    v_pool = rand(ks[2], (num_blocks, bs, KV, D), dtype)
+    perm = jax.random.permutation(ks[3], num_blocks - 1) + 1
+    tables = perm.reshape(B, T).astype(jnp.int32)
+    lengths = jnp.asarray([max(1, (T * bs) // (i + 1) - 3) for i in range(B)],
+                          jnp.int32)
+    # unused trailing table entries point at scratch, as the engine leaves them
+    used = -(-lengths // bs)  # ceil-div: blocks actually referenced
+    tables = jnp.where(jnp.arange(T)[None, :] < used[:, None], tables, 0)
+    out = paged_decode_attention(q, k_pool, v_pool, tables, lengths,
+                                 interpret=True)
+    want = ref.paged_decode_attention_ref(q, k_pool, v_pool, tables, lengths)
+    np.testing.assert_allclose(out.astype(np.float32), want.astype(np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_matches_dense_same_tokens():
+    """The same logical cache gives identical attention whether stored
+    contiguously (dense kernel) or scattered across pool blocks (paged)."""
+    B, H, KV, D, bs, T = 2, 4, 2, 64, 16, 4
+    num_blocks = B * T + 1
+    ks = jax.random.split(jax.random.key(12), 4)
+    q = rand(ks[0], (B, H, D), jnp.float32)
+    k_pool = rand(ks[1], (num_blocks, bs, KV, D), jnp.float32)
+    v_pool = rand(ks[2], (num_blocks, bs, KV, D), jnp.float32)
+    tables = (jnp.arange(B * T, dtype=jnp.int32).reshape(B, T) + 1)
+    lengths = jnp.asarray([T * bs, T * bs - 5], jnp.int32)
+    kc = k_pool[tables].reshape(B, T * bs, KV, D)
+    vc = v_pool[tables].reshape(B, T * bs, KV, D)
+    dense = decode_attention(q, kc, vc, lengths, block_k=bs, interpret=True)
+    paged = paged_decode_attention(q, k_pool, v_pool, tables, lengths,
+                                   interpret=True)
+    np.testing.assert_allclose(paged, dense, atol=2e-5, rtol=2e-5)
 
 
 @pytest.mark.parametrize("B,S,C,bt", [(2, 128, 128, 16), (4, 64, 256, 8),

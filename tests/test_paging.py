@@ -1,0 +1,211 @@
+"""Property tests for the paged KV-cache control plane (serve/paging.py).
+
+Randomized op sequences against the allocator invariants (no double-use,
+no leak, free-list conservation), plus directed tests for the sequence
+block lists and the block-granular prefix cache.
+"""
+
+import random
+
+import pytest
+
+from repro.serve.paging import (
+    BlockAllocator,
+    OutOfBlocks,
+    PrefixCache,
+    SequenceBlocks,
+)
+
+
+# ---------------------------------------------------------------- allocator
+
+
+def test_allocator_basic_invariants():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    assert a.capacity == 7  # block 0 reserved as scratch
+    blocks = [a.alloc() for _ in range(7)]
+    assert BlockAllocator.SCRATCH not in blocks
+    assert len(set(blocks)) == 7  # no double-use
+    with pytest.raises(OutOfBlocks):
+        a.alloc()
+    for b in blocks:
+        a.decref(b)
+    assert a.blocks_free == a.capacity  # no leak
+    a.check()
+
+
+def test_allocator_random_property(seed_runs=20):
+    """Random alloc/incref/decref/cow traffic preserves conservation."""
+    for seed in range(seed_runs):
+        rng = random.Random(seed)
+        a = BlockAllocator(num_blocks=rng.randint(2, 24), block_size=4)
+        held = []  # one entry per reference we own
+        for _ in range(200):
+            op = rng.random()
+            if op < 0.4:
+                try:
+                    held.append(a.alloc())
+                except OutOfBlocks:
+                    assert a.blocks_free == 0
+            elif op < 0.6 and held:
+                b = rng.choice(held)
+                a.incref(b)
+                held.append(b)
+            elif op < 0.85 and held:
+                a.decref(held.pop(rng.randrange(len(held))))
+            elif held:
+                b = held.pop(rng.randrange(len(held)))
+                try:
+                    new, src = a.cow(b)
+                except OutOfBlocks:
+                    held.append(b)
+                    continue
+                if src is None:
+                    assert new == b  # exclusive: write in place
+                else:
+                    assert src == b and new != b
+                    assert a.ref(src) >= 1  # other owners keep it alive
+                held.append(new)
+            a.check()
+        for b in held:
+            a.decref(b)
+        a.check()
+        assert a.blocks_free == a.capacity  # every reference returned
+
+
+def test_cow_shared_vs_exclusive():
+    a = BlockAllocator(num_blocks=4, block_size=2)
+    b = a.alloc()
+    assert a.cow(b) == (b, None)  # refcount 1: in-place
+    a.incref(b)
+    new, src = a.cow(b)  # refcount 2: diverge
+    assert src == b and new != b
+    assert a.ref(b) == 1 and a.ref(new) == 1
+    a.decref(b)
+    a.decref(new)
+    a.check()
+
+
+# ----------------------------------------------------------- sequence blocks
+
+
+def test_sequence_capacity_is_all_or_nothing():
+    a = BlockAllocator(num_blocks=4, block_size=2)  # capacity 3
+    s = SequenceBlocks(a)
+    s.ensure_capacity(4)  # 2 blocks
+    s.length = 4
+    free_before = a.blocks_free
+    with pytest.raises(OutOfBlocks):
+        s.ensure_capacity(4)  # would need 2 more, only 1 free
+    assert a.blocks_free == free_before  # no partial allocation
+    s.free()
+    assert a.blocks_free == a.capacity
+    a.check()
+
+
+def test_sequence_writable_triggers_cow_on_shared_tail():
+    a = BlockAllocator(num_blocks=6, block_size=4)
+    donor = SequenceBlocks(a)
+    donor.ensure_capacity(6)  # blocks [x, y]; tail block half full
+    donor.length = 6
+    tail = donor.blocks[1]
+    a.incref(tail)  # simulate a cache/another request sharing the tail
+    adopter = SequenceBlocks(a)
+    adopter.adopt([tail], 2)
+    dst, src = adopter.ensure_writable()
+    assert src == tail and dst != tail  # CoW: copy before appending
+    assert adopter.blocks == [dst]
+    assert donor.blocks[1] == tail  # donor untouched
+    dst2, src2 = adopter.ensure_writable()
+    assert (dst2, src2) == (dst, None)  # now exclusive
+    donor.free()
+    adopter.free()
+    a.check()
+    assert a.blocks_free == a.capacity
+
+
+# -------------------------------------------------------------- prefix cache
+
+
+def _committed_seq(a, cache, tokens):
+    """Prefill-and-commit helper: allocate blocks for tokens, insert."""
+    s = SequenceBlocks(a)
+    s.ensure_capacity(len(tokens))
+    s.length = len(tokens)
+    cache.insert(tokens, s.blocks, len(tokens))
+    return s
+
+
+def test_prefix_cache_match_and_refcounts():
+    a = BlockAllocator(num_blocks=16, block_size=2)
+    cache = PrefixCache(a)
+    tokens = [1, 2, 3, 4, 5, 6]
+    s = _committed_seq(a, cache, tokens)
+    assert cache.blocks_cached == 3
+    # identical prompt: matches at most len-1 tokens -> 2 full blocks
+    blocks, n, tail_shared = cache.match(list(tokens))
+    assert n == 4 and blocks == s.blocks[:2] and not tail_shared
+    for b in blocks:  # match increfs on behalf of the adopter
+        assert a.ref(b) == 3  # seq + cache + adopter
+        a.decref(b)
+    # diverging prompt shares only the common blocks
+    blocks, n, _ = cache.match([1, 2, 9, 9, 9])
+    assert n == 2 and blocks == s.blocks[:1]
+    a.decref(blocks[0])
+    # freeing the committer leaves the cache's copies alive
+    s.free()
+    blocks, n, _ = cache.match(list(tokens))
+    assert n == 4
+    for b in blocks:
+        a.decref(b)
+    a.check()
+
+
+def test_prefix_cache_partial_tail_adoption():
+    a = BlockAllocator(num_blocks=16, block_size=4)
+    cache = PrefixCache(a)
+    s = _committed_seq(a, cache, [1, 2, 3, 4, 5, 6])  # 1 full + tail(2)
+    blocks, n, tail_shared = cache.match([1, 2, 3, 4, 5, 6, 7, 8])
+    assert n == 6 and tail_shared and blocks == s.blocks
+    adopter = SequenceBlocks(a)
+    adopter.adopt(blocks, n)
+    dst, src = adopter.ensure_writable()
+    assert src == blocks[-1] and dst != src  # shared tail must CoW
+    s.free()
+    adopter.free()
+    cache.evict(10)
+    a.check()
+    assert a.blocks_free == a.capacity
+
+
+def test_prefix_cache_lru_eviction_skips_referenced():
+    a = BlockAllocator(num_blocks=8, block_size=2)
+    cache = PrefixCache(a)
+    s1 = _committed_seq(a, cache, [1, 2, 3, 4])
+    s2 = _committed_seq(a, cache, [5, 6])
+    s1.free()
+    s2.free()
+    # both cached chains are now exclusively cache-owned; s1 is older
+    blocks, n, _ = cache.match([1, 2, 3, 4, 9])  # touch s1's chain (MRU)
+    for b in blocks:
+        a.decref(b)
+    assert cache.evict(1) == 1  # evicts s2's leaf (LRU)
+    assert cache.match([5, 6, 7])[1] == 0
+    blocks, n, _ = cache.match([1, 2, 3, 4, 9])
+    assert n == 4  # s1 chain survives
+    for b in blocks:
+        a.decref(b)
+    cache.evict(10)
+    a.check()
+    assert a.blocks_free == a.capacity
+
+
+def test_prefix_cache_hit_rate_counters():
+    a = BlockAllocator(num_blocks=8, block_size=2)
+    cache = PrefixCache(a)
+    _committed_seq(a, cache, [1, 2, 3, 4])
+    assert cache.hit_rate == 0.0
+    cache.match([1, 2, 9])
+    cache.match([7, 7, 7])
+    assert cache.lookups == 2 and cache.hits == 1
+    assert cache.hit_rate == 0.5

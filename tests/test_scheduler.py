@@ -540,3 +540,49 @@ def test_serve_job_reports_occupancy_and_pid_scales_replicas():
         assert p.wait_full_health("srv", 60)
     finally:
         p.shutdown()
+
+
+def test_affinity_route_prefers_owner_then_least_loaded():
+    """Prefix-affinity routing: repeats follow the prefix's owner; unseen
+    prefixes take the least-loaded partition; owners invalidated by a
+    width change are reassigned."""
+    from repro.platform.runtime import affinity_route
+
+    table, load = {}, {}
+    assert affinity_route("a", 2, table, load) == 0  # first: least loaded
+    assert affinity_route("b", 2, table, load) == 1  # spreads fresh prefixes
+    for _ in range(5):
+        assert affinity_route("a", 2, table, load) == 0  # sticky
+    assert load == {0: 6, 1: 1}
+    assert affinity_route("c", 2, table, load) == 1  # least-occupancy fallback
+    # shrink below the owner's index: "b"/"c" must be re-homed in-range
+    assert affinity_route("b", 1, table, load) == 0
+    assert table["b"] == 0
+
+
+def test_paged_serve_signals_roll_up_to_region_metrics():
+    """Paged serving end to end: the router stamps prefix ids and routes
+    with affinity, server replicas run the paged-pool cost model, and the
+    metrics plane rolls blocksFree/blocksCached/prefixHitRate/
+    prefillBacklog up per region for the autoscaler to consume."""
+    p = Platform(num_nodes=2)
+    try:
+        p.submit("psrv", {"app": {
+            "type": "serve", "replicas": 1,
+            "requests": 0, "request_sleep": 0.002,
+            "slots": 4, "tokens_per_request": 8, "token_sleep": 0.002,
+            # paged cost model: 64-block pool, prompts of 32 tokens drawn
+            # from 2 prefix groups -> every group repeats, so the modeled
+            # prefix cache must start hitting almost immediately
+            "kv_blocks": 64, "block_size": 16, "prompt_tokens": 32,
+            "prefill_chunk": 8, "prefix_groups": 2}})
+        assert p.wait_full_health("psrv", 60)
+
+        def rolled():
+            agg = p.job_metrics("psrv").get("regions", {}).get("replicas", {})
+            return (agg.get("blocksCached", 0) > 0
+                    and agg.get("prefixHitRate", 0.0) > 0.0
+                    and 0 < agg.get("blocksFree", 0) < 64)
+        assert wait_for(rolled, 60), f"no paged rollup: {p.job_metrics('psrv')}"
+    finally:
+        p.shutdown()
